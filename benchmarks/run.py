@@ -1,0 +1,127 @@
+"""Benchmark harness — one function per paper table/figure + kernel
+micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_envelope   the paper's Table 1: calibrated envelope vs actuals
+  indexing_pipeline our own pipeline's measured throughput + alpha
+  pack_kernel       lane-blocked PFor pack/unpack micro-bench
+  bm25_query        block-max BM25 serving latency + pruning rate
+  invert_kernel     device inversion sort throughput
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6, out
+
+
+def table1_envelope():
+    from repro.core.envelope import calibrate
+    media, p, table = calibrate()
+    errs = [abs(v["err"]) for v in table.values()]
+    print(f"table1_envelope.alpha,{p.alpha:.3f},merge-amplification")
+    print(f"table1_envelope.c_idx,{p.c_idx:.0f},core-s-per-GB")
+    print(f"table1_envelope.mean_abs_err,{np.mean(errs)*100:.1f},percent")
+    print(f"table1_envelope.max_abs_err,{np.max(errs)*100:.1f},percent")
+    for (s, t, col), v in sorted(table.items()):
+        print(f"table1.{s}->{t}.{col},{v['pred']:.0f},"
+              f"actual={v['actual']}s err={v['err']*100:+.1f}% "
+              f"bound={v['bound']}")
+
+
+def indexing_pipeline():
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+
+    cfg = get_arch("lucene-envelope").smoke
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg, source="ceph", target="ssd")
+    t0 = time.time()
+    n_batches, per = 8, 128
+    for i in range(n_batches):
+        ix.index_batch(corpus.batch(i, per))
+    ix.finalize()
+    wall = time.time() - t0
+    rep = ix.envelope_report()
+    docs = n_batches * per
+    print(f"indexing.host_docs_per_s,{docs/wall:.0f},wall-clock(1-core)")
+    print(f"indexing.alpha_measured,{rep['alpha_measured']:.2f},"
+          f"vs-calibrated-2.74")
+    print(f"indexing.modeled_gb_per_min,{rep['gb_per_min_modeled']:.2f},"
+          f"bound={rep['bound']}")
+
+
+def pack_kernel():
+    from repro.kernels.postings_pack import ref
+    rng = np.random.default_rng(0)
+    nb = 4096
+    d = jnp.asarray(rng.integers(0, 10000, (nb, 128)).astype(np.uint32))
+    pack = jax.jit(ref.pack_ref)
+    us, (p, bw) = _time(pack, d)
+    n_ints = nb * 128
+    print(f"pack_kernel.pack,{us:.0f},{n_ints/us:.0f}Mints/s "
+          f"ratio={float(ref.packed_bytes(bw))/(n_ints*4):.3f}")
+    unpack = jax.jit(ref.unpack_ref)
+    us2, u = _time(unpack, p, bw)
+    print(f"pack_kernel.unpack,{us2:.0f},{n_ints/us2:.0f}Mints/s")
+    assert (np.asarray(u) == np.asarray(d)).all()
+
+
+def bm25_query():
+    from repro.core.invert import invert_shard
+    from repro.core.query import (build_block_index, bm25_exhaustive,
+                                  bm25_topk)
+    from repro.core.segments import segment_from_run
+    rng = np.random.default_rng(1)
+    D, L, V = 2048, 64, 400
+    tokens = (rng.zipf(1.25, size=(D, L)) % V + 1).astype(np.int32)
+    run = invert_shard(jnp.asarray(tokens), 0)
+    seg = segment_from_run({k: np.asarray(getattr(run, k))
+                            for k in run._fields},
+                           np.arange(D), np.asarray(run.doc_len))
+    idx = build_block_index(seg)
+    q = jnp.asarray(rng.choice(np.unique(tokens), 4, replace=False),
+                    jnp.int32)
+    f_ex = jax.jit(lambda qq: bm25_exhaustive(idx, qq, 10)[0])
+    f_pr = jax.jit(lambda qq: bm25_topk(idx, qq, 10)[0])
+    us_ex, _ = _time(f_ex, q)
+    us_pr, _ = _time(f_pr, q)
+    _, _, stats = bm25_topk(idx, q, 10)
+    frac = float(stats["blocks_scored"]) / max(float(stats["blocks_total"]),
+                                               1.0)
+    print(f"bm25.exhaustive,{us_ex:.0f},docs={D}")
+    print(f"bm25.blockmax,{us_pr:.0f},scored_frac={frac:.2f}")
+
+
+def invert_kernel():
+    from repro.core.invert import invert_shard
+    rng = np.random.default_rng(2)
+    D, L = 512, 512
+    tokens = jnp.asarray(rng.integers(0, 1 << 18, (D, L)).astype(np.int32))
+    f = jax.jit(lambda t: invert_shard(t, 0))
+    us, _ = _time(f, tokens)
+    print(f"invert.sort_invert,{us:.0f},{D*L/us:.1f}Mtok/s(1-core-cpu)")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_envelope()
+    indexing_pipeline()
+    pack_kernel()
+    bm25_query()
+    invert_kernel()
+
+
+if __name__ == "__main__":
+    main()

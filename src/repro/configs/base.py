@@ -1,0 +1,231 @@
+"""Config dataclasses for every architecture family in the framework.
+
+Each assigned architecture gets a module ``repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact published full-size config) and ``SMOKE`` (a reduced
+same-family config for CPU smoke tests). ``registry.py`` maps ``--arch`` ids
+to these modules and to the per-family shape sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (named) input-shape cell for an architecture."""
+
+    name: str
+    kind: str  # train | prefill | decode | long_decode | graph | recsys
+    # LM shapes
+    seq_len: int = 0
+    global_batch: int = 0
+    # graph shapes
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: tuple[int, ...] = ()
+    graph_batch: int = 0  # batched-small-graphs
+    # recsys shapes
+    batch: int = 0
+    n_candidates: int = 0
+
+    def describe(self) -> str:
+        core = {k: v for k, v in dataclasses.asdict(self).items() if v}
+        return f"{self.name}({core})"
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """Decoder-only LM backbone (dense or MoE), GQA + RoPE.
+
+    Feature flags cover the assigned archs: qk_norm (qwen3), logit softcaps +
+    local/global alternation (gemma2), MoE top-k routing (moonshot, llama4),
+    early-fusion stub (llama4).
+    """
+
+    name: str
+    family: str = "lm"
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    # "pjit": GSPMD-auto dispatch (baseline); "shard_map": per-device local
+    # dispatch to local experts + output psum (EXPERIMENTS.md §Perf it. 4)
+    moe_impl: str = "pjit"
+    # --- attention flavour ---
+    qk_norm: bool = False
+    attn_softcap: float = 0.0  # 0 disables
+    final_softcap: float = 0.0
+    sliding_window: int = 0  # 0 = full attention
+    layer_pattern: str = "global"  # "global" | "local_global" (gemma2)
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0
+    sandwich_norm: bool = False  # gemma2 post-norms
+    tie_embeddings: bool = True
+    # --- early-fusion multimodal stub (llama4) ---
+    fused_patches: int = 0  # number of precomputed patch embeddings prepended
+    patch_dim: int = 0
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    # --- training ---
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    remat: bool = True
+    scan_layers: bool = True  # False: python-unrolled (exact HLO cost counts)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline bookkeeping)."""
+        d, l = self.d_model, self.n_layers
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.moe:
+            ff = 3 * d * self.d_ff_expert * (self.n_experts + self.n_shared_experts)
+            ff += d * self.n_experts  # router
+        else:
+            ff = 3 * d * self.d_ff
+        norms = 2 * d * (2 if self.sandwich_norm else 1)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ff + norms) + emb + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared)."""
+        if not self.moe:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ff = 3 * d * self.d_ff_expert * (self.top_k + self.n_shared_experts)
+        ff += d * self.n_experts
+        norms = 2 * d * (2 if self.sandwich_norm else 1)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ff + norms) + emb + d
+
+
+@dataclass(frozen=True)
+class NequIPConfig:
+    """E(3)-equivariant interatomic potential (NequIP, arXiv:2101.03164)."""
+
+    name: str
+    family: str = "gnn"
+    n_layers: int = 5
+    d_hidden: int = 32  # multiplicity per irrep channel
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 64
+    d_feat_in: int = 0  # optional abstract node features (citation graphs)
+    n_classes: int = 64  # node-classification head (citation/products shapes)
+    radial_mlp: tuple[int, ...] = (64, 64)
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"  # equivariance is precision-sensitive
+
+    def irreps_dim(self) -> int:
+        return self.d_hidden * sum(2 * l + 1 for l in range(self.l_max + 1))
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    """CTR / retrieval models over huge sparse embedding tables."""
+
+    name: str
+    family: str = "recsys"
+    model: str = "deepfm"  # deepfm | xdeepfm | dien | two_tower
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1_048_576  # hashed vocabulary per categorical field
+    n_dense: int = 13
+    mlp: tuple[int, ...] = (400, 400, 400)
+    # xDeepFM
+    cin_layers: tuple[int, ...] = ()
+    # DIEN
+    seq_len: int = 0
+    gru_dim: int = 0
+    # two-tower
+    tower_mlp: tuple[int, ...] = ()
+    item_vocab: int = 0
+    user_vocab: int = 0
+    multi_hot_max: int = 8  # bag size for multi-hot fields (EmbeddingBag)
+    scan_gru: bool = True  # False: python-unrolled (exact HLO cost counts)
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def table_rows(self) -> int:
+        if self.model == "two_tower":
+            return self.item_vocab + self.user_vocab
+        return self.n_sparse * self.vocab_per_field
+
+
+@dataclass(frozen=True)
+class EnvelopeConfig:
+    """The paper's own 'architecture': the Lucene-style indexing pipeline."""
+
+    name: str = "lucene_envelope"
+    family: str = "index"
+    docs_per_shard: int = 4096
+    doc_len: int = 1024  # tokens per document buffer
+    vocab_bits: int = 22  # hashed term space = 4M terms
+    postings_block: int = 128  # lane-blocked PFor block size
+    flush_budget_mb: int = 256
+    merge_fanout: int = 10  # tiered-merge fanout (Lucene default)
+    store_positions: bool = True
+    store_doc_vectors: bool = True
+    # "raw": 3x int32 per entry over the wire; "packed2": (local_doc|pos,
+    # term) = 2 words, doc rebased from the source-device row after the
+    # all_to_all (EXPERIMENTS.md §Perf — the paper's compression insight
+    # applied to the shuffle stage)
+    shuffle_payload: str = "raw"
+
+
+ArchConfig = Any  # union of the dataclasses above
+
+
+def lm_shapes() -> list[ShapeSpec]:
+    return [
+        ShapeSpec("train_4k", "train", seq_len=4096, global_batch=256),
+        ShapeSpec("prefill_32k", "prefill", seq_len=32768, global_batch=32),
+        ShapeSpec("decode_32k", "decode", seq_len=32768, global_batch=128),
+        ShapeSpec("long_500k", "long_decode", seq_len=524288, global_batch=1),
+    ]
+
+
+def gnn_shapes() -> list[ShapeSpec]:
+    return [
+        ShapeSpec("full_graph_sm", "graph", n_nodes=2708, n_edges=10556, d_feat=1433),
+        ShapeSpec(
+            "minibatch_lg", "graph", n_nodes=232965, n_edges=114615892,
+            batch_nodes=1024, fanout=(15, 10),
+        ),
+        ShapeSpec("ogb_products", "graph", n_nodes=2449029, n_edges=61859140, d_feat=100),
+        ShapeSpec("molecule", "graph", n_nodes=30, n_edges=64, graph_batch=128),
+    ]
+
+
+def recsys_shapes() -> list[ShapeSpec]:
+    return [
+        ShapeSpec("train_batch", "recsys_train", batch=65536),
+        ShapeSpec("serve_p99", "recsys_serve", batch=512),
+        ShapeSpec("serve_bulk", "recsys_serve", batch=262144),
+        ShapeSpec("retrieval_cand", "recsys_retrieval", batch=1, n_candidates=1_000_000),
+    ]

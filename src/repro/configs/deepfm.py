@@ -1,0 +1,27 @@
+"""deepfm — FM + deep CTR model (arXiv:1703.04247).
+
+n_sparse=39 embed_dim=10 mlp=400-400-400 interaction=fm.
+"""
+from repro.configs.base import RecsysConfig, recsys_shapes
+
+CONFIG = RecsysConfig(
+    name="deepfm",
+    model="deepfm",
+    n_sparse=39,
+    embed_dim=10,
+    vocab_per_field=1_048_576,
+    n_dense=13,
+    mlp=(400, 400, 400),
+)
+
+SMOKE = RecsysConfig(
+    name="deepfm-smoke",
+    model="deepfm",
+    n_sparse=8,
+    embed_dim=10,
+    vocab_per_field=1024,
+    n_dense=4,
+    mlp=(32, 32),
+)
+
+SHAPES = recsys_shapes()

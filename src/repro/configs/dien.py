@@ -1,0 +1,31 @@
+"""dien — Deep Interest Evolution Network (arXiv:1809.03672).
+
+embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80 interaction=augru.
+"""
+from repro.configs.base import RecsysConfig, recsys_shapes
+
+CONFIG = RecsysConfig(
+    name="dien",
+    model="dien",
+    n_sparse=6,  # user/item/category profile fields beside the behaviour seq
+    embed_dim=18,
+    vocab_per_field=1_048_576,
+    n_dense=0,
+    mlp=(200, 80),
+    seq_len=100,
+    gru_dim=108,
+)
+
+SMOKE = RecsysConfig(
+    name="dien-smoke",
+    model="dien",
+    n_sparse=3,
+    embed_dim=18,
+    vocab_per_field=1024,
+    n_dense=0,
+    mlp=(32, 16),
+    seq_len=12,
+    gru_dim=24,
+)
+
+SHAPES = recsys_shapes()

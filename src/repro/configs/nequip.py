@@ -1,0 +1,29 @@
+"""nequip — O(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5, E(3) tensor products.
+"""
+from repro.configs.base import NequIPConfig, gnn_shapes
+
+CONFIG = NequIPConfig(
+    name="nequip",
+    n_layers=5,
+    d_hidden=32,
+    l_max=2,
+    n_rbf=8,
+    cutoff=5.0,
+    n_species=64,
+    radial_mlp=(64, 64),
+)
+
+SMOKE = NequIPConfig(
+    name="nequip-smoke",
+    n_layers=2,
+    d_hidden=4,
+    l_max=2,
+    n_rbf=4,
+    cutoff=5.0,
+    n_species=8,
+    radial_mlp=(16,),
+)
+
+SHAPES = gnn_shapes()

@@ -1,0 +1,84 @@
+"""Architecture registry: ``--arch <id>`` -> (CONFIG, SMOKE, SHAPES)."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Any
+
+from repro.configs.base import ShapeSpec
+
+ARCH_IDS = [
+    # LM-family transformers
+    "moonshot-v1-16b-a3b",
+    "llama4-scout-17b-a16e",
+    "qwen3-32b",
+    "gemma2-9b",
+    "stablelm-12b",
+    # gnn
+    "nequip",
+    # recsys
+    "deepfm",
+    "two-tower-retrieval",
+    "xdeepfm",
+    "dien",
+    # the paper's own pipeline
+    "lucene-envelope",
+]
+
+_MODULES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-32b": "qwen3_32b",
+    "gemma2-9b": "gemma2_9b",
+    "stablelm-12b": "stablelm_12b",
+    "nequip": "nequip",
+    "deepfm": "deepfm",
+    "two-tower-retrieval": "two_tower",
+    "xdeepfm": "xdeepfm",
+    "dien": "dien",
+    "lucene-envelope": "lucene_envelope",
+}
+
+
+@dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    config: Any
+    smoke: Any
+    shapes: list[ShapeSpec]
+
+    @property
+    def family(self) -> str:
+        return self.config.family
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id} has no shape {name!r}; "
+                       f"have {[s.name for s in self.shapes]}")
+
+
+def get_arch(arch_id: str) -> ArchEntry:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return ArchEntry(arch_id, mod.CONFIG, mod.SMOKE, list(mod.SHAPES))
+
+
+def iter_cells(include_skipped: bool = False):
+    """Yield every (arch, shape) dry-run cell.
+
+    ``long_500k`` on pure full-attention LMs is a documented skip
+    (DESIGN.md §5): 524288-token decode requires sub-quadratic attention and
+    none of the assigned LM archs is SSM/hybrid/linear-attention.
+    """
+    for arch_id in ARCH_IDS:
+        if arch_id == "lucene-envelope":
+            continue  # the paper pipeline has its own driver, not a dry-run cell
+        entry = get_arch(arch_id)
+        for shape in entry.shapes:
+            skipped = entry.family == "lm" and shape.kind == "long_decode"
+            if skipped and not include_skipped:
+                continue
+            yield entry, shape, skipped

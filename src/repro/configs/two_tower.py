@@ -1,0 +1,37 @@
+"""two-tower-retrieval — sampled-softmax retrieval (Yi et al., RecSys'19).
+
+embed_dim=256 tower_mlp=1024-512-256 interaction=dot.
+
+This is the architecture the paper's technique applies to directly: the
+inverted-index pipeline (repro.core) is the lexical candidate-generation
+counterpart of the dense dot-product scoring implemented here.
+"""
+from repro.configs.base import RecsysConfig, recsys_shapes
+
+CONFIG = RecsysConfig(
+    name="two-tower-retrieval",
+    model="two_tower",
+    n_sparse=8,  # per-tower categorical feature fields
+    embed_dim=256,
+    vocab_per_field=1_048_576,
+    n_dense=16,
+    mlp=(),
+    tower_mlp=(1024, 512, 256),
+    item_vocab=8_388_608,
+    user_vocab=8_388_608,
+)
+
+SMOKE = RecsysConfig(
+    name="two-tower-smoke",
+    model="two_tower",
+    n_sparse=4,
+    embed_dim=32,
+    vocab_per_field=512,
+    n_dense=4,
+    mlp=(),
+    tower_mlp=(64, 32),
+    item_vocab=2048,
+    user_vocab=2048,
+)
+
+SHAPES = recsys_shapes()

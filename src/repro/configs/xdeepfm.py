@@ -1,0 +1,29 @@
+"""xdeepfm — Compressed Interaction Network CTR model (arXiv:1803.05170).
+
+n_sparse=39 embed_dim=10 cin_layers=200-200-200 mlp=400-400 interaction=cin.
+"""
+from repro.configs.base import RecsysConfig, recsys_shapes
+
+CONFIG = RecsysConfig(
+    name="xdeepfm",
+    model="xdeepfm",
+    n_sparse=39,
+    embed_dim=10,
+    vocab_per_field=1_048_576,
+    n_dense=13,
+    mlp=(400, 400),
+    cin_layers=(200, 200, 200),
+)
+
+SMOKE = RecsysConfig(
+    name="xdeepfm-smoke",
+    model="xdeepfm",
+    n_sparse=8,
+    embed_dim=10,
+    vocab_per_field=1024,
+    n_dense=4,
+    mlp=(32, 32),
+    cin_layers=(16, 16),
+)
+
+SHAPES = recsys_shapes()

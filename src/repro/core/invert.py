@@ -1,0 +1,143 @@
+"""Per-shard in-memory inversion: SPIMI adapted to TPU (DESIGN.md §2).
+
+Lucene's per-thread hash-based term->postings accumulation has no efficient
+TPU analogue (no device hash tables); the TPU-native equivalent is a
+lexicographic ``lax.sort`` over (term, doc, pos) triples followed by
+vectorized boundary detection. Everything is static-shape: the outputs are
+N-sized arrays with traced validity counts, exactly what a flush ships to
+the host.
+
+Layout produced (all length N = docs x doc_len, entries beyond the traced
+count are zeroed):
+  * position-granular: sorted (term, doc, pos) + boundary flags;
+  * doc-granular postings: term, doc-delta, tf per posting
+    (doc-delta: first posting of a term stores doc_id + 1, subsequent
+    store doc_id - prev_doc_id — always >= 1 for valid postings);
+  * position deltas per posting (first stores pos + 1);
+  * term dictionary: unique terms + CSR offsets into the postings arrays.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+TERM_PAD = jnp.int32(2 ** 31 - 1)  # invalid entries sink to the end of the sort
+
+
+class InvertedRun(NamedTuple):
+    """One in-memory inverted run (pre-flush segment), static shapes."""
+
+    # doc-granular postings (N,)
+    postings_term: jnp.ndarray
+    postings_doc_delta: jnp.ndarray
+    postings_tf: jnp.ndarray
+    # position-granular (N,)
+    pos_delta: jnp.ndarray
+    # term dictionary (N,)
+    terms_unique: jnp.ndarray
+    term_start: jnp.ndarray  # CSR offsets into postings arrays
+    # traced counts
+    n_entries: jnp.ndarray
+    n_postings: jnp.ndarray
+    n_terms: jnp.ndarray
+    # per-doc stats (D,)
+    doc_len: jnp.ndarray
+
+
+def _shift_right(x, fill):
+    return jnp.concatenate([jnp.full((1,), fill, x.dtype), x[:-1]])
+
+
+def invert_shard(tokens: jnp.ndarray, doc_id_base) -> InvertedRun:
+    """tokens: (D, L) int32 term ids, 0 = padding. doc_id_base: scalar."""
+    D, L = tokens.shape
+    valid2d = tokens > 0
+    doc_len = valid2d.sum(axis=1).astype(jnp.int32)
+
+    term = jnp.where(valid2d, tokens, TERM_PAD).reshape(D * L)
+    doc = jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32)[:, None] + doc_id_base,
+                           (D, L)).reshape(D * L)
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :],
+                           (D, L)).reshape(D * L)
+
+    s_term, s_doc, s_pos = lax.sort((term, doc, pos), num_keys=3)
+    return postings_from_sorted(s_term, s_doc, s_pos, doc_len)
+
+
+def postings_from_sorted(s_term, s_doc, s_pos, doc_len) -> InvertedRun:
+    """Boundary detection + postings extraction over sorted entries.
+    Shared by local inversion and the post-shuffle (term-sharded) path."""
+    N = s_term.shape[0]
+    valid = s_term != TERM_PAD
+    new_term = (s_term != _shift_right(s_term, -1)) & valid
+    new_doc = (new_term | (s_doc != _shift_right(s_doc, -1))) & valid
+
+    n_entries = valid.sum().astype(jnp.int32)
+    n_postings = new_doc.sum().astype(jnp.int32)
+    n_terms = new_term.sum().astype(jnp.int32)
+
+    idx = jnp.arange(N, dtype=jnp.int32)
+    posting_rank = jnp.cumsum(new_doc) - 1  # (N,) value at i = posting of entry i
+    term_rank = jnp.cumsum(new_term) - 1
+
+    # -------- doc-granular postings, compacted by scatter at posting_rank
+    tgt = jnp.where(new_doc, posting_rank, N)  # N = trash slot
+    postings_term = jnp.zeros((N + 1,), jnp.int32).at[tgt].set(s_term)[:-1]
+    prev_doc = _shift_right(s_doc, 0)
+    ddelta = jnp.where(new_term, s_doc + 1, s_doc - prev_doc)
+    postings_doc_delta = jnp.zeros((N + 1,), jnp.int32).at[tgt].set(
+        jnp.where(valid, ddelta, 0))[:-1]
+
+    # tf per posting: difference of consecutive posting start indices
+    starts = jnp.full((N + 1,), 0, jnp.int32).at[tgt].set(idx)[:-1]
+    starts = jnp.where(jnp.arange(N) < n_postings, starts, n_entries)
+    next_start = jnp.concatenate([starts[1:], jnp.full((1,), n_entries,
+                                                       jnp.int32)])
+    next_start = jnp.where(jnp.arange(N) + 1 < n_postings, next_start, n_entries)
+    postings_tf = jnp.where(jnp.arange(N) < n_postings, next_start - starts, 0)
+
+    # -------- position deltas (position-granular stream)
+    prev_pos = _shift_right(s_pos, 0)
+    pdelta = jnp.where(new_doc, s_pos + 1, s_pos - prev_pos)
+    pos_delta = jnp.where(valid, pdelta, 0)
+
+    # -------- term dictionary
+    t_tgt = jnp.where(new_term, term_rank, N)
+    terms_unique = jnp.zeros((N + 1,), jnp.int32).at[t_tgt].set(s_term)[:-1]
+    term_start = jnp.zeros((N + 1,), jnp.int32).at[t_tgt].set(posting_rank)[:-1]
+    term_start = jnp.where(jnp.arange(N) < n_terms, term_start, n_postings)
+
+    return InvertedRun(postings_term, postings_doc_delta,
+                       postings_tf.astype(jnp.int32), pos_delta,
+                       terms_unique, term_start,
+                       n_entries, n_postings, n_terms, doc_len)
+
+
+def doc_vectors(tokens: jnp.ndarray):
+    """Parsed document vectors (the paper stores these alongside the index):
+    per-doc sorted (term, tf) pairs. Returns (terms (D,L), tf (D,L),
+    n_uniq (D,)) — rows are per-doc runs, padded with zeros."""
+    D, L = tokens.shape
+    valid = tokens > 0
+    term = jnp.where(valid, tokens, TERM_PAD)
+    s_term = lax.sort(term, dimension=1)
+    newt = (s_term != jnp.concatenate(
+        [jnp.full((D, 1), -1, s_term.dtype), s_term[:, :-1]], axis=1))
+    newt &= s_term != TERM_PAD
+    n_uniq = newt.sum(axis=1).astype(jnp.int32)
+    rank = jnp.cumsum(newt, axis=1) - 1
+    tgt = jnp.where(newt, rank, L)
+    row = jnp.arange(D)[:, None]
+    out_t = jnp.zeros((D, L + 1), jnp.int32).at[row, tgt].set(s_term)[:, :-1]
+    idxs = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (D, L))
+    starts = jnp.zeros((D, L + 1), jnp.int32).at[row, tgt].set(idxs)[:, :-1]
+    n_valid = (s_term != TERM_PAD).sum(axis=1).astype(jnp.int32)
+    in_range = idxs < n_uniq[:, None]
+    starts = jnp.where(in_range, starts, n_valid[:, None])
+    nxt = jnp.concatenate([starts[:, 1:], n_valid[:, None]], axis=1)
+    nxt = jnp.where(idxs + 1 < n_uniq[:, None], nxt, n_valid[:, None])
+    tf = jnp.where(in_range, nxt - starts, 0)
+    return out_t, tf.astype(jnp.int32), n_uniq

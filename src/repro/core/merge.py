@@ -1,0 +1,108 @@
+"""Hierarchical segment merging (host side).
+
+Lucene merges small per-thread segments into geometrically larger ones
+(Lester/Moffat/Zobel geometric partitioning, cited by the paper); every
+merge re-reads and re-writes its inputs, which is exactly the write
+amplification the envelope model charges to the target medium. The tiered
+policy here mirrors Lucene's TieredMergePolicy at ``fanout`` segments per
+tier; ``MergeDriver.bytes_written`` divided by the final segment size IS
+the measured amplification alpha that calibrates the paper's Table 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.segments import Segment
+
+
+def merge_segments(segs: list[Segment]) -> Segment:
+    """k-way merge: exact union of postings. Doc-id spaces of the inputs
+    must be disjoint (per-device doc partitions guarantee this)."""
+    if len(segs) == 1:
+        return segs[0]
+    terms = np.concatenate([np.repeat(s.terms, np.diff(s.term_start))
+                            for s in segs])
+    docs = np.concatenate([s.docs for s in segs])
+    tf = np.concatenate([s.tf for s in segs])
+    # gather positions runs aligned with postings
+    pos_concat = np.concatenate([s.positions for s in segs])
+    run_starts = np.concatenate([
+        s.pos_start[:-1] + off for s, off in
+        zip(segs, np.cumsum([0] + [len(s.positions) for s in segs[:-1]]))])
+    order = np.lexsort((docs, terms))
+    terms, docs, tf = terms[order], docs[order], tf[order]
+    run_starts = run_starts[order]
+    # reorder variable-length position runs with the repeat/arange trick
+    lens = tf
+    total = int(lens.sum())
+    if total:
+        run_off = np.repeat(np.cumsum(lens) - lens, lens)
+        idx = np.repeat(run_starts, lens) + (np.arange(total) - run_off)
+        positions = pos_concat[idx]
+    else:
+        positions = np.zeros(0, np.int64)
+    pos_start = np.concatenate([[0], np.cumsum(lens)])
+    # term dictionary
+    new_term = np.concatenate([[True], terms[1:] != terms[:-1]]) \
+        if len(terms) else np.zeros(0, bool)
+    uterms = terms[new_term]
+    term_start = np.concatenate([np.flatnonzero(new_term), [len(terms)]])
+    doc_ids = np.concatenate([s.doc_ids for s in segs])
+    doc_len = np.concatenate([s.doc_len for s in segs])
+    o = np.argsort(doc_ids)
+    return Segment(terms=uterms, term_start=term_start, docs=docs, tf=tf,
+                   positions=positions, pos_start=pos_start,
+                   doc_ids=doc_ids[o], doc_len=doc_len[o],
+                   generation=max(s.generation for s in segs) + 1)
+
+
+@dataclass
+class MergeDriver:
+    """Tiered merge policy with write-amplification accounting."""
+
+    fanout: int = 10
+    tiers: dict = field(default_factory=dict)
+    bytes_written: int = 0      # every segment write (flush + each merge)
+    bytes_read_merge: int = 0   # merge re-reads
+    n_merges: int = 0
+    flushed_bytes: int = 0
+
+    def add_flush(self, seg: Segment):
+        sz = seg.total_bytes()
+        self.bytes_written += sz
+        self.flushed_bytes += sz
+        self.tiers.setdefault(0, []).append(seg)
+        self._cascade()
+
+    def _cascade(self):
+        tier = 0
+        while len(self.tiers.get(tier, [])) >= self.fanout:
+            batch = self.tiers[tier][:self.fanout]
+            self.tiers[tier] = self.tiers[tier][self.fanout:]
+            self.bytes_read_merge += sum(s.total_bytes() for s in batch)
+            merged = merge_segments(batch)
+            self.bytes_written += merged.total_bytes()
+            self.n_merges += 1
+            self.tiers.setdefault(tier + 1, []).append(merged)
+            tier += 1
+
+    def finalize(self) -> Segment:
+        """Force-merge everything into one segment (the paper's end state)."""
+        remaining = [s for t in sorted(self.tiers) for s in self.tiers[t]]
+        assert remaining, "nothing indexed"
+        while len(remaining) > 1:
+            batch = remaining[:self.fanout]
+            remaining = remaining[self.fanout:]
+            self.bytes_read_merge += sum(s.total_bytes() for s in batch)
+            merged = merge_segments(batch)
+            self.bytes_written += merged.total_bytes()
+            self.n_merges += 1
+            remaining.append(merged)
+        self.tiers = {0: remaining}
+        return remaining[0]
+
+    def amplification(self) -> float:
+        final = sum(s.total_bytes() for t in self.tiers.values() for s in t)
+        return self.bytes_written / max(final, 1)

@@ -1,0 +1,137 @@
+"""Host-side immutable index segments (the flush targets).
+
+A Segment is what one device flushes for its term shard: sorted unique
+terms with CSR postings (absolute doc ids + tf), a position stream CSR'd
+per posting, per-doc lengths, and the byte accounting the envelope model
+charges against the target medium (packed postings + dictionary + parsed
+doc vectors + stored docs — the paper stores all of these, §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+BLOCK = 128
+
+
+def _np_block_bits(stream: np.ndarray) -> int:
+    """Compacted lane-blocked-PFor bit count for a uint32 stream (numpy
+    mirror of kernels/postings_pack accounting: 128-blocks, per-block bw)."""
+    if stream.size == 0:
+        return 0
+    n = stream.size
+    nb = -(-n // BLOCK)
+    padded = np.zeros(nb * BLOCK, np.uint32)
+    padded[:n] = stream.astype(np.uint32)
+    mx = padded.reshape(nb, BLOCK).max(axis=1)
+    bw = np.where(mx > 0, np.floor(np.log2(np.maximum(mx, 1))).astype(np.int64) + 1, 0)
+    return int((bw * BLOCK).sum() + nb * 8)  # + per-block 1-byte header
+
+
+@dataclass
+class Segment:
+    terms: np.ndarray          # (T,) sorted unique term ids
+    term_start: np.ndarray     # (T+1,) CSR into postings
+    docs: np.ndarray           # (P,) absolute doc ids, sorted within term
+    tf: np.ndarray             # (P,)
+    positions: np.ndarray      # (PP,) absolute positions
+    pos_start: np.ndarray      # (P+1,) CSR into positions
+    doc_ids: np.ndarray        # (D,) absolute doc ids covered
+    doc_len: np.ndarray        # (D,)
+    generation: int = 0        # merge tier
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.terms)
+
+    @property
+    def n_postings(self) -> int:
+        return len(self.docs)
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.doc_ids)
+
+    def index_bytes(self) -> dict:
+        """Byte accounting of what writing this segment costs (packed)."""
+        # doc deltas per term (re-deltaed), tf, position deltas
+        ddelta = np.diff(self.docs, prepend=0).astype(np.int64)
+        firsts = self.term_start[:-1]
+        valid_first = firsts[firsts < len(self.docs)]
+        ddelta[valid_first] = self.docs[valid_first] + 1
+        pdelta = np.diff(self.positions, prepend=0).astype(np.int64)
+        pf = self.pos_start[:-1]
+        pf = pf[pf < len(self.positions)]
+        pdelta[pf] = self.positions[pf] + 1
+        postings_bits = _np_block_bits(np.maximum(ddelta, 0)) \
+            + _np_block_bits(self.tf) + _np_block_bits(np.maximum(pdelta, 0))
+        dict_bytes = self.n_terms * 12  # term id + offset + df
+        # parsed doc vectors: (term, tf) pairs per doc ~= postings again
+        docvec_bits = _np_block_bits(self.tf) + self.n_postings * 24
+        # stored raw docs: ~vbyte of term ids (random-access compression is
+        # less efficient than the raw collection's, as the paper notes)
+        stored_bytes = int(self.doc_len.sum()) * 2
+        return {
+            "postings": postings_bits // 8,
+            "dictionary": dict_bytes,
+            "doc_vectors": docvec_bits // 8,
+            "stored_docs": stored_bytes,
+        }
+
+    def total_bytes(self) -> int:
+        return sum(self.index_bytes().values())
+
+
+def segment_from_run(run_np: dict, doc_ids: np.ndarray,
+                     doc_len: np.ndarray) -> Segment:
+    """Build a Segment from a (numpy-ified) InvertedRun of one device.
+
+    run_np fields are the InvertedRun arrays; counts select valid prefixes.
+    Doc deltas are decoded back to absolute ids (host keeps absolutes;
+    packing happens at write accounting / query-index build time).
+    """
+    n_t = int(run_np["n_terms"])
+    n_p = int(run_np["n_postings"])
+    n_e = int(run_np["n_entries"])
+    terms = run_np["terms_unique"][:n_t].astype(np.int64)
+    term_start = np.concatenate([run_np["term_start"][:n_t],
+                                 [n_p]]).astype(np.int64)
+    ddelta = run_np["postings_doc_delta"][:n_p].astype(np.int64)
+    docs = np.cumsum(ddelta)
+    firsts = term_start[:-1]
+    # re-base each term's run: first delta stored doc+1
+    for_first = np.zeros(n_p, bool)
+    for_first[firsts[firsts < n_p]] = True
+    # docs[i] = first ? delta-1 : prev + delta; vectorized via segment cumsum:
+    base = np.zeros(n_p, np.int64)
+    base[for_first] = ddelta[for_first] - 1
+    vals = np.where(for_first, 0, ddelta)
+    grp = np.cumsum(for_first) - 1
+    csum = np.cumsum(vals)
+    seg_off = np.zeros(max(grp.max() + 1, 1) if n_p else 1, np.int64)
+    if n_p:
+        starts_idx = np.flatnonzero(for_first)
+        seg_off[:len(starts_idx)] = csum[starts_idx] - vals[starts_idx]
+        docs = base[starts_idx][grp] + (csum - seg_off[grp])
+    tf = run_np["postings_tf"][:n_p].astype(np.int64)
+    # positions
+    pdelta = run_np["pos_delta"][:n_e].astype(np.int64)
+    pos_start = np.concatenate([[0], np.cumsum(tf)])
+    pfirst = np.zeros(n_e, bool)
+    pfirst[pos_start[:-1][pos_start[:-1] < n_e]] = True
+    pbase = np.zeros(n_e, np.int64)
+    pbase[pfirst] = pdelta[pfirst] - 1
+    pvals = np.where(pfirst, 0, pdelta)
+    pgrp = np.cumsum(pfirst) - 1
+    pcsum = np.cumsum(pvals)
+    if n_e:
+        pstarts = np.flatnonzero(pfirst)
+        poff = pcsum[pstarts] - pvals[pstarts]
+        positions = pbase[pstarts][pgrp] + (pcsum - poff[pgrp])
+    else:
+        positions = np.zeros(0, np.int64)
+    return Segment(terms=terms, term_start=term_start, docs=docs, tf=tf,
+                   positions=positions, pos_start=pos_start,
+                   doc_ids=doc_ids.astype(np.int64),
+                   doc_len=doc_len.astype(np.int64))

@@ -1,0 +1,132 @@
+"""Doc-sharded -> term-sharded all-to-all: the distributed merge stage.
+
+Lucene's per-thread segments put pressure on downstream merges (paper §4);
+on a pod the analogous pressure is this shuffle: after every device inverts
+its own documents (coordination-free, the paper's design), postings entries
+are routed to the device owning their term range (``term % n_shards``) with
+a capacity-padded ``lax.all_to_all`` over the ``model`` axis — the same
+fixed-capacity exchange MoE dispatch uses, and the dominant collective in
+the indexing roofline.
+
+Each (pod, data) row keeps an independent document partition, so after the
+shuffle device (d, m) holds term-shard m of doc-partition d: the remaining
+cross-partition merge is hierarchical and happens at flush (host), exactly
+like Lucene's segment merges.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.invert import TERM_PAD, InvertedRun, postings_from_sorted
+
+
+class ShuffleStats(NamedTuple):
+    sent: jnp.ndarray      # valid entries sent
+    dropped: jnp.ndarray   # entries beyond per-destination capacity
+    recv: jnp.ndarray      # valid entries received
+
+
+def route_entries(s_term, s_doc, s_pos, *, axis_name: str, n_dest: int,
+                  capacity: int, payload: str = "raw", doc_base=None,
+                  docs_per_dev: int = 0):
+    """Inside shard_map: route sorted (term, doc, pos) entries to the term
+    owner over ``axis_name``. Returns re-sorted local (term, doc, pos) of
+    shape (n_dest * capacity,) plus ShuffleStats.
+
+    payload="packed2" sends 2 words/entry instead of 3: (local_doc<<16|pos,
+    term); the receiver rebases doc ids from the source row of the
+    all_to_all buffer (every source ships doc_base+local ids). Requires
+    local doc index and positions < 65536 (doc buffers are ~1-4k). 33%
+    fewer shuffle bytes — the paper's write-pressure/compression trade
+    applied to the distributed merge (EXPERIMENTS.md §Perf)."""
+    N = s_term.shape[0]
+    valid = s_term != TERM_PAD
+    dest = jnp.where(valid, s_term % n_dest, n_dest)
+
+    # stable sort by destination keeps (term, doc, pos) order within a dest
+    d_s, t_s, do_s, p_s = lax.sort((dest, s_term, s_doc, s_pos), num_keys=1,
+                                   is_stable=True)
+    starts = jnp.searchsorted(d_s, jnp.arange(n_dest, dtype=d_s.dtype))
+    rank = jnp.arange(N, dtype=jnp.int32) - starts[jnp.clip(d_s, 0, n_dest - 1)]
+    keep = (rank < capacity) & (d_s < n_dest)
+    slot = jnp.where(keep, d_s * capacity + rank, n_dest * capacity)
+
+    def scatter(vals, fill):
+        buf = jnp.full((n_dest * capacity + 1,), fill, vals.dtype)
+        return buf.at[slot].set(vals)[:-1].reshape(n_dest, capacity)
+
+    a2a = lambda buf: lax.all_to_all(buf, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True)
+
+    if payload == "packed2":
+        assert doc_base is not None and docs_per_dev > 0
+        local_doc = (do_s - doc_base).astype(jnp.uint32)
+        w1 = (local_doc << 16) | p_s.astype(jnp.uint32)
+        # invalid entries: term buffer already carries TERM_PAD
+        buf_t = scatter(t_s, TERM_PAD)
+        buf_w = scatter(w1, jnp.uint32(0))
+        recv_t, recv_w = a2a(buf_t), a2a(buf_w)
+        # rebase: recv row r came from the source at model-index r of this
+        # mesh row; bases along the shuffle axis step by docs_per_dev.
+        idx = lax.axis_index(axis_name)
+        row_base = doc_base - idx * docs_per_dev
+        src = lax.broadcasted_iota(jnp.int32, (n_dest, capacity), 0)
+        base_of_src = row_base + src * docs_per_dev
+        rd = (recv_w >> 16).astype(jnp.int32) + base_of_src
+        rp = (recv_w & jnp.uint32(0xFFFF)).astype(jnp.int32)
+        rt = recv_t
+        rd = jnp.where(rt == TERM_PAD, 0, rd)
+    else:
+        buf_t = scatter(t_s, TERM_PAD)
+        buf_d = scatter(do_s, jnp.int32(0))
+        buf_p = scatter(p_s, jnp.int32(0))
+        rt, rd, rp = a2a(buf_t), a2a(buf_d), a2a(buf_p)
+
+    rt2, rd2, rp2 = lax.sort((rt.reshape(-1), rd.reshape(-1),
+                              rp.reshape(-1)), num_keys=3)
+
+    stats = ShuffleStats(
+        sent=valid.sum().astype(jnp.int32),
+        dropped=((~keep) & (d_s < n_dest)).sum().astype(jnp.int32),
+        recv=(rt2 != TERM_PAD).sum().astype(jnp.int32),
+    )
+    return (rt2, rd2, rp2), stats
+
+
+def invert_and_shuffle(tokens, doc_id_base, *, axis_name: str, n_dest: int,
+                       capacity_factor: float = 1.35, payload: str = "raw",
+                       single_key_sort: bool = False):
+    """Per-device: sort-invert local docs, shuffle entries to term owners,
+    build the term-sharded postings. Runs inside shard_map; tokens (D, L).
+
+    single_key_sort: the (doc, pos) pairs are generated in row-major order,
+    so a STABLE sort on the term key alone yields the identical
+    lexicographic (term, doc, pos) order at ~1/3 the comparator cost
+    (EXPERIMENTS.md §Perf)."""
+    D, L = tokens.shape
+    valid2d = tokens > 0
+    doc_len = valid2d.sum(axis=1).astype(jnp.int32)
+    term = jnp.where(valid2d, tokens, TERM_PAD).reshape(D * L)
+    doc = jnp.broadcast_to(
+        jnp.arange(D, dtype=jnp.int32)[:, None] + doc_id_base, (D, L)
+    ).reshape(D * L)
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :],
+                           (D, L)).reshape(D * L)
+    if single_key_sort:
+        s_term, s_doc, s_pos = lax.sort((term, doc, pos), num_keys=1,
+                                        is_stable=True)
+    else:
+        s_term, s_doc, s_pos = lax.sort((term, doc, pos), num_keys=3)
+
+    capacity = int(D * L * capacity_factor / n_dest)
+    capacity = max((capacity + 127) // 128 * 128, 128)
+    (rt, rd, rp), stats = route_entries(
+        s_term, s_doc, s_pos, axis_name=axis_name, n_dest=n_dest,
+        capacity=capacity, payload=payload, doc_base=doc_id_base,
+        docs_per_dev=D)
+    run = postings_from_sorted(rt, rd, rp, doc_len)
+    return run, stats

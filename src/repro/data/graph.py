@@ -1,0 +1,83 @@
+"""Graph containers + a real uniform-fanout neighbor sampler
+(GraphSAGE-style, required by the minibatch_lg shape).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class CSRGraph:
+    indptr: np.ndarray   # (N+1,)
+    indices: np.ndarray  # (E,)
+    n_nodes: int
+
+    @classmethod
+    def random(cls, n_nodes: int, avg_degree: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        deg = rng.poisson(avg_degree, n_nodes).clip(1)
+        indptr = np.concatenate([[0], np.cumsum(deg)])
+        indices = rng.integers(0, n_nodes, indptr[-1])
+        return cls(indptr.astype(np.int64), indices.astype(np.int64), n_nodes)
+
+
+def sample_subgraph(g: CSRGraph, seeds: np.ndarray, fanout: tuple[int, ...],
+                    rng: np.random.Generator):
+    """Layer-wise uniform neighbor sampling. Returns (nodes, edge_src,
+    edge_dst) with edges pointing hop-(k+1) -> hop-k (message direction)."""
+    nodes = [seeds.astype(np.int64)]
+    srcs, dsts = [], []
+    frontier = seeds.astype(np.int64)
+    for f in fanout:
+        new_src, new_dst = [], []
+        for v in frontier:
+            lo, hi = g.indptr[v], g.indptr[v + 1]
+            if hi == lo:
+                continue
+            take = rng.integers(lo, hi, size=f)
+            nbrs = g.indices[take]
+            new_src.append(nbrs)
+            new_dst.append(np.full(f, v))
+        if not new_src:
+            break
+        ns = np.concatenate(new_src)
+        nd = np.concatenate(new_dst)
+        srcs.append(ns)
+        dsts.append(nd)
+        frontier = np.unique(ns)
+        nodes.append(frontier)
+    all_nodes = np.unique(np.concatenate(nodes))
+    src = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+    dst = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+    # relabel to local ids
+    remap = {int(n): i for i, n in enumerate(all_nodes)}
+    src_l = np.asarray([remap[int(s)] for s in src], np.int32)
+    dst_l = np.asarray([remap[int(d)] for d in dst], np.int32)
+    return all_nodes, src_l, dst_l
+
+
+def pad_graph_batch(nodes, src, dst, n_nodes_pad: int, n_edges_pad: int,
+                    d_feat: int, rng: np.random.Generator, n_classes: int = 64):
+    """Pad a sampled subgraph to static dry-run shapes with masked dummies."""
+    N, E = len(nodes), len(src)
+    assert N <= n_nodes_pad and E <= n_edges_pad, (N, E)
+    batch = {
+        "positions": rng.normal(size=(n_nodes_pad, 3)).astype(np.float32),
+        "species": rng.integers(0, 8, n_nodes_pad).astype(np.int32),
+        "edge_src": np.zeros(n_edges_pad, np.int32),
+        "edge_dst": np.zeros(n_edges_pad, np.int32),
+        "edge_mask": np.zeros(n_edges_pad, np.float32),
+        "node_mask": np.zeros(n_nodes_pad, np.float32),
+        "graph_ids": np.zeros(n_nodes_pad, np.int32),
+        "labels": rng.integers(0, n_classes, n_nodes_pad).astype(np.int32),
+    }
+    batch["edge_src"][:E] = src
+    batch["edge_dst"][:E] = dst
+    batch["edge_mask"][:E] = 1.0
+    batch["node_mask"][:N] = 1.0
+    if d_feat:
+        batch["node_feats"] = rng.normal(size=(n_nodes_pad, d_feat)) \
+            .astype(np.float32)
+    return batch

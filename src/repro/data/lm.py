@@ -1,0 +1,59 @@
+"""LM token pipeline: seeded, stateless, prefetching.
+
+batch(step) is a pure function of (seed, step) — restarts resume bitwise
+identically (the fault-tolerance contract). A background thread prefetches
+the next host batch while the device step runs (compute/input overlap).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+class LMBatches:
+    def __init__(self, vocab_size: int, batch: int, seq_len: int,
+                 seed: int = 0, zipf_s: float = 1.1):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.zipf_s = zipf_s
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        raw = rng.zipf(self.zipf_s, size=(self.batch, self.seq_len + 1))
+        toks = (raw % (self.vocab_size - 2) + 1).astype(np.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:].copy(),
+            "mask": np.ones((self.batch, self.seq_len), np.float32),
+        }
+
+
+class Prefetcher:
+    """One-batch-ahead host prefetch thread."""
+
+    def __init__(self, batch_fn, start_step: int = 0, depth: int = 2):
+        self.batch_fn = batch_fn
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._next = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._next
+        while not self._stop.is_set():
+            try:
+                self.q.put((step, self.batch_fn(step)), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def get(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,47 @@
+"""Criteo-shaped synthetic recsys batches (seeded, stateless)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ctr_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng((seed, step))
+    ids = rng.integers(0, cfg.vocab_per_field, (batch, cfg.n_sparse),
+                       dtype=np.int64).astype(np.int32)
+    dense = rng.normal(size=(batch, cfg.n_dense)).astype(np.float32)
+    labels = (rng.random(batch) < 0.25).astype(np.float32)
+    return {"sparse_ids": ids, "dense": dense, "labels": labels}
+
+
+def dien_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng((seed, step, 1))
+    T = cfg.seq_len
+    lens = rng.integers(1, T + 1, batch)
+    mask = (np.arange(T)[None, :] < lens[:, None]).astype(np.float32)
+    return {
+        "hist_items": rng.integers(0, cfg.vocab_per_field, (batch, T)).astype(np.int32),
+        "hist_cats": rng.integers(0, cfg.vocab_per_field, (batch, T)).astype(np.int32),
+        "hist_mask": mask,
+        "target_item": rng.integers(0, cfg.vocab_per_field, batch).astype(np.int32),
+        "target_cat": rng.integers(0, cfg.vocab_per_field, batch).astype(np.int32),
+        "profile_ids": rng.integers(0, cfg.vocab_per_field,
+                                    (batch, cfg.n_sparse)).astype(np.int32),
+        "labels": (rng.random(batch) < 0.3).astype(np.float32),
+    }
+
+
+def two_tower_batch(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng((seed, step, 2))
+    M = cfg.multi_hot_max
+    def bags():
+        ids = rng.integers(-1, cfg.vocab_per_field, (batch, cfg.n_sparse, M))
+        return ids.astype(np.int32)
+    return {
+        "user_ids": rng.integers(0, cfg.user_vocab, batch).astype(np.int32),
+        "item_ids": rng.integers(0, cfg.item_vocab, batch).astype(np.int32),
+        "user_feat_ids": bags(),
+        "item_feat_ids": bags(),
+        "user_dense": rng.normal(size=(batch, cfg.n_dense)).astype(np.float32),
+        "item_dense": rng.normal(size=(batch, cfg.n_dense)).astype(np.float32),
+        "item_freq": np.full(batch, 1.0 / batch, np.float32),
+    }

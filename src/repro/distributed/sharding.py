@@ -1,0 +1,131 @@
+"""Logical -> physical sharding rules (DESIGN.md §4).
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single
+pod. Conventions:
+  * batch / tokens / docs  -> ("pod","data")  (DP)
+  * weight TP dim          -> "model"  (Megatron column/row, EP experts,
+                                        vocab for embeddings)
+  * weight FSDP dim        -> "data"   (within-pod only: cross-pod DCN is
+                                        too slow for per-step param
+                                        gathers; grads all-reduce over pod)
+  * KV-cache sequence      -> "model"  (split-K decode)
+
+Rules are matched on the param path's last named component; everything the
+table doesn't know is replicated (norm scales, biases, small MLPs).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# last-component -> spec for the *unstacked* (single-layer) tensor.
+# F = fsdp axis ("data"), M = tensor axis ("model").
+_LM_RULES = {
+    "embed": P("model", "data"),
+    "head": P("model", "data"),
+    "patch_proj": P(None, "data"),
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    # dense FFN
+    "w_gate": P("data", "model"),
+    "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    "router": P(None, None),
+}
+# MoE expert tensors (E, d, ff) / (E, ff, d): EP over model, FSDP over d.
+_MOE_RULES = {
+    "w_gate": P("model", "data", None),
+    "w_up": P("model", "data", None),
+    "w_down": P("model", None, "data"),
+}
+_RECSYS_RULES = {
+    # the mega-tables row-shard over the whole non-pod mesh
+    "table": P(("data", "model"), None),
+    "fo_table": P(("data", "model"), None),
+    "item_table": P(("data", "model"), None),
+    "user_table": P(("data", "model"), None),
+    "profile_table": P(("data", "model"), None),
+    "user_feat_table": P(("data", "model"), None),
+    "item_feat_table": P(("data", "model"), None),
+}
+
+
+def _lm_spec(path: str, ndim: int, serve: bool = False) -> P:
+    leaf = path.split("/")[-1]
+    in_layers = "layers" in path
+    if "ffn" in path and leaf in _MOE_RULES and ndim >= 3:
+        spec = _MOE_RULES[leaf]
+    elif leaf in _LM_RULES:
+        spec = _LM_RULES[leaf]
+    else:
+        spec = P()
+    if serve:  # serving: no FSDP — replicate over `data`, keep TP only
+        spec = P(*(None if a == "data" else a for a in spec))
+    if in_layers:  # scan-stacked: prepend the layer dim (replicated)
+        spec = P(None, *spec)
+    # pad/truncate to tensor rank
+    parts = list(spec)[:ndim]
+    parts += [None] * (ndim - len(parts))
+    return P(*parts)
+
+
+def _recsys_spec(path: str, ndim: int) -> P:
+    leaf = path.split("/")[-1]
+    spec = _RECSYS_RULES.get(leaf, P())
+    parts = list(spec)[:ndim]
+    parts += [None] * (ndim - len(parts))
+    return P(*parts)
+
+
+def param_specs(params, family: str, serve: bool = False):
+    """Pytree of PartitionSpec matching ``params`` (works on shape structs).
+    serve=True: weights replicated over `data` (no per-step FSDP gathers —
+    the standard serving layout)."""
+
+    def spec_for(path, leaf):
+        path_s = _path_str(path)
+        nd = len(leaf.shape)
+        if family == "lm":
+            return _lm_spec(path_s, nd, serve)
+        if family == "recsys":
+            return _recsys_spec(path_s, nd)
+        return P()  # gnn / small models: replicated params
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings_for(params, family: str, mesh):
+    specs = param_specs(params, family)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(state, param_spec_tree):
+    """AdamW m/v mirror the param specs; count is replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(m=param_spec_tree, v=param_spec_tree,
+                      count=P())
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_spec(mesh) -> P | str | tuple:
+    axes = dp_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]

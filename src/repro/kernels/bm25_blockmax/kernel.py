@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused unpack + prefix-sum + BM25 partial scoring.
+
+The TPU-idiomatic equivalent of block-max WAND's posting cursor (DESIGN.md
+§2): instead of pointer-chasing per document, whole 128-lane blocks are
+either scored densely or skipped via the ``active`` mask that the
+block-max pruning pass computes on block metadata. In-kernel work is all
+VPU: bit-plane unpack (shift/and), a log-step inclusive prefix sum across
+the 128 lanes, and the tf -> idf*(k1+1)*tf numerator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _unpack_bits(w, bw, R):
+    lane_bit = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, BLOCK // 32, 32), 3)
+    bits = (w[:, :, :, None] >> lane_bit) & jnp.uint32(1)
+    bits = bits.reshape(R, 32, BLOCK)
+    planes = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, 1), 1)
+    valid = planes < bw[:, None, None].astype(jnp.uint32)
+    return jnp.sum(jnp.where(valid, bits, jnp.uint32(0)) << planes, axis=1,
+                   dtype=jnp.uint32)
+
+
+def _bm25_kernel(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
+                 act_ref, doc_ref, tf_ref, num_ref, *, k1):
+    R = pd_ref.shape[0]
+    deltas = _unpack_bits(pd_ref[...], bwd_ref[...], R).astype(jnp.int32)
+    # inclusive prefix sum over the 128 lanes (log-step doubling)
+    acc = deltas
+    shift = 1
+    while shift < BLOCK:
+        shifted = jnp.pad(acc, ((0, 0), (shift, 0)))[:, :BLOCK]
+        acc = acc + shifted
+        shift *= 2
+    docids = first_ref[...][:, None] + acc
+    tf = _unpack_bits(pt_ref[...], bwt_ref[...], R).astype(jnp.float32)
+    num = idf_ref[...][:, None] * (k1 + 1.0) * tf
+    act = (act_ref[...] > 0)[:, None]
+    doc_ref[...] = jnp.where(act, docids, 0)
+    tf_ref[...] = jnp.where(act, tf, 0.0)
+    num_ref[...] = jnp.where(act, num, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k1", "block_rows", "interpret"))
+def bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
+                       idf, active, *, k1: float = 0.9,
+                       block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True):
+    nb = packed_docs.shape[0]
+    block_rows = min(block_rows, nb)
+    assert nb % block_rows == 0, (nb, block_rows)
+    grid = (nb // block_rows,)
+    vec = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
+    packed = lambda: pl.BlockSpec((block_rows, 32, 4), lambda i: (i, 0, 0))
+    lanes = lambda: pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_bm25_kernel, k1=k1),
+        grid=grid,
+        in_specs=[packed(), vec(), vec(), packed(), vec(), vec(), vec()],
+        out_specs=[lanes(), lanes(), lanes()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(packed_docs.astype(jnp.uint32), bw_docs.astype(jnp.int32),
+      first_doc.astype(jnp.int32), packed_tf.astype(jnp.uint32),
+      bw_tf.astype(jnp.int32), idf.astype(jnp.float32),
+      active.astype(jnp.int32))

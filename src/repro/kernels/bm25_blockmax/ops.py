@@ -1,0 +1,16 @@
+"""Dispatcher for the fused BM25 block scoring op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bm25_blockmax.kernel import bm25_blocks_pallas
+from repro.kernels.bm25_blockmax.ref import bm25_blocks_ref
+
+
+def bm25_blocks(packed_docs, bw_docs, first_doc, packed_tf, bw_tf, idf,
+                active, *, k1: float = 0.9):
+    if jax.default_backend() == "tpu":
+        return bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf,
+                                  bw_tf, idf, active, k1=k1, interpret=False)
+    return bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
+                           idf, active, k1=k1)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused block-max BM25 scoring kernel.
+
+Per postings block (128 lanes): unpack doc-id deltas (lane-blocked PFor),
+prefix-sum them onto the block's first doc id, unpack term frequencies,
+and emit the BM25 numerator idf * (k1+1) * tf. Skipped blocks (block-max
+pruning decided upstream) emit zeros.
+
+The caller finishes the score with the per-doc length norm:
+  score += num / (tf + k1 * (1 - b + b * dl[doc] / avgdl))
+which needs a doc-indexed gather and so lives outside the kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.postings_pack.ref import unpack_ref
+
+
+def bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
+                    idf, active, k1: float = 0.9):
+    """-> (docids (NB,128) int32, tf (NB,128) f32, num (NB,128) f32)."""
+    deltas = unpack_ref(packed_docs, bw_docs).astype(jnp.int32)
+    docids = first_doc[:, None] + jnp.cumsum(deltas, axis=1)
+    tf = unpack_ref(packed_tf, bw_tf).astype(jnp.float32)
+    num = idf[:, None] * (k1 + 1.0) * tf
+    act = (active > 0)[:, None]
+    return (jnp.where(act, docids, 0),
+            jnp.where(act, tf, 0.0),
+            jnp.where(act, num, 0.0))

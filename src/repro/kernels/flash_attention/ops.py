@@ -1,0 +1,16 @@
+"""Public op: fused attention. TPU -> Pallas kernel; CPU -> the blockwise
+jnp formulation (same math, XLA-fused)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def fused_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    if jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=False)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         softcap=softcap)

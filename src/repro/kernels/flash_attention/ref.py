@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel: straightforward
+materialized-scores attention with causal/window masks, softcap and GQA."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[None, None, None], p, 0.0)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1)  # (B, Sq, KVH, G, D)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: lane-blocked PFor pack/unpack.
+
+TPU adaptation (DESIGN.md §2): VByte-style byte-aligned codecs are branchy
+and warp-shaped; on the TPU VPU we instead pack 128-delta blocks (one block
+per vector lane row) with per-block bit width, using only vector shifts,
+ands and 32-lane weighted-sum reductions — no MXU, no gather. Tiles of
+``block_rows`` blocks are staged through VMEM via BlockSpec.
+
+Validated against ref.py in interpret mode (tests/test_kernels.py); on a
+real TPU the same pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+DEFAULT_BLOCK_ROWS = 256  # deltas tile: 256 x 128 x 4B = 128 KiB in VMEM
+
+
+def _pack_kernel(deltas_ref, packed_ref, bw_ref):
+    d = deltas_ref[...]  # (R, 128) uint32
+    blk_max = jnp.max(d, axis=-1)  # (R,)
+    bw = (32 - lax.clz(blk_max)).astype(jnp.int32)
+    planes = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, 1), 1)
+    bits = (d[:, None, :] >> planes) & jnp.uint32(1)  # (R, 32, 128)
+    R = d.shape[0]
+    lanes = bits.reshape(R, 32, BLOCK // 32, 32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32,
+                                                         (1, 1, 1, 32), 3))
+    words = jnp.sum(lanes * weights, axis=-1, dtype=jnp.uint32)
+    mask = planes < bw[:, None, None].astype(jnp.uint32)
+    packed_ref[...] = jnp.where(mask, words, jnp.uint32(0))
+    bw_ref[...] = bw
+
+
+def _unpack_kernel(packed_ref, bw_ref, deltas_ref):
+    w = packed_ref[...]  # (R, 32, 4) uint32
+    bw = bw_ref[...]  # (R,) int32
+    R = w.shape[0]
+    # expand words back to per-lane bits
+    lane_bit = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, BLOCK // 32, 32), 3)
+    bits = (w[:, :, :, None] >> lane_bit) & jnp.uint32(1)  # (R, 32, 4, 32)
+    bits = bits.reshape(R, 32, BLOCK)
+    planes = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, 1), 1)
+    valid = planes < bw[:, None, None].astype(jnp.uint32)
+    vals = jnp.where(valid, bits, jnp.uint32(0)) << planes
+    deltas_ref[...] = jnp.sum(vals, axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pack_pallas(deltas, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = True):
+    """deltas: (nb, 128) uint32, nb % block_rows == 0."""
+    nb = deltas.shape[0]
+    block_rows = min(block_rows, nb)
+    assert nb % block_rows == 0, (nb, block_rows)
+    grid = (nb // block_rows,)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, 32, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, 32, 4), jnp.uint32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deltas.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def unpack_pallas(packed, bw, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = True):
+    nb = packed.shape[0]
+    block_rows = min(block_rows, nb)
+    assert nb % block_rows == 0, (nb, block_rows)
+    grid = (nb // block_rows,)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 32, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, BLOCK), jnp.uint32)],
+        interpret=interpret,
+    )(packed.astype(jnp.uint32), bw.astype(jnp.int32))[0]

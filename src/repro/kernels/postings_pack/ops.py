@@ -1,0 +1,43 @@
+"""Public ops for postings packing: jit'd wrappers that dispatch to the
+Pallas kernel (TPU, or interpret mode for validation) or the pure-jnp
+reference (CPU default — identical math, XLA-fused)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.postings_pack import ref
+from repro.kernels.postings_pack.kernel import pack_pallas, unpack_pallas
+
+BLOCK = ref.BLOCK
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to_blocks(stream: jnp.ndarray, fill: int = 0):
+    """(n,) -> ((nb, 128), n) padding the tail with ``fill``."""
+    n = stream.shape[0]
+    nb = -(-n // BLOCK)
+    padded = jnp.full((nb * BLOCK,), fill, stream.dtype).at[:n].set(stream)
+    return padded.reshape(nb, BLOCK), n
+
+
+@jax.jit
+def pack(deltas: jnp.ndarray):
+    """deltas: (nb, 128) uint32 -> (packed (nb,32,4), bw (nb,))."""
+    if _on_tpu():
+        return tuple(pack_pallas(deltas, interpret=False))
+    return ref.pack_ref(deltas)
+
+
+@jax.jit
+def unpack(packed: jnp.ndarray, bw: jnp.ndarray):
+    if _on_tpu():
+        return unpack_pallas(packed, bw, interpret=False)
+    return ref.unpack_ref(packed, bw)
+
+
+packed_bytes = ref.packed_bytes
+bit_width = ref.bit_width

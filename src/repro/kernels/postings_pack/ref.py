@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for lane-blocked PFor packing.
+
+Format (TPU adaptation of PForDelta, DESIGN.md §2):
+  * the delta stream is grouped into blocks of 128 (the VPU lane width);
+  * each block is packed at one bit width bw = bits(max(block));
+  * packed layout per block: ``bw`` bit-planes x 4 words of 32 lanes each —
+    plane j, word w holds bit j of lanes [32w, 32w+32).
+
+The device kernel emits a fixed worst-case buffer (nb, 32, 4) plus the
+per-block bit widths; compaction to ``sum(bw_b) * 16`` bytes happens at
+flush (host side), exactly like exception-free PFor on GPUs emits
+fixed-stride blocks that a second pass compacts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+BLOCK = 128
+WORDS_PER_PLANE = BLOCK // 32  # 4
+
+
+def bit_width(block_max: jnp.ndarray) -> jnp.ndarray:
+    """ceil(log2(max+1)), with bw(0) = 0 -> store nothing for all-zero."""
+    return (32 - lax.clz(block_max.astype(jnp.uint32))).astype(jnp.int32)
+
+
+def pack_ref(deltas: jnp.ndarray):
+    """deltas: (nb, 128) uint32 -> (packed (nb, 32, 4) uint32, bw (nb,) int32).
+
+    Planes >= bw are zero (masked), so the compacted stream is
+    ``packed[b, :bw[b], :]``.
+    """
+    assert deltas.shape[-1] == BLOCK, deltas.shape
+    d = deltas.astype(jnp.uint32)
+    nb = d.shape[0]
+    bw = bit_width(d.max(axis=-1))
+    planes = jnp.arange(32, dtype=jnp.uint32)
+    bits = (d[:, None, :] >> planes[None, :, None]) & jnp.uint32(1)  # (nb,32,128)
+    lanes = bits.reshape(nb, 32, WORDS_PER_PLANE, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    words = (lanes * weights[None, None, None, :]).sum(axis=-1, dtype=jnp.uint32)
+    mask = planes[None, :, None] < bw[:, None, None].astype(jnp.uint32)
+    return jnp.where(mask, words, jnp.uint32(0)), bw
+
+
+def unpack_ref(packed: jnp.ndarray, bw: jnp.ndarray):
+    """(nb, 32, 4) uint32 + (nb,) -> (nb, 128) uint32."""
+    nb = packed.shape[0]
+    lane = jnp.arange(BLOCK)
+    word_idx, bit_idx = lane // 32, (lane % 32).astype(jnp.uint32)
+    w = packed[:, :, word_idx]  # (nb, 32, 128)
+    bits = (w >> bit_idx[None, None, :]) & jnp.uint32(1)
+    planes = jnp.arange(32, dtype=jnp.uint32)
+    valid = planes[None, :, None] < bw[:, None, None].astype(jnp.uint32)
+    vals = jnp.where(valid, bits, jnp.uint32(0)) << planes[None, :, None]
+    return vals.sum(axis=1, dtype=jnp.uint32)
+
+
+def packed_bytes(bw: jnp.ndarray) -> jnp.ndarray:
+    """Compacted size in bytes: bw planes x 4 words x 4 bytes + 1 byte/block
+    header (the bit width). float accumulation: counts can exceed int32."""
+    return (bw.astype(jnp.float32) * 16 + 1).sum()

@@ -1,0 +1,82 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+  python -m repro.launch.report [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load_cells():
+    """Current cells only — .baseline.json archives and __<tag>.json
+    perf-iteration variants are excluded from the main table."""
+    cells = []
+    for f in sorted(OUT_DIR.glob("*.json")):
+        if ".baseline." in f.name or f.stem.count("__") > 2:
+            continue
+        d = json.loads(f.read_text())
+        cells.append(d)
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    for unit, div in (("s", 1), ("ms", 1e-3), ("us", 1e-6)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}" if x / div < 100 else f"{x/div:.0f}{unit}"
+    return f"{x:.1e}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+
+    cells = load_cells()
+    ok = [c for c in cells if c.get("ok")]
+    bad = [c for c in cells if not c.get("ok")]
+    print(f"{len(ok)} ok / {len(bad)} failed of {len(cells)} cells\n")
+    for c in bad:
+        print("FAILED:", c["arch"], c["shape"], c.get("mesh"))
+
+    hdr = ("| arch | shape | mesh | compute | memory(an.) | collective | "
+           "dominant | useful FLOPs | roofline frac |")
+    sep = "|" + "---|" * 9
+    print(hdr)
+    print(sep)
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        r = c["roofline"]
+        mem = r.get("memory_analytic_s") or r.get("memory_s")
+        uf = r.get("useful_flops_ratio", 0)
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+              f"| {fmt_s(r['compute_s'])} | {fmt_s(mem)} "
+              f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
+              f"| {uf:.2f} | {r['roofline_fraction']:.3f} |")
+
+    # summary stats for picking the hillclimb cells
+    print("\nmost collective-bound cells (single pod):")
+    singles = [c for c in ok if c["mesh"] == "16x16"]
+    key = lambda c: (c["roofline"]["collective_s"]
+                     / max(max(c["roofline"]["compute_s"],
+                               c["roofline"].get("memory_analytic_s") or 0),
+                           1e-12))
+    for c in sorted(singles, key=key, reverse=True)[:6]:
+        print(f"  {c['arch']}/{c['shape']}: coll/comp = {key(c):.1f}")
+    print("\nworst roofline fraction (single pod):")
+    for c in sorted(singles,
+                    key=lambda c: c["roofline"]["roofline_fraction"])[:6]:
+        print(f"  {c['arch']}/{c['shape']}: "
+              f"{c['roofline']['roofline_fraction']:.4f} "
+              f"dominant={c['roofline']['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

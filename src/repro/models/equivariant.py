@@ -1,0 +1,113 @@
+"""SO(3) representation machinery for NequIP, built from scratch (no e3nn).
+
+Everything is derived numerically from one primitive — the real spherical
+harmonic polynomials ``Y_l`` defined below — so there is no basis-convention
+mismatch by construction:
+
+  * Wigner matrices ``D_l(R)`` are obtained by least squares from
+    ``Y_l(R n) = D_l(R) Y_l(n)`` over sample points;
+  * Clebsch-Gordan (coupling) tensors ``Q[l1,l2,l3]`` are the null space of
+    the stacked equivariance constraints ``(D1⊗D2⊗D3 - I) vec(Q) = 0`` over
+    random rotations (multiplicity is 1 for each triangle-allowed triple in
+    SO(3), so the null space is one-dimensional).
+
+Equivariance is then *testable* (tests/test_nequip.py rotates inputs and
+checks outputs co-rotate), which guards the whole construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+L_MAX = 2
+
+
+# --------------------------------------------------------------------------
+# real spherical harmonics (component normalization, ||Y_l(n)||^2 = 2l+1)
+# --------------------------------------------------------------------------
+
+def sh_np(n: np.ndarray, l: int) -> np.ndarray:
+    """n: (..., 3) unit vectors -> (..., 2l+1)."""
+    x, y, z = n[..., 0], n[..., 1], n[..., 2]
+    if l == 0:
+        return np.ones(n.shape[:-1] + (1,))
+    if l == 1:
+        return np.sqrt(3.0) * np.stack([x, y, z], axis=-1)
+    if l == 2:
+        c = np.sqrt(15.0)
+        return np.stack([
+            c * x * y,
+            c * y * z,
+            np.sqrt(5.0) / 2.0 * (3 * z * z - 1.0),
+            c * x * z,
+            c / 2.0 * (x * x - y * y),
+        ], axis=-1)
+    raise NotImplementedError(l)
+
+
+def _rand_rotations(k: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(k, 3, 3))
+    q, _ = np.linalg.qr(a)
+    det = np.linalg.det(q)
+    q[:, :, 0] *= det[:, None]  # force det=+1
+    return q
+
+
+def wigner_d(R: np.ndarray, l: int) -> np.ndarray:
+    """D_l with Y_l(R n) = D_l Y_l(n). Exact to float precision by lstsq."""
+    rng = np.random.default_rng(1234 + l)
+    pts = rng.normal(size=(max(20, 4 * (2 * l + 1)), 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    A = sh_np(pts, l)             # (K, 2l+1)
+    B = sh_np(pts @ R.T, l)       # (K, 2l+1)
+    Dt, *_ = np.linalg.lstsq(A, B, rcond=None)
+    return Dt.T
+
+
+@functools.lru_cache(maxsize=None)
+def cg_tensor(l1: int, l2: int, l3: int) -> np.ndarray | None:
+    """Coupling tensor Q (2l1+1, 2l2+1, 2l3+1) with
+    out[m3] = sum Q[m1,m2,m3] u[m1] v[m2] equivariant; None if not allowed.
+    Normalized so ||Q||_F = 1."""
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return None
+    d1, d2, d3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    rows = []
+    eye = np.eye(d1 * d2 * d3)
+    for R in _rand_rotations(12, seed=7 * (l1 + 3 * l2 + 9 * l3) + 1):
+        D1, D2, D3 = wigner_d(R, l1), wigner_d(R, l2), wigner_d(R, l3)
+        rows.append(np.kron(np.kron(D1, D2), D3) - eye)
+    M = np.concatenate(rows, axis=0)
+    _, s, vt = np.linalg.svd(M)
+    null_dim = int(np.sum(s < 1e-8))
+    if null_dim == 0:
+        return None
+    assert null_dim == 1, (l1, l2, l3, null_dim, s[-3:])
+    q = vt[-1].reshape(d1, d2, d3)
+    # fix sign deterministically
+    flat = q.reshape(-1)
+    q = q * np.sign(flat[np.argmax(np.abs(flat))])
+    return q / np.linalg.norm(q)
+
+
+def tp_paths(l_max: int = L_MAX):
+    """All (l_in, l_sh, l_out) paths with every l <= l_max."""
+    paths = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if cg_tensor(l1, l2, l3) is not None:
+                    paths.append((l1, l2, l3))
+    return paths
+
+
+def irrep_slices(l_max: int, mul: int):
+    """Feature layout: concatenated [mul x (2l+1)] blocks for l = 0..l_max."""
+    slices, off = {}, 0
+    for l in range(l_max + 1):
+        d = mul * (2 * l + 1)
+        slices[l] = (off, off + d)
+        off += d
+    return slices, off

@@ -1,0 +1,274 @@
+"""Shared neural-net layers, pure JAX (no flax).
+
+Params are plain nested dicts of jnp arrays. Every init function takes an
+explicit PRNG key. Compute follows the mixed-precision convention:
+params in ``param_dtype`` (fp32), matmuls in ``compute_dtype`` (bf16),
+softmax/norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# --------------------------------------------------------------------------
+# dtype helpers
+# --------------------------------------------------------------------------
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev=None):
+    if stddev is None:  # fan-in scaling
+        fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+        stddev = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma convention: weight = 1 + scale
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * lax.rsqrt(var + eps)
+    out = normed * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (partial rotary supported, StableLM-2 style)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float):
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv_freq, rot_dim
+
+
+def apply_rope(x, positions, inv_freq, rot_dim):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if rot_dim == 0:
+        return x
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([rotated, x_pass], axis=-1) if rot_dim < x.shape[-1] else rotated
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention, pure jnp — the XLA-lowered reference
+# used by train/prefill steps. The TPU hot-path Pallas kernel lives in
+# repro/kernels/flash_attention and computes the same function.
+# --------------------------------------------------------------------------
+
+_NEG = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def _block_mask(q_pos, k_pos, *, causal, window):
+    """(block_q, block_kv) boolean, True = attend."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= dk <= dq
+    if window:
+        ok &= dq - dk < window
+    return ok
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        q_offset=0, block_q=512, block_kv=1024):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KVH, D) with H = G * KVH.
+    Masked positions contribute exactly zero probability (mask applied to
+    the exp weights, not via -inf logits, so fully-masked blocks are safe).
+    Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, block_q, Skv, block_kv)
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    qb = q.reshape(B, nq, block_q, KVH, G, D)
+    qb = jnp.moveaxis(qb, 1, 0)  # (nq, B, bq, KVH, G, D)
+
+    def q_block_step(_, qi_and_blk):
+        qi, q_blk = qi_and_blk
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = lax.dynamic_slice_in_dim(k, kj * block_kv, block_kv, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, kj * block_kv, block_kv, axis=1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            k_pos = kj * block_kv + jnp.arange(block_kv)
+            ok = _block_mask(q_pos, k_pos, causal=causal, window=window)
+            s_masked = jnp.where(ok[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s_masked.max(axis=-1))
+            p = jnp.where(ok[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+            correction = jnp.exp(m - m_new)
+            l_new = l * correction + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * correction[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, block_q), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1).reshape(B, block_q, KVH * G, D)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_block_step, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0, softcap=0.0):
+    """Single-position attention against a (possibly sharded) KV cache.
+
+    q: (B, H, D); k_cache/v_cache: (B, S, KVH, D); length: scalar or (B,) —
+    number of valid cache positions (the new token's slot already written).
+    The softmax reduction over S is exact under sequence sharding: XLA
+    lowers the max/sum/contraction to all-reduce over the `model` axis
+    (split-K / FlashDecoding-on-GSPMD).
+    """
+    B, S, KVH, D = k_cache.shape
+    H = q.shape[1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)
+    length = jnp.asarray(length)
+    lens = length[..., None] if length.ndim else length
+    ok = pos < lens  # (S,) or (B, S)
+    window = jnp.asarray(window)  # traced per-layer scalar; <=0 means full
+    ok = ok & ((window <= 0) | (pos >= lens - window))
+    ok = jnp.broadcast_to(ok, (B, S))[:, None, None, :]
+    m = jnp.where(ok, s, _NEG).max(axis=-1, keepdims=True)
+    p = jnp.where(ok, jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu_init(key, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d, ff), dtype),
+        "w_up": normal_init(k2, (d, ff), dtype),
+        "w_down": normal_init(k3, (ff, d), dtype),
+    }
+
+
+def swiglu(params, x, compute_dtype, constrain=None, wgather=None):
+    """constrain: Megatron column-parallel constraint on the (.., ff)
+    hidden activations (P(dp, None, 'model')). wgather(w, tp_dim): explicit
+    bf16 FSDP weight gather. Both are required for GSPMD to pick the
+    FSDP+TP strategy instead of f32 partial-sum all-reduces of full-width
+    activations (measured 54 GB/layer -> ~6 GB/layer; EXPERIMENTS.md §Perf)."""
+    c = constrain or (lambda t: t)
+    wgt = wgather or (lambda w, dim: w)
+    xc = x.astype(compute_dtype)
+    w_gate = wgt(params["w_gate"].astype(compute_dtype), 1)
+    w_up = wgt(params["w_up"].astype(compute_dtype), 1)
+    w_down = wgt(params["w_down"].astype(compute_dtype), 0)
+    g = c(xc @ w_gate)
+    u = c(xc @ w_up)
+    h = c(jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u)
+    return h @ w_down
+
+
+def mlp_init(key, dims, dtype, in_dim):
+    """Plain ReLU MLP used by the recsys models. dims = hidden sizes."""
+    params = []
+    prev = in_dim
+    for i, h in enumerate(dims):
+        kw, kb = jax.random.split(jax.random.fold_in(key, i))
+        params.append({"w": normal_init(kw, (prev, h), dtype),
+                       "b": jnp.zeros((h,), dtype)})
+        prev = h
+    return params
+
+
+def mlp_apply(params, x, activation=jax.nn.relu, final_activation=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        act = activation if i < len(params) - 1 else (final_activation or (lambda v: v))
+        x = act(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def chunked_softmax_xent(x, emb, targets, mask, *, chunk=512, softcap=0.0):
+    """LM-head + cross-entropy, chunked over the sequence to bound the
+    (B, chunk, V) logits intermediate. x: (B, S, d); emb: (V, d) (tied head);
+    targets/mask: (B, S). Returns (total_loss, total_weight).
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    # python loop (not lax.scan): keeps HLO cost counts exact for the
+    # roofline; n <= 64 small bodies.
+    loss = jnp.float32(0)
+    weight = jnp.float32(0)
+    for i in range(n):
+        xb = lax.slice_in_dim(x, i * chunk, (i + 1) * chunk, axis=1)
+        tb = lax.slice_in_dim(targets, i * chunk, (i + 1) * chunk, axis=1)
+        mb = lax.slice_in_dim(mask, i * chunk, (i + 1) * chunk, axis=1)
+        logits = jnp.einsum("bsd,vd->bsv", xb, emb.astype(xb.dtype),
+                            preferred_element_type=jnp.float32)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mb
+        loss = loss + nll.sum()
+        weight = weight + mb.sum()
+    return loss, weight

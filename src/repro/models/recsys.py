@@ -1,0 +1,310 @@
+"""The four assigned recsys architectures, pure JAX.
+
+All share the sharded mega-table embedding substrate (models/embedding.py).
+  * deepfm   — FM second-order + deep MLP                 [arXiv:1703.04247]
+  * xdeepfm  — Compressed Interaction Network + MLP       [arXiv:1803.05170]
+  * dien     — GRU interest extraction + AUGRU evolution  [arXiv:1809.03672]
+  * two_tower— dual MLP towers + dot, in-batch softmax    [Yi et al. RecSys'19]
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.embedding import embedding_bag, field_lookup, mega_table_init
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def _first_order_init(key, rows):
+    return (jax.random.normal(key, (rows, 1), jnp.float32) * 0.01)
+
+
+def bce_with_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# --------------------------------------------------------------------------
+# DeepFM
+# --------------------------------------------------------------------------
+
+def deepfm_init(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    rows = cfg.n_sparse * cfg.vocab_per_field
+    in_dim = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "table": mega_table_init(k1, cfg.n_sparse, cfg.vocab_per_field,
+                                 cfg.embed_dim, dtype),
+        "fo_table": _first_order_init(k2, rows),
+        "mlp": L.mlp_init(k3, cfg.mlp + (1,), dtype, in_dim),
+        "dense_w": L.normal_init(k4, (cfg.n_dense, 1), dtype, stddev=0.01),
+    }
+
+
+def deepfm_forward(params, batch, cfg):
+    """batch: sparse_ids (B, F) int32, dense (B, n_dense) f32."""
+    ids, dense = batch["sparse_ids"], batch["dense"]
+    emb = field_lookup(params["table"], ids, cfg.vocab_per_field)  # (B, F, D)
+    # FM second order: 0.5 * ((sum_f v)^2 - sum_f v^2)
+    s = emb.sum(axis=1)
+    fm2 = 0.5 * (jnp.square(s) - jnp.square(emb).sum(axis=1)).sum(axis=-1)
+    # first order
+    offsets = jnp.arange(cfg.n_sparse, dtype=ids.dtype) * cfg.vocab_per_field
+    fo = jnp.take(params["fo_table"], (ids % cfg.vocab_per_field) + offsets,
+                  axis=0)[..., 0].sum(axis=1)
+    fo = fo + (dense @ params["dense_w"])[:, 0]
+    # deep
+    deep_in = jnp.concatenate([emb.reshape(ids.shape[0], -1), dense], axis=-1)
+    deep = L.mlp_apply(params["mlp"], deep_in)[:, 0]
+    return fm2 + fo + deep
+
+
+# --------------------------------------------------------------------------
+# xDeepFM — Compressed Interaction Network
+# --------------------------------------------------------------------------
+
+def xdeepfm_init(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 6 + len(cfg.cin_layers))
+    rows = cfg.n_sparse * cfg.vocab_per_field
+    in_dim = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    cin = []
+    prev_h = cfg.n_sparse
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append({"w": L.normal_init(keys[4 + i], (h, prev_h, cfg.n_sparse),
+                                       dtype, stddev=0.1)})
+        prev_h = h
+    return {
+        "table": mega_table_init(keys[0], cfg.n_sparse, cfg.vocab_per_field,
+                                 cfg.embed_dim, dtype),
+        "fo_table": _first_order_init(keys[1], rows),
+        "mlp": L.mlp_init(keys[2], cfg.mlp + (1,), dtype, in_dim),
+        "dense_w": L.normal_init(keys[3], (cfg.n_dense, 1), dtype, stddev=0.01),
+        "cin": cin,
+        "cin_out": L.normal_init(keys[-1], (sum(cfg.cin_layers), 1), dtype,
+                                 stddev=0.1),
+    }
+
+
+def xdeepfm_forward(params, batch, cfg):
+    ids, dense = batch["sparse_ids"], batch["dense"]
+    B = ids.shape[0]
+    x0 = field_lookup(params["table"], ids, cfg.vocab_per_field)  # (B, F, D)
+    xk = x0
+    pooled = []
+    for layer in params["cin"]:
+        # z: (B, Hk, F, D) outer interactions; compress with (H', Hk, F)
+        z = jnp.einsum("bhd,bfd->bhfd", xk, x0)
+        xk = jnp.einsum("bhfd,ohf->bod", z, layer["w"])
+        pooled.append(xk.sum(axis=-1))  # (B, H')
+    cin_logit = (jnp.concatenate(pooled, axis=-1) @ params["cin_out"])[:, 0]
+    offsets = jnp.arange(cfg.n_sparse, dtype=ids.dtype) * cfg.vocab_per_field
+    fo = jnp.take(params["fo_table"], (ids % cfg.vocab_per_field) + offsets,
+                  axis=0)[..., 0].sum(axis=1)
+    fo = fo + (dense @ params["dense_w"])[:, 0]
+    deep_in = jnp.concatenate([x0.reshape(B, -1), dense], axis=-1)
+    deep = L.mlp_apply(params["mlp"], deep_in)[:, 0]
+    return cin_logit + fo + deep
+
+
+# --------------------------------------------------------------------------
+# DIEN — GRU + attentional AUGRU over the behaviour sequence
+# --------------------------------------------------------------------------
+
+def _gru_init(key, in_dim, hid, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wz": L.normal_init(k1, (in_dim + hid, hid), dtype),
+        "wr": L.normal_init(k2, (in_dim + hid, hid), dtype),
+        "wh": L.normal_init(k3, (in_dim + hid, hid), dtype),
+        "bz": jnp.zeros((hid,), dtype), "br": jnp.zeros((hid,), dtype),
+        "bh": jnp.zeros((hid,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xh2 = jnp.concatenate([x, r * h], axis=-1)
+    h_tilde = jnp.tanh(xh2 @ p["wh"] + p["bh"])
+    if att is not None:  # AUGRU: attentional update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * h_tilde
+
+
+def _gru_run(p, xs, mask, cfg, att=None, last_only=False):
+    """(A)UGRU over time. cfg.scan_gru=True uses lax.scan (compact HLO);
+    False python-unrolls (exact cost counts for the dry-run extrapolation,
+    same scheme as the LM layer scan — EXPERIMENTS.md §Dry-run)."""
+    B, T, _ = xs.shape
+    h0 = jnp.zeros((B, cfg.gru_dim), xs.dtype)
+    if cfg.scan_gru:
+        def step(h, xam):
+            x, a, m = xam
+            h_new = _gru_cell(p, h, x, att=a if att is not None else None)
+            h = jnp.where(m[:, None] > 0, h_new, h)
+            return h, h
+
+        a_seq = jnp.moveaxis(att, 1, 0) if att is not None \
+            else jnp.zeros((T, B), xs.dtype)
+        h, hs = lax.scan(step, h0, (jnp.moveaxis(xs, 1, 0), a_seq,
+                                    jnp.moveaxis(mask, 1, 0)))
+        return h if last_only else jnp.moveaxis(hs, 0, 1)
+    h = h0
+    hs = []
+    for t in range(T):
+        h_new = _gru_cell(p, h, xs[:, t],
+                          att=att[:, t] if att is not None else None)
+        h = jnp.where(mask[:, t][:, None] > 0, h_new, h)
+        hs.append(h)
+    return h if last_only else jnp.stack(hs, axis=1)
+
+
+def dien_init(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    item_dim = 2 * cfg.embed_dim  # item + category embeddings, concatenated
+    final_in = cfg.gru_dim + item_dim + cfg.n_sparse * cfg.embed_dim
+    return {
+        "item_table": mega_table_init(keys[0], 2, cfg.vocab_per_field,
+                                      cfg.embed_dim, dtype),
+        "profile_table": mega_table_init(keys[1], cfg.n_sparse,
+                                         cfg.vocab_per_field, cfg.embed_dim, dtype),
+        "gru1": _gru_init(keys[2], item_dim, cfg.gru_dim, dtype),
+        "augru": _gru_init(keys[3], cfg.gru_dim, cfg.gru_dim, dtype),
+        "att_w": L.normal_init(keys[4], (cfg.gru_dim, item_dim), dtype),
+        "mlp": L.mlp_init(keys[5], cfg.mlp + (1,), dtype, final_in),
+    }
+
+
+def _dien_embed_items(params, item_ids, cat_ids, cfg):
+    both = jnp.stack([item_ids, cat_ids], axis=-1)  # (..., 2)
+    vecs = field_lookup(params["item_table"], both.reshape(-1, 2),
+                        cfg.vocab_per_field)
+    return vecs.reshape(*both.shape[:-1], 2 * cfg.embed_dim)
+
+
+def dien_forward(params, batch, cfg):
+    """batch: hist_items/hist_cats (B, T), hist_mask (B, T),
+    target_item/target_cat (B,), profile_ids (B, F)."""
+    hist = _dien_embed_items(params, batch["hist_items"], batch["hist_cats"], cfg)
+    target = _dien_embed_items(params, batch["target_item"][:, None],
+                               batch["target_cat"][:, None], cfg)[:, 0]
+    mask = batch["hist_mask"].astype(jnp.float32)
+    B, T, _ = hist.shape
+
+    # interest extraction GRU over the behaviour sequence
+    interests = _gru_run(params["gru1"], hist, mask, cfg)  # (B, T, gru)
+
+    # attention of target on interests (bilinear), masked softmax
+    scores = jnp.einsum("btg,gd,bd->bt", interests, params["att_w"], target)
+    scores = jnp.where(mask > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1) * (mask.sum(-1, keepdims=True) > 0)
+
+    # interest evolution AUGRU
+    h_final = _gru_run(params["augru"], interests, mask, cfg, att=att,
+                       last_only=True)
+
+    profile = field_lookup(params["profile_table"], batch["profile_ids"],
+                           cfg.vocab_per_field).reshape(B, -1)
+    mlp_in = jnp.concatenate([h_final, target, profile], axis=-1)
+    return L.mlp_apply(params["mlp"], mlp_in)[:, 0]
+
+
+def dien_aux_loss(params, batch, cfg):
+    """DIEN auxiliary loss: the GRU1 interest at step t should predict the
+    t+1-th behaviour against a negative sample (here: shifted negatives)."""
+    hist = _dien_embed_items(params, batch["hist_items"], batch["hist_cats"], cfg)
+    mask = batch["hist_mask"].astype(jnp.float32)
+    B, T, _ = hist.shape
+    interests = _gru_run(params["gru1"], hist, mask, cfg)
+    pos = jnp.einsum("btg,gd,btd->bt", interests[:, :-1], params["att_w"],
+                     hist[:, 1:])
+    neg = jnp.einsum("btg,gd,btd->bt", interests[:, :-1], params["att_w"],
+                     jnp.roll(hist[:, 1:], 1, axis=0))
+    m = mask[:, 1:]
+    loss = -(jax.nn.log_sigmoid(pos) + jax.nn.log_sigmoid(-neg)) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Two-tower retrieval
+# --------------------------------------------------------------------------
+
+def two_tower_init(key, cfg):
+    dtype = L.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    feat_dim = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "user_table": mega_table_init(keys[0], 1, cfg.user_vocab, cfg.embed_dim,
+                                      dtype),
+        "item_table": mega_table_init(keys[1], 1, cfg.item_vocab, cfg.embed_dim,
+                                      dtype),
+        "user_feat_table": mega_table_init(keys[2], cfg.n_sparse,
+                                           cfg.vocab_per_field, cfg.embed_dim, dtype),
+        "item_feat_table": mega_table_init(keys[3], cfg.n_sparse,
+                                           cfg.vocab_per_field, cfg.embed_dim, dtype),
+        "user_mlp": L.mlp_init(keys[4], cfg.tower_mlp, dtype,
+                               cfg.embed_dim + feat_dim),
+        "item_mlp": L.mlp_init(keys[5], cfg.tower_mlp, dtype,
+                               cfg.embed_dim + feat_dim),
+    }
+
+
+def _tower(table, feat_table, mlp, ids, feat_ids, dense, cfg):
+    B = ids.shape[0]
+    id_emb = jnp.take(table, ids % table.shape[0], axis=0)
+    feats = embedding_bag(feat_table, feat_ids, cfg.vocab_per_field)
+    x = jnp.concatenate([id_emb, feats.reshape(B, -1), dense], axis=-1)
+    x = L.mlp_apply(mlp, x)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def user_tower(params, batch, cfg):
+    return _tower(params["user_table"], params["user_feat_table"],
+                  params["user_mlp"], batch["user_ids"], batch["user_feat_ids"],
+                  batch["user_dense"], cfg)
+
+
+def item_tower(params, batch, cfg):
+    return _tower(params["item_table"], params["item_feat_table"],
+                  params["item_mlp"], batch["item_ids"], batch["item_feat_ids"],
+                  batch["item_dense"], cfg)
+
+
+def two_tower_inbatch_loss(params, batch, cfg, temperature=0.05):
+    """In-batch sampled softmax with logQ correction (Yi et al. 2019)."""
+    u = user_tower(params, batch, cfg)  # (B, D)
+    i = item_tower(params, batch, cfg)  # (B, D)
+    logits = (u @ i.T) / temperature
+    logq = jnp.log(jnp.maximum(batch["item_freq"], 1e-9))  # sampling prob est.
+    logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    return jnp.mean(-jax.nn.log_softmax(logits, axis=-1)[labels, labels])
+
+
+def retrieval_scores(params, batch, cfg, top_k=100):
+    """Score one user against a precomputed candidate matrix (the serving
+    path: candidates are offline tower outputs). batch['candidates']:
+    (N, D)."""
+    u = user_tower(params, batch, cfg)  # (1, D)
+    scores = (batch["candidates"] @ u[0]).astype(jnp.float32)  # (N,)
+    return lax.top_k(scores, top_k)
+
+
+MODEL_FNS = {
+    "deepfm": (deepfm_init, deepfm_forward),
+    "xdeepfm": (xdeepfm_init, xdeepfm_forward),
+    "dien": (dien_init, dien_forward),
+    "two_tower": (two_tower_init, None),
+}

@@ -1,0 +1,56 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for DCN-limited cross-pod all-reduces).
+
+Per-tensor symmetric int8 quantization; the quantization residual is kept
+locally and added to the next step's gradient (error feedback, Seide et
+al. / Karimireddy et al.), which restores convergence to uncompressed
+rates. Used by the train driver for the cross-pod gradient reduction —
+within a pod gradients stay bf16/f32 over ICI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_grads(grads, error_state):
+    """Returns (quantized pytree of (q, scale), new_error_state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return (q, scale), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return comp, new_err
+
+
+def decompress_grads(comp):
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize_int8(*qs), comp,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and not isinstance(x[0], (dict, list)))
+
+
+def compressed_bytes(comp) -> int:
+    leaves = jax.tree_util.tree_leaves(comp)
+    return sum(x.size * x.dtype.itemsize for x in leaves)

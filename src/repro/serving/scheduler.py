@@ -1,0 +1,104 @@
+"""Batched request scheduler: continuous-batching-lite for the decode loop.
+
+Fixed B decode slots; finished/empty slots are refilled from the queue at
+step boundaries (slot admission = prefill of one request into the shared
+KV cache at its slot row). This is the standard serving shape on TPU
+pods: decode runs as a fixed-shape SPMD step, admission happens between
+steps, so XLA never recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class DecodeScheduler:
+    cfg: object
+    params: object
+    mi: object
+    slots: int
+    max_len: int
+    queue: list = field(default_factory=list)
+    active: dict = field(default_factory=dict)  # slot -> Request
+    _caches: object = None
+    _lengths: object = None
+    _last: object = None
+
+    def __post_init__(self):
+        from repro.models import transformer as TF
+        cfg = self.cfg
+        shape = (cfg.n_layers, self.slots, self.max_len, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self._caches = (jnp.zeros(shape, jnp.bfloat16),
+                        jnp.zeros(shape, jnp.bfloat16))
+        self._lengths = jnp.zeros((self.slots,), jnp.int32)
+        self._last = jnp.zeros((self.slots,), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, l, t: TF.decode_step(p, c, l, t, cfg, self.mi))
+        # single-request prefill, padded to max_len, written into one slot
+        self._prefill = jax.jit(
+            lambda p, t: TF.prefill(p, t, cfg, self.mi, pad_to=self.max_len))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+            caches, logits = self._prefill(self.params, prompt)
+            k, v = self._caches
+            pk, pv = caches
+            k = k.at[:, slot].set(pk[:, 0])
+            v = v.at[:, slot].set(pv[:, 0])
+            self._caches = (k, v)
+            self._lengths = self._lengths.at[slot].set(len(req.prompt))
+            first = int(jnp.argmax(logits[0]))
+            req.generated.append(first)
+            self._last = self._last.at[slot].set(first)
+            self.active[slot] = req
+
+    def step(self):
+        """One decode step over all active slots; returns finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        self._caches, logits = self._decode(self.params, self._caches,
+                                            self._lengths, self._last)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._lengths = self._lengths + jnp.asarray(
+            [1 if s in self.active else 0 for s in range(self.slots)],
+            jnp.int32)
+        self._last = nxt
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(nxt[slot]))
+            if len(req.generated) >= req.max_new \
+                    or int(self._lengths[slot]) >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        out = []
+        for _ in range(max_steps):
+            out += self.step()
+            if not self.active and not self.queue:
+                break
+        return out

@@ -1,0 +1,334 @@
+"""Step factories: per family, build the jitted train/serve step the
+launcher and the dry-run lower onto the production mesh.
+
+Every factory returns (step_fn, make_abstract_args, in_specs, out_specs)
+where specs are PartitionSpec pytrees over the given mesh. Abstract args
+are ShapeDtypeStructs — the dry-run never allocates the full models.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import nequip as NQ
+from repro.models import recsys as RS
+from repro.models import transformer as TF
+from repro.models.transformer import MeshInfo
+from repro.optim import adamw
+
+
+def _mesh_info(mesh) -> MeshInfo:
+    if mesh is None:
+        return MeshInfo()
+    return MeshInfo(mesh=mesh, dp_axes=shd.dp_axes(mesh), model_axis="model")
+
+
+def _named(mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+
+def lm_abstract_state(cfg, mesh, serve: bool = False):
+    params = jax.eval_shape(functools.partial(TF.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params, "lm", serve=serve)
+    opt = jax.eval_shape(adamw.init, params)
+    ospecs = adamw.AdamWState(m=pspecs, v=pspecs, count=P())
+    return params, pspecs, opt, ospecs
+
+
+def make_lm_train_step(cfg, mesh, lr: float = 3e-4, n_microbatch: int = 1):
+    """n_microbatch > 1: gradient accumulation — splits the batch along
+    dim0 and scans, dividing the live activation set by n_microbatch
+    (needed to fit train_4k's 65k tokens/device under 16 GB HBM with
+    remat; EXPERIMENTS.md §Dry-run memory note). Grads are the exact
+    mean over microbatches (tests/test_training.py)."""
+    mi = _mesh_info(mesh)
+
+    def loss_fn(p, b):
+        return TF.forward_train(p, b, cfg, mi)
+
+    def train_step(params, opt_state, batch, step):
+        if n_microbatch == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % n_microbatch == 0, (B, n_microbatch)
+            mb = {k: v.reshape(n_microbatch, B // n_microbatch, *v.shape[1:])
+                  for k, v in batch.items()}
+
+            def micro(carry, b):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                micro, (g0, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / n_microbatch, grads)
+            loss = loss / n_microbatch
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        new_params, new_opt, om = adamw.update(params, grads, opt_state,
+                                               lr=lr)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def lm_batch_specs(cfg, shape, mesh):
+    dp = shd.dp_spec(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    specs = {k: P(dp, None) for k in batch}
+    if cfg.fused_patches:
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.fused_patches, cfg.patch_dim), jnp.bfloat16)
+        specs["patches"] = P(dp, None, None)
+    return batch, specs
+
+
+def make_lm_prefill(cfg, mesh, pad_to=None):
+    mi = _mesh_info(mesh)
+
+    def prefill_step(params, batch):
+        return TF.prefill(params, batch["tokens"], cfg, mi,
+                          patches=batch.get("patches"), pad_to=pad_to)
+
+    return prefill_step
+
+
+def make_lm_decode(cfg, mesh):
+    mi = _mesh_info(mesh)
+
+    def decode_step(params, caches, lengths, last_tokens):
+        return TF.decode_step(params, caches, lengths, last_tokens, cfg, mi)
+
+    return decode_step
+
+
+def lm_cache_abstract(cfg, shape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    dp = shd.dp_spec(mesh)
+    spec = P(None, dp, "model", None, None)
+    return (kv, kv), (spec, spec)
+
+
+# --------------------------------------------------------------------------
+# GNN (NequIP)
+# --------------------------------------------------------------------------
+
+def gnn_abstract_batch(cfg, shape, mesh, multi=1):
+    """Padded graph tensors. Nodes shard over dp, edges over the full mesh."""
+    dp = shd.dp_spec(mesh)
+    full = P((*shd.dp_axes(mesh), "model"))
+    n_dev = mesh.devices.size
+    dp_size = n_dev // mesh.shape["model"]
+
+    def pad(x, m):
+        return -(-x // m) * m
+
+    if shape.name == "minibatch_lg":
+        n_seed = shape.batch_nodes
+        f1, f2 = shape.fanout
+        nodes = pad(n_seed * (1 + f1 + f1 * f2), dp_size)
+        edges = pad(n_seed * f1 + n_seed * f1 * f2, n_dev)
+        d_feat, n_graphs = 602, 1
+    elif shape.name == "molecule":
+        nodes = pad(shape.n_nodes * shape.graph_batch, dp_size)
+        edges = pad(shape.n_edges * shape.graph_batch, n_dev)
+        d_feat, n_graphs = 0, shape.graph_batch
+    else:
+        nodes = pad(shape.n_nodes, dp_size)
+        edges = pad(shape.n_edges, n_dev)
+        d_feat, n_graphs = shape.d_feat, 1
+
+    batch = {
+        "positions": jax.ShapeDtypeStruct((nodes, 3), jnp.float32),
+        "species": jax.ShapeDtypeStruct((nodes,), jnp.int32),
+        "edge_src": jax.ShapeDtypeStruct((edges,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((edges,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((edges,), jnp.float32),
+        "node_mask": jax.ShapeDtypeStruct((nodes,), jnp.float32),
+        "graph_ids": jax.ShapeDtypeStruct((nodes,), jnp.int32),
+    }
+    specs = {
+        "positions": P(dp, None), "species": P(dp), "edge_src": full,
+        "edge_dst": full, "edge_mask": full, "node_mask": P(dp),
+        "graph_ids": P(dp),
+    }
+    task = "energy_forces" if shape.name == "molecule" else "node_class"
+    if task == "energy_forces":
+        batch["energies"] = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        batch["forces"] = jax.ShapeDtypeStruct((nodes, 3), jnp.float32)
+        specs["energies"] = P()
+        specs["forces"] = P(dp, None)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((nodes,), jnp.int32)
+        specs["labels"] = P(dp)
+        if d_feat:
+            batch["node_feats"] = jax.ShapeDtypeStruct((nodes, d_feat),
+                                                       jnp.float32)
+            specs["node_feats"] = P(dp, None)
+    return batch, specs, task, n_graphs, d_feat
+
+
+def make_gnn_train_step(cfg, mesh, task, n_graphs, lr=1e-3):
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return NQ.nequip_loss(p, batch, cfg, task, n_graphs)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw.update(params, grads, opt_state, lr=lr)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def gnn_abstract_state(cfg, mesh):
+    params = jax.eval_shape(functools.partial(NQ.nequip_init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params, "gnn")
+    opt = jax.eval_shape(adamw.init, params)
+    ospecs = adamw.AdamWState(m=pspecs, v=pspecs, count=P())
+    return params, pspecs, opt, ospecs
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+
+def recsys_abstract_state(cfg, mesh):
+    init = RS.MODEL_FNS[cfg.model][0]
+    params = jax.eval_shape(functools.partial(init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params, "recsys")
+    opt = jax.eval_shape(adamw.init, params)
+    ospecs = adamw.AdamWState(m=pspecs, v=pspecs, count=P())
+    return params, pspecs, opt, ospecs
+
+
+def recsys_abstract_batch(cfg, shape, mesh):
+    dp = shd.dp_spec(mesh)
+    n_dev = mesh.devices.size
+    dp_size = n_dev // mesh.shape["model"]
+    B = shape.batch
+    if shape.kind == "recsys_retrieval":
+        B = max(shape.n_candidates, 1)
+        B = -(-B // n_dev) * n_dev  # pad 1e6 -> divisible by the full mesh
+    assert B % dp_size == 0, (B, dp_size)
+
+    if cfg.model in ("deepfm", "xdeepfm"):
+        batch = {
+            "sparse_ids": jax.ShapeDtypeStruct((B, cfg.n_sparse), jnp.int32),
+            "dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        specs = {"sparse_ids": P(dp, None), "dense": P(dp, None),
+                 "labels": P(dp)}
+    elif cfg.model == "dien":
+        T = cfg.seq_len
+        batch = {
+            "hist_items": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "hist_cats": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((B, T), jnp.float32),
+            "target_item": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "target_cat": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "profile_ids": jax.ShapeDtypeStruct((B, cfg.n_sparse), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        specs = {k: (P(dp, None) if v.ndim == 2 else P(dp))
+                 for k, v in batch.items()}
+    else:  # two_tower
+        M = cfg.multi_hot_max
+        batch = {
+            "user_ids": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "item_ids": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "user_feat_ids": jax.ShapeDtypeStruct((B, cfg.n_sparse, M),
+                                                  jnp.int32),
+            "item_feat_ids": jax.ShapeDtypeStruct((B, cfg.n_sparse, M),
+                                                  jnp.int32),
+            "user_dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+            "item_dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+            "item_freq": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        specs = {k: P(dp, *([None] * (v.ndim - 1)))
+                 for k, v in batch.items()}
+    return batch, specs
+
+
+def make_recsys_train_step(cfg, mesh, lr=1e-3):
+    fwd = RS.MODEL_FNS[cfg.model][1]
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            if cfg.model == "two_tower":
+                loss = RS.two_tower_inbatch_loss(p, batch, cfg)
+            elif cfg.model == "dien":
+                logits = fwd(p, batch, cfg)
+                loss = RS.bce_with_logits(logits, batch["labels"]) \
+                    + 0.5 * RS.dien_aux_loss(p, batch, cfg)
+            else:
+                logits = fwd(p, batch, cfg)
+                loss = RS.bce_with_logits(logits, batch["labels"])
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, om = adamw.update(params, grads, opt_state, lr=lr)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_recsys_serve_step(cfg, mesh):
+    fwd = RS.MODEL_FNS[cfg.model][1]
+
+    def serve_step(params, batch):
+        if cfg.model == "two_tower":
+            u = RS.user_tower(params, batch, cfg)
+            i = RS.item_tower(params, batch, cfg)
+            return jnp.einsum("bd,bd->b", u, i)
+        return jax.nn.sigmoid(fwd(params, batch, cfg))
+
+    return serve_step
+
+
+def make_two_tower_retrieval_step(cfg, mesh, top_k=100):
+    def retrieve(params, batch):
+        return RS.retrieval_scores(params, batch, cfg, top_k=top_k)
+
+    return retrieve
+
+
+def two_tower_retrieval_batch(cfg, shape, mesh):
+    dp = shd.dp_spec(mesh)
+    n_dev = mesh.devices.size
+    N = -(-shape.n_candidates // n_dev) * n_dev
+    M = cfg.multi_hot_max
+    batch = {
+        "user_ids": jax.ShapeDtypeStruct((1,), jnp.int32),
+        "user_feat_ids": jax.ShapeDtypeStruct((1, cfg.n_sparse, M), jnp.int32),
+        "user_dense": jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+        "candidates": jax.ShapeDtypeStruct((N, cfg.tower_mlp[-1]),
+                                           jnp.float32),
+    }
+    specs = {"user_ids": P(), "user_feat_ids": P(None, None, None),
+             "user_dense": P(None, None),
+             "candidates": P((*shd.dp_axes(mesh), "model"), None)}
+    return batch, specs

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device (the dry-run sets its own 512-device env in a subprocess).
+Multi-device distribution tests run via subprocess (tests/test_distributed.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,73 @@
+"""The paper's Table 1 reproduction: calibration quality + every
+qualitative claim from §3/§4 of the paper."""
+import numpy as np
+import pytest
+
+from repro.core import envelope as env
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    return env.calibrate()
+
+
+def test_fit_quality(calibrated):
+    _, _, table = calibrated
+    errs = [abs(v["err"]) for v in table.values()]
+    assert np.mean(errs) < 0.15, f"mean |err| {np.mean(errs):.1%}"
+    assert np.max(errs) < 0.30, f"max |err| {np.max(errs):.1%}"
+
+
+def test_claim_media_spread_3x(calibrated):
+    """Paper: 'maximum difference is roughly a factor of three'."""
+    _, _, table = calibrated
+    c9 = [v["pred"] for k, v in table.items() if k[2] == "CW09b"]
+    assert 2.0 < max(c9) / min(c9) < 3.5
+
+
+def test_claim_write_bound_on_ssd(calibrated):
+    """Paper: SSD writes (~500 MB/s SATA ceiling) are the bottleneck, so
+    the source medium hardly matters when the target is the SSD."""
+    media, p, table = calibrated
+    for src in ("ceph", "xfs"):
+        assert table[(src, "ssd", "CW09b")]["bound"] == "write"
+    # implied sustained write rate ~0.5 GB/s
+    t = table[("xfs", "ssd", "CW09b")]["pred"]
+    implied = env.CW09B.index_gb * p.alpha / t
+    assert 0.4 < implied < 0.65
+
+
+def test_claim_zfs_slower_target_than_xfs(calibrated):
+    """Paper: XFS ~40% faster than ZFS as indexing target."""
+    media, p, table = calibrated
+    ratio = table[("ceph", "zfs", "CW09b")]["pred"] \
+        / table[("ceph", "xfs", "CW09b")]["pred"]
+    assert 1.2 < ratio < 1.7
+    assert media["xfs"].write_bw > media["zfs"].write_bw
+
+
+def test_claim_isolation_beats_sharing(calibrated):
+    """Paper: SSD->SSD is slower than Ceph->SSD / XFS->SSD (controller
+    splits bandwidth between reads and writes)."""
+    _, _, table = calibrated
+    shared = table[("ssd", "ssd", "CW09b")]["pred"]
+    assert shared > table[("ceph", "ssd", "CW09b")]["pred"]
+    assert shared > table[("xfs", "ssd", "CW09b")]["pred"]
+    assert table[("ssd", "ssd", "CW09b")]["bound"] == "shared-io"
+
+
+def test_claim_amplification_plausible(calibrated):
+    """Fitted merge amplification must sit in the hierarchical-merge range
+    (every byte written at flush + rewritten ~1-2x by tiered merges)."""
+    _, p, _ = calibrated
+    assert 2.0 < p.alpha < 3.5
+
+
+def test_envelope_monotonic_in_bandwidth():
+    p = env.EnvelopeParams()
+    base = env.predict("ceph", "ssd", env.CW09B, p=p)["total"]
+    from dataclasses import replace
+    faster = dict(env.MEDIA)
+    faster["ssd"] = replace(env.MEDIA["ssd"], write_bw=1.0)
+    t2 = env.predict("ceph", "ssd", env.CW09B, media=faster, p=p)["total"]
+    assert t2 <= base

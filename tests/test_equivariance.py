@@ -1,0 +1,83 @@
+"""E(3) machinery: CG tensors, Wigner matrices, full-model equivariance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models import nequip as NQ
+from repro.models.equivariant import (_rand_rotations, cg_tensor, sh_np,
+                                      tp_paths, wigner_d)
+
+
+def test_cg_paths_complete():
+    paths = tp_paths(2)
+    assert (1, 1, 1) in paths and (2, 2, 2) in paths
+    assert (0, 0, 1) not in paths  # triangle rule
+    assert len(paths) == 15
+
+
+@pytest.mark.parametrize("l1,l2,l3", tp_paths(2))
+def test_cg_equivariance(l1, l2, l3):
+    rng = np.random.default_rng(l1 * 9 + l2 * 3 + l3)
+    Q = cg_tensor(l1, l2, l3)
+    for seed in (1, 2):
+        R = _rand_rotations(1, seed=seed)[0]
+        D1, D2, D3 = wigner_d(R, l1), wigner_d(R, l2), wigner_d(R, l3)
+        u = rng.normal(size=2 * l1 + 1)
+        v = rng.normal(size=2 * l2 + 1)
+        lhs = np.einsum("abc,a,b->c", Q, D1 @ u, D2 @ v)
+        rhs = D3 @ np.einsum("abc,a,b->c", Q, u, v)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-9)
+
+
+def test_wigner_consistency():
+    rng = np.random.default_rng(0)
+    n = rng.normal(size=(7, 3))
+    n /= np.linalg.norm(n, axis=-1, keepdims=True)
+    R = _rand_rotations(1, seed=3)[0]
+    for l in range(3):
+        D = wigner_d(R, l)
+        np.testing.assert_allclose(sh_np(n @ R.T, l), sh_np(n, l) @ D.T,
+                                   atol=1e-9)
+        # orthogonality
+        np.testing.assert_allclose(D @ D.T, np.eye(2 * l + 1), atol=1e-9)
+
+
+def test_nequip_model_equivariance():
+    cfg = get_arch("nequip").smoke
+    key = jax.random.PRNGKey(0)
+    params = NQ.nequip_init(key, cfg)
+    N, E, G = 40, 96, 2
+    rng = np.random.default_rng(1)
+    batch = {
+        "positions": jnp.asarray(rng.normal(size=(N, 3)) * 2, jnp.float32),
+        "species": jnp.asarray(rng.integers(0, cfg.n_species, N), jnp.int32),
+        "edge_src": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "edge_mask": jnp.ones((E,)),
+        "graph_ids": jnp.repeat(jnp.arange(G), N // G),
+        "node_mask": jnp.ones((N,)),
+    }
+    R = jnp.asarray(_rand_rotations(1, seed=5)[0], jnp.float32)
+    t = jnp.asarray([1.5, -2.0, 0.3])
+    e1, f1 = NQ.nequip_energy_forces(params, batch, cfg, G)
+    # rotation + translation
+    b2 = {**batch, "positions": batch["positions"] @ R.T + t}
+    e2, f2 = NQ.nequip_energy_forces(params, b2, cfg, G)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1 @ R.T), np.asarray(f2), rtol=1e-3, atol=1e-3)
+    # permutation invariance of total energy
+    perm = np.asarray(rng.permutation(N))
+    inv = np.argsort(perm)
+    b3 = {**batch,
+          "positions": batch["positions"][perm],
+          "species": batch["species"][perm],
+          "graph_ids": batch["graph_ids"][perm],
+          "node_mask": batch["node_mask"][perm],
+          "edge_src": jnp.asarray(inv)[batch["edge_src"]],
+          "edge_dst": jnp.asarray(inv)[batch["edge_dst"]]}
+    e3, _ = NQ.nequip_energy_forces(params, b3, cfg, G)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e3), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,133 @@
+"""Inversion correctness: device pipeline vs a trusted numpy oracle, plus
+hypothesis properties (the index is a lossless transform of the corpus)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.invert import invert_shard, doc_vectors
+from repro.core.segments import segment_from_run
+from repro.core.merge import merge_segments, MergeDriver
+
+
+def oracle_postings(tokens, base):
+    po = {}
+    for d in range(tokens.shape[0]):
+        for p, t in enumerate(tokens[d]):
+            if t > 0:
+                po.setdefault(int(t), {}).setdefault(d + base, []).append(p)
+    return po
+
+
+def run_np(run):
+    return {k: np.asarray(getattr(run, k)) for k in run._fields}
+
+
+def check_run_against_oracle(run, po):
+    n_terms, n_postings = int(run.n_terms), int(run.n_postings)
+    assert n_terms == len(po)
+    terms = np.asarray(run.terms_unique)[:n_terms]
+    assert list(terms) == sorted(po)
+    ts = np.asarray(run.term_start)
+    dd = np.asarray(run.postings_doc_delta)
+    tf = np.asarray(run.postings_tf)
+    pd = np.asarray(run.pos_delta)
+    k = 0
+    for ti, t in enumerate(sorted(po)):
+        s = ts[ti]
+        e = ts[ti + 1] if ti + 1 < n_terms else n_postings
+        docs = sorted(po[t])
+        assert e - s == len(docs)
+        cur = -1
+        for j, d in enumerate(docs):
+            cur = dd[s + j] - 1 if j == 0 else cur + dd[s + j]
+            assert cur == d
+            assert tf[s + j] == len(po[t][d])
+    # position stream decodes to the exact original positions
+    for t in sorted(po):
+        for d in sorted(po[t]):
+            prev = None
+            for p in po[t][d]:
+                got = pd[k] - 1 if prev is None else prev + pd[k]
+                k += 1
+                assert got == p
+                prev = got
+
+
+def test_invert_matches_oracle(rng):
+    tokens = rng.integers(0, 50, size=(8, 32)).astype(np.int32)
+    run = jax.jit(lambda t: invert_shard(t, 100))(jnp.asarray(tokens))
+    check_run_against_oracle(run, oracle_postings(tokens, 100))
+
+
+def test_invert_all_padding():
+    tokens = np.zeros((4, 16), np.int32)
+    run = invert_shard(jnp.asarray(tokens), 0)
+    assert int(run.n_terms) == int(run.n_postings) == int(run.n_entries) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 24), st.integers(2, 40),
+       st.integers(0, 10000))
+def test_invert_property(D, L, V, seed):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, V, size=(D, L)).astype(np.int32)
+    run = invert_shard(jnp.asarray(tokens), seed % 97)
+    po = oracle_postings(tokens, seed % 97)
+    check_run_against_oracle(run, po)
+    # conservation: every non-pad token accounted exactly once
+    assert int(run.n_entries) == int((tokens > 0).sum())
+    assert int(run.n_postings) == sum(len(v) for v in po.values())
+
+
+def test_doc_vectors(rng):
+    tokens = rng.integers(0, 30, size=(6, 20)).astype(np.int32)
+    t2, tf2, nu = jax.jit(doc_vectors)(jnp.asarray(tokens))
+    for d in range(6):
+        cnt = {}
+        for t in tokens[d]:
+            if t > 0:
+                cnt[int(t)] = cnt.get(int(t), 0) + 1
+        n = int(nu[d])
+        assert n == len(cnt)
+        assert list(np.asarray(t2[d])[:n]) == sorted(cnt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5000), st.integers(2, 5))
+def test_merge_equals_union(seed, n_segs):
+    """merge(a, b, ...) must equal index(a | b | ...)."""
+    rng = np.random.default_rng(seed)
+    segs, pos = [], {}
+    for i in range(n_segs):
+        toks = rng.integers(0, 40, size=(4, 16)).astype(np.int32)
+        base = 100 * i
+        run = invert_shard(jnp.asarray(toks), base)
+        segs.append(segment_from_run(run_np(run),
+                                     np.arange(base, base + 4),
+                                     np.asarray(run.doc_len)))
+        for t, dmap in oracle_postings(toks, base).items():
+            pos.setdefault(t, {}).update(dmap)
+    m = merge_segments(segs)
+    assert list(m.terms) == sorted(pos)
+    for ti, t in enumerate(m.terms):
+        s, e = m.term_start[ti], m.term_start[ti + 1]
+        assert list(m.docs[s:e]) == sorted(pos[t])
+        for j, d in enumerate(sorted(pos[t])):
+            ps, pe = m.pos_start[s + j], m.pos_start[s + j + 1]
+            assert list(m.positions[ps:pe]) == pos[t][d]
+
+
+def test_merge_driver_amplification(rng):
+    drv = MergeDriver(fanout=3)
+    for i in range(9):
+        toks = rng.integers(0, 60, size=(4, 24)).astype(np.int32)
+        r = invert_shard(jnp.asarray(toks), 1000 + i * 4)
+        drv.add_flush(segment_from_run(
+            run_np(r), np.arange(1000 + i * 4, 1000 + i * 4 + 4),
+            np.asarray(r.doc_len)))
+    drv.finalize()
+    alpha = drv.amplification()
+    assert alpha > 1.5, "hierarchical merging must rewrite data"
+    assert drv.n_merges >= 4

@@ -1,0 +1,170 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step on CPU, output shapes + finiteness asserts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.data import recsys_data as RD
+from repro.models import nequip as NQ
+from repro.models import recsys as RS
+from repro.models.transformer import (MeshInfo, decode_step, forward_train,
+                                      init_params, prefill)
+
+LM_ARCHS = ["moonshot-v1-16b-a3b", "llama4-scout-17b-a16e", "qwen3-32b",
+            "gemma2-9b", "stablelm-12b"]
+MI = MeshInfo()
+
+
+def _lm_batch(cfg, key, B=2, S=64):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1),
+             "mask": jnp.ones((B, S))}
+    if cfg.fused_patches:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.fused_patches, cfg.patch_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train(arch):
+    cfg = get_arch(arch).smoke
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _lm_batch(cfg, key)
+    loss, metrics = jax.jit(lambda p, b: forward_train(p, b, cfg, MI))(
+        params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: forward_train(p, batch, cfg, MI)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_prefill_decode_consistency(arch):
+    """decode(prefill(x[:-1]), x[-1]) logits == full forward at last pos.
+
+    MoE archs run with a large capacity factor: capacity-based dispatch
+    legitimately drops different assignments at different batch shapes,
+    which is token-dropping semantics, not a bug."""
+    cfg = get_arch(arch).smoke
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, S = 2, 64
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    patches = (jax.random.normal(key, (B, cfg.fused_patches, cfg.patch_dim))
+               if cfg.fused_patches else None)
+    caches, logits_pre = jax.jit(
+        lambda p, t: prefill(p, t, cfg, MI, patches=patches, pad_to=S + 8))(
+        params, tokens[:, :-1] if False else tokens)
+    # feed one decode step with the last prefix token re-supplied
+    caches2, logits_p2 = prefill(params, tokens[:, :-1], cfg, MI,
+                                 patches=patches, pad_to=S + 8)
+    lengths = jnp.full((B,), S - 1, jnp.int32)
+    _, logits_dec = jax.jit(
+        lambda p, c, l, t: decode_step(p, c, l, t, cfg, MI))(
+        params, caches2, lengths, tokens[:, -1])
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_pre), rtol=2e-2, atol=2e-2)
+
+
+def test_nequip_smoke():
+    cfg = get_arch("nequip").smoke
+    key = jax.random.PRNGKey(0)
+    params = NQ.nequip_init(key, cfg)
+    N, E, G = 60, 128, 2
+    batch = {
+        "positions": jax.random.normal(key, (N, 3)) * 2,
+        "species": jax.random.randint(key, (N,), 0, cfg.n_species),
+        "edge_src": jax.random.randint(key, (E,), 0, N),
+        "edge_dst": jax.random.randint(key, (E,), 0, N),
+        "edge_mask": jnp.ones((E,)),
+        "graph_ids": jnp.repeat(jnp.arange(G), N // G),
+        "energies": jnp.zeros((G,)),
+        "forces": jnp.zeros((N, 3)),
+        "node_mask": jnp.ones((N,)),
+    }
+    loss, m = jax.jit(lambda p, b: NQ.nequip_loss(p, b, cfg, "energy_forces",
+                                                  G))(params, batch)
+    assert np.isfinite(float(loss))
+    energy, forces = NQ.nequip_energy_forces(params, batch, cfg, G)
+    assert energy.shape == (G,) and forces.shape == (N, 3)
+    assert np.isfinite(np.asarray(forces)).all()
+
+
+@pytest.mark.parametrize("arch", ["deepfm", "xdeepfm"])
+def test_ctr_smoke(arch):
+    cfg = get_arch(arch).smoke
+    init, fwd = RS.MODEL_FNS[cfg.model]
+    params = init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in RD.ctr_batch(cfg, 16, 0).items()}
+    logits = jax.jit(lambda p, b: fwd(p, b, cfg))(params, batch)
+    assert logits.shape == (16,)
+    loss = RS.bce_with_logits(logits, batch["labels"])
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: RS.bce_with_logits(fwd(p, batch, cfg),
+                                              batch["labels"]))(params)
+    assert np.isfinite(sum(float(jnp.sum(jnp.abs(x)))
+                           for x in jax.tree.leaves(g)))
+
+
+def test_dien_smoke():
+    cfg = get_arch("dien").smoke
+    params = RS.dien_init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in RD.dien_batch(cfg, 8, 0).items()}
+    logits = jax.jit(lambda p, b: RS.dien_forward(p, b, cfg))(params, batch)
+    assert logits.shape == (8,) and np.isfinite(np.asarray(logits)).all()
+    aux = RS.dien_aux_loss(params, batch, cfg)
+    assert np.isfinite(float(aux))
+
+
+def test_two_tower_smoke():
+    cfg = get_arch("two-tower-retrieval").smoke
+    params = RS.two_tower_init(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in RD.two_tower_batch(cfg, 16, 0).items()}
+    loss = jax.jit(lambda p, b: RS.two_tower_inbatch_loss(p, b, cfg))(
+        params, batch)
+    assert np.isfinite(float(loss))
+    q = {"user_ids": batch["user_ids"][:1],
+         "user_feat_ids": batch["user_feat_ids"][:1],
+         "user_dense": batch["user_dense"][:1],
+         "candidates": jax.random.normal(jax.random.PRNGKey(2),
+                                         (1000, cfg.tower_mlp[-1]))}
+    vals, idx = jax.jit(lambda p, b: RS.retrieval_scores(p, b, cfg, 10))(
+        params, q)
+    assert vals.shape == (10,) and bool((np.diff(np.asarray(vals)) <= 1e-6).all())
+
+
+def test_registry_covers_all_archs():
+    assert len(ARCH_IDS) == 11  # 10 assigned + the paper's own pipeline
+    for a in ARCH_IDS:
+        e = get_arch(a)
+        assert e.config.name
+        assert e.shapes, a
+
+
+def test_gemma2_local_global_pattern():
+    from repro.models.transformer import layer_windows
+    cfg = get_arch("gemma2-9b").config
+    w = np.asarray(layer_windows(cfg))
+    assert (w[::2] == cfg.sliding_window).all() and (w[1::2] == 0).all()
+    assert len(w) == 42
+
+
+def test_scan_vs_unrolled_layers_identical():
+    """The dry-run cost-extrapolation variant must compute the same fn."""
+    cfg = get_arch("stablelm-12b").smoke
+    key = jax.random.PRNGKey(3)
+    params = init_params(key, cfg)
+    batch = _lm_batch(cfg, key)
+    l1, _ = forward_train(params, batch, cfg, MI)
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    l2, _ = forward_train(params, batch, cfg_u, MI)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

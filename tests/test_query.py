@@ -1,0 +1,68 @@
+"""BM25 block-max serving: exhaustive == numpy oracle; pruned == exhaustive
+(the safety property of the MaxScore block test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.invert import invert_shard
+from repro.core.merge import merge_segments
+from repro.core.query import (build_block_index, bm25_exhaustive, bm25_topk)
+from repro.core.segments import segment_from_run
+
+
+def bm25_oracle(tokens, q, k1=0.9, b=0.4):
+    D = tokens.shape[0]
+    dl = (tokens > 0).sum(1)
+    avg = max(dl.mean(), 1.0)
+    scores = np.zeros(D)
+    for t in set(int(x) for x in q):
+        df = int(((tokens == t).any(1)).sum())
+        if df == 0:
+            continue
+        idf = np.log(1 + (D - df + 0.5) / (df + 0.5))
+        tf = (tokens == t).sum(1)
+        scores += np.where(
+            tf > 0, idf * tf * (k1 + 1) / (tf + k1 * (1 - b + b * dl / avg)), 0)
+    return scores
+
+
+@pytest.fixture(scope="module")
+def corpus_index():
+    rng = np.random.default_rng(5)
+    D, L, V = 300, 48, 200
+    tokens = (rng.zipf(1.3, size=(D, L)) % V + 1).astype(np.int32)
+    run = invert_shard(jnp.asarray(tokens), 0)
+    seg = segment_from_run({k: np.asarray(getattr(run, k))
+                            for k in run._fields},
+                           np.arange(D), np.asarray(run.doc_len))
+    return tokens, build_block_index(seg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bm25_matches_oracle_and_prune_is_exact(corpus_index, seed):
+    tokens, idx = corpus_index
+    rng = np.random.default_rng(seed)
+    q = rng.choice(np.unique(tokens), size=rng.integers(1, 6),
+                   replace=False).astype(np.int32)
+    oracle = bm25_oracle(tokens, q)
+    ov = np.sort(oracle)[::-1][:10]
+    v1, i1, _ = bm25_exhaustive(idx, jnp.asarray(q), 10)
+    np.testing.assert_allclose(np.asarray(v1), ov, rtol=1e-4, atol=1e-5)
+    v2, i2, stats = bm25_topk(idx, jnp.asarray(q), 10)
+    np.testing.assert_allclose(np.asarray(v2), ov, rtol=1e-4, atol=1e-5)
+    assert int(stats["blocks_scored"]) <= int(stats["blocks_total"])
+
+
+def test_query_missing_term(corpus_index):
+    _, idx = corpus_index
+    v, i, _ = bm25_exhaustive(idx, jnp.asarray([10 ** 6], jnp.int32), 5)
+    assert (np.asarray(v) == 0).all()
+
+
+def test_packed_smaller_than_raw(corpus_index):
+    _, idx = corpus_index
+    nb = idx.packed_docs.shape[0]
+    assert idx.packed_bytes() < nb * 128 * 8  # docids+tf raw would be 8B/post

@@ -1,0 +1,55 @@
+"""Serving substrate: generation loop, continuous-batching scheduler,
+double-buffered reader."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.data.corpus import TINY, SyntheticCorpus
+from repro.io.reader import DoubleBufferedReader
+from repro.launch.serve import generate
+from repro.models.transformer import MeshInfo, init_params
+from repro.serving.scheduler import DecodeScheduler, Request
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_arch("stablelm-12b").smoke
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 16)), jnp.int32)
+    t1 = generate(cfg, params, prompts, 8)
+    t2 = generate(cfg, params, prompts, 8)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert t1.shape == (2, 8)
+
+
+def test_scheduler_continuous_batching():
+    cfg = get_arch("stablelm-12b").smoke
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sched = DecodeScheduler(cfg=cfg, params=params, mi=MeshInfo(),
+                            slots=2, max_len=48)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 8 + i).astype(np.int32),
+                    max_new=4 + i % 3)
+            for i in range(5)]  # more requests than slots
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run_to_completion()
+    assert len(done) == 5
+    for r in done:
+        assert r.done and len(r.generated) >= r.max_new
+    # scheduler output matches direct generation for one request
+    solo = generate(cfg, params,
+                    jnp.asarray(reqs[0].prompt[None, :], jnp.int32), 4)
+    np.testing.assert_array_equal(np.asarray(solo)[0],
+                                  np.asarray(reqs[0].generated[:4]))
+
+
+def test_double_buffered_reader():
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=64)
+    reader = DoubleBufferedReader(lambda i: corpus.batch(i, 16), 5,
+                                  media="ceph")
+    seen = [i for i, b in reader]
+    assert seen == list(range(5))
+    assert reader.stats.batches == 5 and reader.stats.modeled_s > 0

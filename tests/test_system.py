@@ -1,0 +1,89 @@
+"""End-to-end system tests: the full indexing pipeline (the paper's
+technique) from synthetic corpus to queryable index, with envelope
+accounting — index -> merge -> block-max index -> BM25 serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.indexer import DistributedIndexer
+from repro.core.query import build_block_index, bm25_topk, bm25_exhaustive
+from repro.data.corpus import TINY, SyntheticCorpus
+from repro.core.tokenize import docs_to_buffer, tokenize_text
+
+
+@pytest.fixture(scope="module")
+def indexed():
+    cfg = get_arch("lucene-envelope").smoke
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    indexer = DistributedIndexer(cfg=cfg, source="ceph", target="ssd")
+    batches = [corpus.batch(i, 32) for i in range(8)]
+    for b in batches:
+        indexer.index_batch(b)
+    final = indexer.finalize()
+    return cfg, corpus, indexer, final, np.concatenate(batches)
+
+
+def test_end_to_end_index_complete(indexed):
+    cfg, corpus, indexer, final, tokens = indexed
+    assert final.n_docs == 256
+    assert int(final.doc_len.sum()) == int((tokens > 0).sum())
+    # every (term, doc) pair of the corpus is exactly one posting
+    assert final.n_postings == len(
+        {(int(t), d) for d in range(tokens.shape[0])
+         for t in tokens[d] if t > 0})
+
+
+def test_end_to_end_query(indexed):
+    cfg, corpus, indexer, final, tokens = indexed
+    idx = build_block_index(final)
+    q = np.unique(tokens[tokens > 0])[:3].astype(np.int32)
+    vals, ids, stats = bm25_topk(idx, jnp.asarray(q), 5)
+    v2, i2, _ = bm25_exhaustive(idx, jnp.asarray(q), 5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v2), rtol=1e-5)
+    assert float(vals[0]) > 0
+
+
+def test_envelope_report(indexed):
+    cfg, corpus, indexer, final, tokens = indexed
+    rep = indexer.envelope_report()
+    assert rep["alpha_measured"] > 1.0  # merges rewrote data
+    assert rep["bytes_written"] > 0 and rep["modeled_total_s"] > 0
+    assert rep["bound"] in ("read", "cpu", "write", "shared-io")
+
+
+def test_isolation_beats_shared_on_our_pipeline(indexed):
+    """The paper's isolation finding holds for our own measured pipeline."""
+    cfg, corpus, indexer, final, tokens = indexed
+    iso = DistributedIndexer(cfg=cfg, source="ceph", target="ssd")
+    shared = DistributedIndexer(cfg=cfg, source="ssd", target="ssd")
+    for i in range(4):
+        b = corpus.batch(100 + i, 32)
+        iso.index_batch(b)
+        shared.index_batch(b)
+    iso.finalize(), shared.finalize()
+    # compare the modeled IO paths (a tiny corpus is CPU-bound in total,
+    # so the isolation effect shows on the IO stage times themselves)
+    iso_rep = iso.envelope_report()
+    sh_rep = shared.envelope_report()
+    iso_io = max(iso_rep["t_read_s"], iso_rep["t_write_s"])
+    shared_io = (sh_rep["bytes_read"] + sh_rep["bytes_written"]) \
+        / (0.5e9) * shared.params.interference
+    assert shared_io > iso_io
+
+
+def test_tokenizer():
+    ids = tokenize_text("Hello, World! hello", vocab_bits=16)
+    assert len(ids) == 3 and ids[0] == ids[2]  # case-folded duplicate
+    assert all(1 <= i < 2 ** 16 for i in ids)
+    buf = docs_to_buffer(["a b c", "d"], doc_len=8, vocab_bits=12)
+    assert buf.shape == (2, 8)
+    assert (buf[0, :3] > 0).all() and (buf[0, 3:] == 0).all()
+
+
+def test_corpus_determinism():
+    c1 = SyntheticCorpus(TINY).batch(3, 16)
+    c2 = SyntheticCorpus(TINY).batch(3, 16)
+    np.testing.assert_array_equal(c1, c2)
+    assert not np.array_equal(c1, SyntheticCorpus(TINY).batch(4, 16))
