@@ -6,6 +6,9 @@ micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
   pack_kernel       lane-blocked PFor pack/unpack micro-bench
   bm25_query        block-max BM25 serving latency + pruning rate
   invert_kernel     device inversion sort throughput
+  build_reader      vectorized vs scalar-loop block-index build speedup
+  search_batched    batched multi-segment search qps vs batch size
+  searcher_refresh  NRT refresh latency vs live segment count (cold/warm)
 """
 from __future__ import annotations
 
@@ -80,8 +83,8 @@ def pack_kernel():
 
 def bm25_query():
     from repro.core.invert import invert_shard
-    from repro.core.query import (build_block_index, bm25_exhaustive,
-                                  bm25_topk)
+    from repro.core.query import bm25_exhaustive, bm25_topk
+    from repro.core.searcher import build_block_index
     from repro.core.segments import segment_from_run
     rng = np.random.default_rng(1)
     D, L, V = 2048, 64, 400
@@ -114,6 +117,89 @@ def invert_kernel():
     print(f"invert.sort_invert,{us:.0f},{D*L/us:.1f}Mtok/s(1-core-cpu)")
 
 
+def _cw09b_segment(n_docs=2048, doc_len=384, batch=0, base=0):
+    """A CW09B_SMALL-distributed segment for read-path benches."""
+    from repro.core.invert import invert_shard
+    from repro.core.segments import segment_from_run
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=doc_len)
+    tokens = corpus.batch(batch, n_docs)
+    run = invert_shard(jnp.asarray(tokens), base)
+    return segment_from_run({k: np.asarray(getattr(run, k))
+                             for k in run._fields},
+                            np.arange(base, base + n_docs),
+                            np.asarray(run.doc_len))
+
+
+def build_reader():
+    from repro.core.searcher import build_block_index, build_block_index_loop
+    seg = _cw09b_segment()
+    jax.block_until_ready(build_block_index(seg).packed_docs)  # warm pack
+
+    def best_of(fn, n=2):
+        best, out = float("inf"), None
+        for _ in range(n):
+            t0 = time.time()
+            out = fn(seg)
+            jax.block_until_ready(out.packed_docs)
+            best = min(best, time.time() - t0)
+        return best, out
+
+    t_vec, idx_v = best_of(build_block_index)
+    t_loop, idx_l = best_of(build_block_index_loop)
+    same = all(np.array_equal(np.asarray(getattr(idx_v, f)),
+                              np.asarray(getattr(idx_l, f)))
+               for f in ("terms", "term_block_start", "idf",
+                         "packed_docs", "bw_docs", "packed_tf", "bw_tf",
+                         "first_doc", "max_tf", "doc_norm"))
+    print(f"build_reader.vectorized,{t_vec*1e6:.0f},"
+          f"terms={seg.n_terms} postings={seg.n_postings}")
+    print(f"build_reader.loop,{t_loop*1e6:.0f},"
+          f"speedup={t_loop/t_vec:.1f}x bit_identical={same}")
+
+
+def search_batched():
+    from repro.core.searcher import ReaderCache
+    from repro.core.merge import MergeDriver
+    drv = MergeDriver(fanout=10)
+    for i in range(4):  # disjoint doc-id ranges, as the indexer guarantees
+        drv.add_flush(_cw09b_segment(n_docs=512, doc_len=384,
+                                     batch=i, base=i * 512))
+    searcher = ReaderCache().refresh(drv.live_segments())
+    rng = np.random.default_rng(3)
+    vocab = np.unique(np.concatenate([s.terms for s in drv.live_segments()]))
+    qps1 = None
+    for B in (1, 8, 32):
+        q = np.full((B, 4), -1, np.int32)
+        for r in range(B):
+            q[r] = rng.choice(vocab, 4, replace=False)
+        us, _ = _time(lambda qq: searcher.search_batched(qq, 10), q)
+        qps = B / (us / 1e6)
+        qps1 = qps1 or qps
+        print(f"search_batched.b{B},{us:.0f},{qps:.0f}qps "
+              f"speedup_vs_b1={qps/qps1:.1f}x")
+
+
+def searcher_refresh():
+    from repro.core.merge import MergeDriver
+    from repro.core.searcher import ReaderCache
+    for n_segs in (1, 4, 16):
+        drv = MergeDriver(fanout=32)  # no cascade: exactly n_segs live
+        for i in range(n_segs):
+            drv.add_flush(_cw09b_segment(n_docs=256, doc_len=384,
+                                         batch=i, base=i * 256))
+        cache = ReaderCache()
+        t0 = time.time()
+        cache.refresh(drv.live_segments())
+        cold = time.time() - t0
+        t0 = time.time()
+        cache.refresh(drv.live_segments())  # all readers cached
+        warm = time.time() - t0
+        print(f"searcher_refresh.segs{n_segs},{cold*1e6:.0f},"
+              f"warm={warm*1e6:.0f}us builds={cache.builds} "
+              f"hits={cache.hits}")
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     table1_envelope()
@@ -121,6 +207,9 @@ def main() -> None:
     pack_kernel()
     bm25_query()
     invert_kernel()
+    build_reader()
+    search_batched()
+    searcher_refresh()
 
 
 if __name__ == "__main__":

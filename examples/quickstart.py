@@ -7,7 +7,8 @@ import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.core.indexer import DistributedIndexer
-from repro.core.query import build_block_index, bm25_topk
+from repro.core.query import bm25_topk
+from repro.core.searcher import build_block_index
 from repro.data.corpus import TINY, SyntheticCorpus
 
 # 1. a ClueWeb-shaped synthetic corpus (deterministic)

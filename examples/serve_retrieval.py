@@ -1,6 +1,6 @@
 """Serve a hybrid retrieval stack: lexical (the paper's inverted index +
-block-max BM25) and dense (two-tower dot product) over one corpus,
-with batched requests.
+block-max BM25, served segment-natively over *live* segments) and dense
+(two-tower dot product) over one corpus, with batched requests.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -12,32 +12,48 @@ import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.core.indexer import DistributedIndexer
-from repro.core.query import build_block_index, bm25_topk
 from repro.data.corpus import TINY, SyntheticCorpus
 from repro.data.recsys_data import two_tower_batch
 from repro.models import recsys as RS
+from repro.serving.query_scheduler import QueryRequest, QueryScheduler
 
-# ---- lexical path: the paper's pipeline ----
+# ---- lexical path: the paper's pipeline, searched while it is built ----
 env_cfg = get_arch("lucene-envelope").smoke
 corpus = SyntheticCorpus(TINY, doc_buffer_len=env_cfg.doc_len)
 indexer = DistributedIndexer(cfg=env_cfg)
-for i in range(6):
+for i in range(3):
     indexer.index_batch(corpus.batch(i, 32))
-index = build_block_index(indexer.finalize())
+# NRT refresh: searchable snapshot of the live segments, no force-merge
+searcher = indexer.refresh()
 
 rng = np.random.default_rng(0)
 vocab = np.unique(corpus.batch(0, 32))[1:]
-queries = [rng.choice(vocab, size=3, replace=False).astype(np.int32)
-           for _ in range(16)]
-topk = jax.jit(lambda q: bm25_topk(index, q, 10))
+sched = QueryScheduler(searcher=searcher, slots=16, max_terms=3, k=10)
+for i in range(16):
+    sched.submit(QueryRequest(rid=i, terms=rng.choice(vocab, size=3,
+                                                      replace=False)))
+sched.step()  # compile warm-up
+for i in range(16, 32):
+    sched.submit(QueryRequest(rid=i, terms=rng.choice(vocab, size=3,
+                                                      replace=False)))
 t0 = time.time()
-for q in queries:
-    scores, docs, stats = topk(jnp.asarray(q))
+done = sched.run_to_completion()
 lex_dt = time.time() - t0
-print(f"lexical: {len(queries)} queries in {lex_dt*1000:.0f}ms "
-      f"({len(queries)/lex_dt:.0f} qps), "
-      f"pruned to {int(stats['blocks_scored'])}/{int(stats['blocks_total'])}"
-      " blocks on the last query")
+print(f"lexical: {len(done)} queries over {searcher.n_segments} live "
+      f"segments ({searcher.n_docs} docs) in {lex_dt*1000:.0f}ms "
+      f"({len(done)/lex_dt:.0f} qps batched)")
+
+# keep indexing; swap in a fresher snapshot mid-serving
+for i in range(3, 6):
+    indexer.index_batch(corpus.batch(i, 32))
+sched.swap_searcher(indexer.refresh())
+sched.submit(QueryRequest(rid=99, terms=done[0].terms))
+req = sched.run_to_completion()[0]
+print(f"after refresh ({indexer.stats.last_refresh_s*1000:.1f}ms, "
+      f"{indexer.reader_cache.builds} reader builds / "
+      f"{indexer.reader_cache.hits} cache hits): "
+      f"{sched.searcher.n_docs} docs searchable, "
+      f"top score {float(req.scores[0]):.3f}")
 
 # ---- dense path: two-tower ----
 cfg = get_arch("two-tower-retrieval").smoke

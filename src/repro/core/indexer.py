@@ -12,6 +12,13 @@ feeds the tiered MergeDriver (write amplification alpha is *measured*),
 and charges bytes to the source/target media models (core.envelope) to
 produce the predicted wall-clock an equivalent CPU server would need —
 reproducing the paper's Table 1 protocol on our own pipeline.
+
+Read path: ``refresh()`` snapshots the live segment set into an
+``IndexSearcher`` (core.searcher) *without* force-merging — near-real-time
+search-while-indexing. Per-segment readers are cached across refreshes
+keyed by segment identity, so a refresh after a merge cascade only builds
+a reader for the cascade's output. ``finalize()`` remains the paper's
+force-merged end state.
 """
 from __future__ import annotations
 
@@ -21,22 +28,26 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.compat import shard_map
 
 from repro.core import envelope as env
 from repro.core.invert import invert_shard
 from repro.core.merge import MergeDriver
+from repro.core.searcher import IndexSearcher, ReaderCache
 from repro.core.segments import Segment, segment_from_run
 from repro.core.shuffle import invert_and_shuffle
 from repro.kernels.postings_pack import ref as pack_ref
 
 
-def _flat_device_index(mesh_axis_names):
-    """Flattened linear device index inside shard_map."""
+def _flat_device_index(mesh_axis_names, mesh_shape):
+    """Flattened linear device index inside shard_map. Axis sizes come from
+    the (static) mesh shape: ``lax.axis_size`` does not exist on older jax."""
     idx = jnp.int32(0)
     for name in mesh_axis_names:
-        idx = idx * lax.axis_size(name) + lax.axis_index(name)
+        idx = idx * mesh_shape[name] + lax.axis_index(name)
     return idx
 
 
@@ -53,8 +64,10 @@ def make_index_step(cfg, mesh, doc_len: int):
     payload = getattr(cfg, "shuffle_payload", "raw")
     single_key = payload == "packed2"  # optimized variant bundles both
 
+    mesh_shape = dict(mesh.shape)
+
     def local_fn(toks):
-        dev = _flat_device_index(axis_names)
+        dev = _flat_device_index(axis_names, mesh_shape)
         base = dev * toks.shape[0]
         run, stats = invert_and_shuffle(toks, base, axis_name="model",
                                         n_dest=n_model, payload=payload,
@@ -95,6 +108,8 @@ class IndexStats:
     flushed_bytes: int = 0
     shuffle_bytes: int = 0
     wall_s: float = 0.0
+    refreshes: int = 0
+    last_refresh_s: float = 0.0
 
 
 @dataclass
@@ -113,6 +128,7 @@ class DistributedIndexer:
     params: env.EnvelopeParams = None
     stats: IndexStats = field(default_factory=IndexStats)
     merger: MergeDriver = None
+    reader_cache: ReaderCache = None
     _next_doc: int = 0
 
     def __post_init__(self):
@@ -120,6 +136,7 @@ class DistributedIndexer:
         self.media = self.media or env.MEDIA
         self.params = self.params or env.EnvelopeParams()
         self.merger = MergeDriver(fanout=self.cfg.merge_fanout)
+        self.reader_cache = ReaderCache()
         self._flush_policy = FlushPolicy(budget_mb=self.cfg.flush_budget_mb)
         self._jit_invert = jax.jit(invert_shard)
 
@@ -154,6 +171,25 @@ class DistributedIndexer:
     def finalize(self) -> Segment:
         self._flush()
         return self.merger.finalize()
+
+    def refresh(self, flush: bool = True) -> IndexSearcher:
+        """Near-real-time snapshot: everything indexed so far becomes
+        searchable without force-merging (Lucene's NRT refresh shape).
+
+        Flushes the in-memory buffer (so buffered docs surface too; pass
+        ``flush=False`` to snapshot only already-flushed segments), then
+        builds an ``IndexSearcher`` over ``MergeDriver.live_segments()``.
+        Readers are reused from ``reader_cache`` for every segment that
+        survived since the last refresh; the returned searcher stays valid
+        across future flushes/merges — callers swap searchers at their own
+        cadence while indexing continues (write-read decoupling)."""
+        if flush:
+            self._flush()
+        t0 = time.time()
+        searcher = self.reader_cache.refresh(self.merger.live_segments())
+        self.stats.refreshes += 1
+        self.stats.last_refresh_s = time.time() - t0
+        return searcher
 
     def envelope_report(self) -> dict:
         """Charge measured bytes to the configured media pair."""

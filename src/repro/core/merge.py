@@ -88,6 +88,16 @@ class MergeDriver:
             self.tiers.setdefault(tier + 1, []).append(merged)
             tier += 1
 
+    def live_segments(self) -> list[Segment]:
+        """Snapshot of the current searchable segment set, largest tier
+        first. Doc-id spaces are disjoint by construction (each flush covers
+        a distinct doc range; merges union their inputs), so a searcher can
+        evaluate them independently and merge top-k. The returned segments
+        are immutable — later flushes/merges produce *new* Segment objects,
+        leaving this snapshot valid (write-read decoupling)."""
+        return [s for t in sorted(self.tiers, reverse=True)
+                for s in self.tiers[t]]
+
     def finalize(self) -> Segment:
         """Force-merge everything into one segment (the paper's end state)."""
         remaining = [s for t in sorted(self.tiers) for s in self.tiers[t]]

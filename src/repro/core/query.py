@@ -14,6 +14,14 @@ tfs (lane-blocked PFor). Query evaluation is two-phase, TPU-idiomatic BMW:
            maximal help from every other query term);
   finally  score surviving blocks exactly; the result equals exhaustive
            evaluation (tests/test_query.py asserts this).
+
+Index *construction* lives in ``core/searcher.py`` (``build_block_index``
+plus the per-segment ``SegmentReader`` / multi-segment ``IndexSearcher``
+machinery); this module only holds the device-resident index layout and
+the scoring math. Scoring accepts optional ``idf_q`` / ``doc_norm``
+overrides so a multi-segment searcher can evaluate each segment under
+*global* collection statistics — which is what makes per-segment top-k
+merge bit-equal to searching the force-merged index.
 """
 from __future__ import annotations
 
@@ -21,9 +29,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.segments import Segment
 from repro.kernels.bm25_blockmax.ops import bm25_blocks
 from repro.kernels.postings_pack import ops as pack_ops
 
@@ -36,14 +42,14 @@ class BlockMaxIndex:
 
     terms: jnp.ndarray            # (T,) sorted
     term_block_start: jnp.ndarray  # (T+1,) CSR into blocks
-    idf: jnp.ndarray              # (T,)
+    idf: jnp.ndarray              # (T,) segment-local idf
     packed_docs: jnp.ndarray      # (NB, 32, 4)
     bw_docs: jnp.ndarray          # (NB,)
     packed_tf: jnp.ndarray        # (NB, 32, 4)
     bw_tf: jnp.ndarray            # (NB,)
     first_doc: jnp.ndarray        # (NB,) local (remapped) doc ids
     max_tf: jnp.ndarray           # (NB,)
-    doc_norm: jnp.ndarray         # (D,) k1*(1-b+b*dl/avgdl)
+    doc_norm: jnp.ndarray         # (D,) k1*(1-b+b*dl/avgdl), segment-local
     n_docs: int
     max_blocks_per_term: int
     k1: float = 0.9
@@ -54,90 +60,42 @@ class BlockMaxIndex:
                      + pack_ops.packed_bytes(self.bw_tf))
 
 
-def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
-                      ) -> BlockMaxIndex:
-    """Host-side: block-align each term's postings and pack them."""
-    n_docs = seg.n_docs
-    doc_remap = {int(d): i for i, d in enumerate(seg.doc_ids)}
-    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
-    T = seg.n_terms
-    df = np.diff(seg.term_start)
-    idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
+def _gather_term_blocks(index: BlockMaxIndex, q_terms, max_blocks=None):
+    """For each query term: row lookup + padded block-id window.
 
-    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb = [], [], [], [], []
-    for ti in range(T):
-        s, e = int(seg.term_start[ti]), int(seg.term_start[ti + 1])
-        docs = local_docs[s:e]
-        tfs = seg.tf[s:e]
-        nb = -(-len(docs) // BLOCK)
-        term_nb.append(nb)
-        for bi in range(nb):
-            chunk = docs[bi * BLOCK:(bi + 1) * BLOCK]
-            tchunk = tfs[bi * BLOCK:(bi + 1) * BLOCK]
-            pad = BLOCK - len(chunk)
-            if pad:
-                chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
-                tchunk = np.concatenate([tchunk, np.zeros(pad, tchunk.dtype)])
-            deltas = np.diff(chunk, prepend=chunk[0])
-            blocks_deltas.append(deltas)
-            blocks_tf.append(tchunk)
-            first_doc.append(chunk[0])
-            max_tf.append(tchunk.max(initial=0))
-
-    nb_total = max(len(blocks_deltas), 1)
-    if not blocks_deltas:  # empty index
-        blocks_deltas = [np.zeros(BLOCK, np.int64)]
-        blocks_tf = [np.zeros(BLOCK, np.int64)]
-        first_doc, max_tf, term_nb = [0], [0], [0]
-    d_arr = jnp.asarray(np.stack(blocks_deltas).astype(np.uint32))
-    t_arr = jnp.asarray(np.stack(blocks_tf).astype(np.uint32))
-    pd, bwd = pack_ops.pack(d_arr)
-    pt, bwt = pack_ops.pack(t_arr)
-
-    dl = seg.doc_len.astype(np.float64)
-    avgdl = max(dl.mean(), 1.0)
-    doc_norm = k1 * (1.0 - b + b * dl / avgdl)
-    tbs = np.concatenate([[0], np.cumsum(term_nb)])
-    return BlockMaxIndex(
-        terms=jnp.asarray(seg.terms.astype(np.int32)),
-        term_block_start=jnp.asarray(tbs.astype(np.int32)),
-        idf=jnp.asarray(idf.astype(np.float32)),
-        packed_docs=pd, bw_docs=bwd, packed_tf=pt, bw_tf=bwt,
-        first_doc=jnp.asarray(np.asarray(first_doc, np.int32)),
-        max_tf=jnp.asarray(np.asarray(max_tf, np.float32)),
-        doc_norm=jnp.asarray(doc_norm.astype(np.float32)),
-        n_docs=n_docs,
-        max_blocks_per_term=int(max(term_nb)) if term_nb else 1,
-        k1=k1, b=b)
-
-
-def _gather_term_blocks(index: BlockMaxIndex, q_terms):
-    """For each query term: row lookup + padded block-id window."""
+    ``max_blocks`` narrows the window below the segment-wide
+    ``max_blocks_per_term``; callers must guarantee every *query* term has
+    at most that many blocks (the searcher computes the exact per-query
+    max host-side) — otherwise postings would be silently truncated.
+    """
     rows = jnp.searchsorted(index.terms, q_terms)
     rows = jnp.clip(rows, 0, index.terms.shape[0] - 1)
     found = index.terms[rows] == q_terms
     start = index.term_block_start[rows]
     end = jnp.where(found, index.term_block_start[rows + 1], start)
-    MB = index.max_blocks_per_term
+    MB = index.max_blocks_per_term if max_blocks is None else max_blocks
     bidx = start[:, None] + jnp.arange(MB)[None, :]  # (Q, MB)
     in_term = bidx < end[:, None]
     bidx = jnp.where(in_term, bidx, 0)
     return rows, found, bidx, in_term
 
 
-def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block):
+def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block,
+                  doc_norm=None):
     """Exact BM25 partial scores for the selected blocks -> (D,) scores."""
-    shp = bidx.shape
+    if doc_norm is None:
+        doc_norm = index.doc_norm
     flat = bidx.reshape(-1)
     docids, tf, num = bm25_blocks(
         index.packed_docs[flat], index.bw_docs[flat], index.first_doc[flat],
         index.packed_tf[flat], index.bw_tf[flat],
         idf_per_block.reshape(-1), active.reshape(-1).astype(jnp.int32),
         k1=index.k1)
-    denom = tf + index.doc_norm[docids]
+    denom = tf + doc_norm[docids]
     s = jnp.where(tf > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+    # docids are in-bounds by construction (local ids; inactive blocks -> 0)
     return jnp.zeros((index.n_docs,), jnp.float32).at[docids.reshape(-1)].add(
-        s.reshape(-1))
+        s.reshape(-1), mode="promise_in_bounds")
 
 
 def block_upper_bounds(index: BlockMaxIndex, bidx, in_term, idf_q):
@@ -149,15 +107,27 @@ def block_upper_bounds(index: BlockMaxIndex, bidx, in_term, idf_q):
 
 
 def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
-              prune: bool = True):
-    """Returns (scores (k,), doc_ids (k,), stats dict)."""
+              prune: bool = True, idf_q=None, doc_norm=None,
+              max_blocks=None):
+    """Returns (scores (k,), doc_ids (k,), stats dict).
+
+    ``idf_q`` (Q,) and ``doc_norm`` (D,) default to the segment-local
+    statistics baked into the index; a multi-segment searcher passes
+    collection-global values instead (pruning stays safe: the upper
+    bound only assumes b/k1, not which stats produced idf/doc_norm).
+    ``max_blocks`` narrows the per-term candidate window (see
+    ``_gather_term_blocks``) — exact iff it covers every query term.
+    """
     q_terms = q_terms.astype(jnp.int32)
-    rows, found, bidx, in_term = _gather_term_blocks(index, q_terms)
-    idf_q = jnp.where(found, index.idf[rows], 0.0)
+    rows, found, bidx, in_term = _gather_term_blocks(index, q_terms,
+                                                     max_blocks)
+    if idf_q is None:
+        idf_q = index.idf[rows]
+    idf_q = jnp.where(found, idf_q, 0.0)
     idf_pb = jnp.broadcast_to(idf_q[:, None], bidx.shape)
 
     if not prune:
-        scores = _score_blocks(index, bidx, in_term, idf_pb)
+        scores = _score_blocks(index, bidx, in_term, idf_pb, doc_norm)
         vals, ids = jax.lax.top_k(scores, k)
         return vals, ids, {"blocks_scored": in_term.sum(),
                            "blocks_total": in_term.sum()}
@@ -168,7 +138,7 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     n_phase1 = max(n_cand // 2, min(n_cand, 8))
     thresh_ub = jnp.sort(ub.reshape(-1))[-n_phase1]
     phase1 = in_term & (ub >= thresh_ub)
-    scores1 = _score_blocks(index, bidx, phase1, idf_pb)
+    scores1 = _score_blocks(index, bidx, phase1, idf_pb, doc_norm)
     theta = jax.lax.top_k(scores1, k)[0][-1]  # valid lower bound on final theta
 
     # phase 2 (MaxScore test): block survives iff its UB plus every other
@@ -177,11 +147,14 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     others = term_best.sum() - term_best  # (Q,)
     needed = ub + others[:, None] > theta
     active = in_term & (phase1 | needed)
-    scores = _score_blocks(index, bidx, active, idf_pb)
+    scores = _score_blocks(index, bidx, active, idf_pb, doc_norm)
     vals, ids = jax.lax.top_k(scores, k)
     return vals, ids, {"blocks_scored": active.sum(),
                        "blocks_total": in_term.sum(), "theta": theta}
 
 
-def bm25_exhaustive(index: BlockMaxIndex, q_terms, k: int = 10):
-    return bm25_topk(index, q_terms, k, prune=False)
+def bm25_exhaustive(index: BlockMaxIndex, q_terms, k: int = 10,
+                    idf_q=None, doc_norm=None):
+    return bm25_topk(index, q_terms, k, prune=False,
+                     idf_q=idf_q, doc_norm=doc_norm)
+

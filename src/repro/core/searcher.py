@@ -1,0 +1,373 @@
+"""Segment-native read path: per-segment readers, multi-segment search.
+
+The write side (``core/indexer.py`` -> ``core/merge.py``) produces a *set*
+of immutable segments whose doc-id spaces are disjoint by construction
+(each flush covers a fresh doc range; merges union their inputs). The read
+side built here makes that set searchable **while it is still being
+built** — the near-real-time shape of production engines (write-read
+decoupling), rather than the paper's force-merged end state:
+
+  ``build_block_index``   vectorized (numpy CSR block-alignment) builder of
+                          the device-resident ``BlockMaxIndex`` for one
+                          segment; bit-identical to the scalar reference
+                          ``build_block_index_loop`` it replaced.
+  ``SegmentReader``       one open segment: its block-max index, the
+                          local->absolute doc-id map, and a cache of jitted
+                          top-k evaluators (single and vmap-batched).
+  ``IndexSearcher``       an immutable snapshot over a list of readers.
+                          Evaluates each segment under collection-GLOBAL
+                          statistics (summed df -> idf, global avgdl ->
+                          doc_norm) and merges per-segment top-k, so results
+                          equal searching the force-merged index exactly.
+  ``ReaderCache``         keyed by ``Segment.seg_id``: successive refreshes
+                          only build readers for segments they have not
+                          seen, so a merge cascade costs one reader build
+                          for the merged output, not one per input.
+
+Refresh lifecycle (see ``DistributedIndexer.refresh``): the indexer flushes
+its in-memory buffer, snapshots ``MergeDriver.live_segments()``, and asks
+the ``ReaderCache`` for a searcher over that snapshot. The returned
+``IndexSearcher`` stays valid forever — later flushes and merges create new
+Segment objects and never mutate old ones — so serving threads can keep an
+old searcher while indexing proceeds, and swap in a fresh one per refresh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import BLOCK, BlockMaxIndex, bm25_topk
+from repro.core.segments import Segment
+from repro.kernels.postings_pack import ops as pack_ops
+
+
+# --------------------------------------------------------------------------
+# per-segment index construction
+# --------------------------------------------------------------------------
+
+def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
+                  first_doc: np.ndarray, max_tf: np.ndarray,
+                  term_nb: np.ndarray, df: np.ndarray,
+                  k1: float, b: float) -> BlockMaxIndex:
+    """Shared tail of both builders: pack blocks + assemble the index."""
+    d_arr = jnp.asarray(np.asarray(deltas, np.uint32))
+    t_arr = jnp.asarray(np.asarray(tfs, np.uint32))
+    pd, bwd = pack_ops.pack(d_arr)
+    pt, bwt = pack_ops.pack(t_arr)
+
+    n_docs = seg.n_docs
+    idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
+    dl = seg.doc_len.astype(np.float64)
+    avgdl = max(dl.mean(), 1.0) if dl.size else 1.0
+    doc_norm = k1 * (1.0 - b + b * dl / avgdl)
+    tbs = np.concatenate([[0], np.cumsum(term_nb)])
+    return BlockMaxIndex(
+        terms=jnp.asarray(seg.terms.astype(np.int32)),
+        term_block_start=jnp.asarray(tbs.astype(np.int32)),
+        idf=jnp.asarray(idf.astype(np.float32)),
+        packed_docs=pd, bw_docs=bwd, packed_tf=pt, bw_tf=bwt,
+        first_doc=jnp.asarray(np.asarray(first_doc, np.int32)),
+        max_tf=jnp.asarray(np.asarray(max_tf, np.float32)),
+        doc_norm=jnp.asarray(doc_norm.astype(np.float32)),
+        n_docs=n_docs,
+        max_blocks_per_term=int(np.max(term_nb)) if len(term_nb) else 1,
+        k1=k1, b=b)
+
+
+def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
+                      ) -> BlockMaxIndex:
+    """Block-align each term's postings and pack them — vectorized, O(P).
+
+    Every term starts a fresh block, so block starts tile the postings
+    stream contiguously: one repeat/arange pass (the CSR trick from
+    ``merge.py``) enumerates them, and one scatter places each posting at
+    its (block, lane) slot. Pad lanes stay 0 — identical to the scalar
+    reference, where padding repeats the last doc id (delta 0) with tf 0.
+    """
+    assert np.all(np.diff(seg.doc_ids) > 0), \
+        "Segment.doc_ids must be sorted unique (np.searchsorted relies on it)"
+    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
+    df = np.diff(seg.term_start).astype(np.int64)
+    term_nb = -(-df // BLOCK)                     # ceil: blocks per term
+    nb_total = int(term_nb.sum())
+    if nb_total == 0:                             # empty segment
+        return _finish_index(seg, np.zeros((1, BLOCK), np.int64),
+                             np.zeros((1, BLOCK), np.int64),
+                             np.zeros(1, np.int64), np.zeros(1, np.int64),
+                             np.zeros(1, np.int64), df, k1, b)
+
+    n_post = len(seg.docs)
+    block_term = np.repeat(np.arange(seg.n_terms), term_nb)   # (NB,)
+    nb_before = np.cumsum(term_nb) - term_nb                  # (T,)
+    within = np.arange(nb_total) - nb_before[block_term]      # (NB,)
+    blk_s = seg.term_start[:-1][block_term] + within * BLOCK  # (NB,) sorted,
+    sizes = np.diff(np.append(blk_s, n_post))                 # tiles [0, P)
+    lane = np.arange(n_post) - np.repeat(blk_s, sizes)        # (P,)
+    flat_pos = np.repeat(np.arange(nb_total) * BLOCK, sizes) + lane
+    d = local_docs.copy()
+    d[1:] -= local_docs[:-1]
+    d[blk_s] = 0                                  # first lane of each block
+    deltas = np.zeros(nb_total * BLOCK, np.uint32)  # pad lanes stay 0
+    deltas[flat_pos] = d
+    tfs = np.zeros(nb_total * BLOCK, np.uint32)
+    tfs[flat_pos] = seg.tf
+    return _finish_index(seg, deltas.reshape(nb_total, BLOCK),
+                         tfs.reshape(nb_total, BLOCK), local_docs[blk_s],
+                         np.maximum.reduceat(seg.tf, blk_s), term_nb,
+                         df, k1, b)
+
+
+def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
+                           ) -> BlockMaxIndex:
+    """Scalar reference builder (the original per-term/per-block Python
+    loop). Kept as the parity oracle for tests and the build benchmark —
+    not used on any production path."""
+    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
+    df = np.diff(seg.term_start).astype(np.int64)
+    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb = [], [], [], [], []
+    for ti in range(seg.n_terms):
+        s, e = int(seg.term_start[ti]), int(seg.term_start[ti + 1])
+        docs = local_docs[s:e]
+        tfs = seg.tf[s:e]
+        nb = -(-len(docs) // BLOCK)
+        term_nb.append(nb)
+        for bi in range(nb):
+            chunk = docs[bi * BLOCK:(bi + 1) * BLOCK]
+            tchunk = tfs[bi * BLOCK:(bi + 1) * BLOCK]
+            pad = BLOCK - len(chunk)
+            if pad:
+                chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
+                tchunk = np.concatenate([tchunk, np.zeros(pad, tchunk.dtype)])
+            blocks_deltas.append(np.diff(chunk, prepend=chunk[0]))
+            blocks_tf.append(tchunk)
+            first_doc.append(chunk[0])
+            max_tf.append(tchunk.max(initial=0))
+    if not blocks_deltas:
+        blocks_deltas = [np.zeros(BLOCK, np.int64)]
+        blocks_tf = [np.zeros(BLOCK, np.int64)]
+        first_doc, max_tf, term_nb = [0], [0], [0]
+    return _finish_index(seg, np.stack(blocks_deltas), np.stack(blocks_tf),
+                         np.asarray(first_doc), np.asarray(max_tf),
+                         np.asarray(term_nb, np.int64), df, k1, b)
+
+
+# --------------------------------------------------------------------------
+# readers and the multi-segment searcher
+# --------------------------------------------------------------------------
+
+@dataclass
+class SegmentReader:
+    """One open segment: device index + doc-id map + jitted evaluators."""
+
+    seg: Segment
+    index: BlockMaxIndex
+    doc_map: jnp.ndarray          # (D,) local -> absolute doc id
+    terms_np: np.ndarray          # host copies for global-df lookups
+    df_np: np.ndarray
+    nb_np: np.ndarray             # (T,) blocks per term
+    _fns: dict = field(default_factory=dict)
+
+    @classmethod
+    def open(cls, seg: Segment, k1: float = 0.9, b: float = 0.4
+             ) -> "SegmentReader":
+        df = np.diff(seg.term_start).astype(np.int64)
+        return cls(seg=seg, index=build_block_index(seg, k1, b),
+                   doc_map=jnp.asarray(seg.doc_ids.astype(np.int32)),
+                   terms_np=np.asarray(seg.terms), df_np=df,
+                   nb_np=-(-df // BLOCK))
+
+    @property
+    def seg_id(self) -> int:
+        return self.seg.seg_id
+
+    @property
+    def n_docs(self) -> int:
+        return self.seg.n_docs
+
+    def query_max_blocks(self, q: np.ndarray) -> int:
+        """Exact max blocks-per-term over the query's terms, rounded up to
+        a power of two (so compiles are bounded at log2(MB) shape buckets).
+        The segment-wide max is a gross over-estimate for typical queries —
+        one huge term forces MB on everyone — and candidate-grid cost is
+        linear in the window, so right-sizing it per query batch is the
+        difference between scoring 128 lanes/term and 128*MB."""
+        t = self.terms_np
+        if t.size == 0:
+            return 1
+        rows = np.clip(np.searchsorted(t, q), 0, t.size - 1)
+        nb = np.where(t[rows] == q, self.nb_np[rows], 1)
+        need = int(nb.max(initial=1))
+        return min(1 << (need - 1).bit_length(),
+                   max(self.index.max_blocks_per_term, 1))
+
+    def topk_fn(self, k: int, max_blocks: int, batched: bool = False):
+        """Jitted ``(q, idf_q, doc_norm) -> (scores, absolute doc ids)``.
+
+        idf/doc_norm arrive as arguments (not baked into the trace) so a
+        refresh that only changes global stats reuses the compiled fn.
+        Pruning is left to the TPU kernel path, where the active mask
+        actually skips blocks; the jnp reference path computes every lane
+        either way, so there the single exhaustive pass (identical
+        results) is strictly cheaper than the two-phase one.
+        """
+        key = (k, max_blocks, batched)
+        if key not in self._fns:
+            index, doc_map = self.index, self.doc_map
+            prune = jax.default_backend() == "tpu"
+
+            def single(q, idf_q, doc_norm):
+                vals, ids, _ = bm25_topk(index, q, k, prune=prune,
+                                         idf_q=idf_q, doc_norm=doc_norm,
+                                         max_blocks=max_blocks)
+                return vals, doc_map[ids]
+
+            fn = jax.vmap(single, in_axes=(0, 0, None)) if batched else single
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+
+@dataclass
+class IndexSearcher:
+    """Point-in-time searchable view over a set of live segments.
+
+    Per-segment evaluation runs under collection-global statistics: df is
+    summed across segments (disjoint doc spaces -> df adds), avgdl is the
+    global mean doc length. Each doc lives in exactly one segment, so its
+    score is identical to what the force-merged index would give it, and a
+    merge of per-segment top-k equals global top-k.
+    """
+
+    readers: list
+    k1: float = 0.9
+    b: float = 0.4
+    n_docs: int = 0
+    avgdl: float = 1.0
+    _doc_norms: list = None
+
+    def __post_init__(self):
+        dls = [r.seg.doc_len for r in self.readers]
+        all_dl = (np.concatenate(dls).astype(np.float64) if dls
+                  else np.zeros(0, np.float64))
+        self.n_docs = int(all_dl.size)
+        self.avgdl = max(all_dl.mean(), 1.0) if all_dl.size else 1.0
+        self._doc_norms = [
+            jnp.asarray((self.k1 * (1.0 - self.b + self.b *
+                         r.seg.doc_len.astype(np.float64) / self.avgdl)
+                         ).astype(np.float32))
+            for r in self.readers]
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.readers)
+
+    def global_idf(self, q_terms: np.ndarray) -> np.ndarray:
+        """Collection-wide idf for ``q_terms`` (any shape): per-segment df
+        looked up host-side and summed, then the same idf formula the
+        single-segment builder bakes in."""
+        q = np.asarray(q_terms, np.int64)
+        df = np.zeros(q.shape, np.int64)
+        for r in self.readers:
+            t = r.terms_np
+            if t.size == 0:
+                continue
+            rows = np.clip(np.searchsorted(t, q), 0, t.size - 1)
+            df += np.where(t[rows] == q, r.df_np[rows], 0)
+        return np.log(1.0 + (self.n_docs - df + 0.5) / (df + 0.5)
+                      ).astype(np.float32)
+
+    def _empty(self, shape_prefix, k):
+        return (jnp.zeros(shape_prefix + (k,), jnp.float32),
+                jnp.full(shape_prefix + (k,), -1, jnp.int32))
+
+    def search(self, q_terms, k: int = 10):
+        """Top-k over every live segment; returns (scores (k,), doc_ids (k,))
+        with absolute doc ids. Results are identical to ``bm25_topk`` over
+        the force-merged segment (asserted in tests/test_searcher.py)."""
+        q = np.asarray(q_terms)
+        idf = jnp.asarray(self.global_idf(q))
+        qj = jnp.asarray(q, jnp.int32)
+        parts_v, parts_i = [], []
+        for r, dn in zip(self.readers, self._doc_norms):
+            k_eff = min(k, r.index.n_docs)
+            if k_eff <= 0:
+                continue
+            v, i = r.topk_fn(k_eff, r.query_max_blocks(q))(qj, idf, dn)
+            parts_v.append(v)
+            parts_i.append(i)
+        if not parts_v:
+            return self._empty((), k)
+        vals = jnp.concatenate(parts_v)
+        ids = jnp.concatenate(parts_i)
+        kk = min(k, vals.shape[0])
+        top_v, pos = jax.lax.top_k(vals, kk)
+        top_i = ids[pos]
+        if kk < k:
+            top_v = jnp.pad(top_v, (0, k - kk))
+            top_i = jnp.pad(top_i, (0, k - kk), constant_values=-1)
+        return top_v, top_i
+
+    def search_batched(self, q_batch, k: int = 10):
+        """Fixed-shape batched search: ``q_batch`` is (B, Q) int32, queries
+        right-padded with -1 (absent everywhere -> contributes nothing).
+        Returns (scores (B, k), doc_ids (B, k)). Each segment evaluates the
+        whole batch with one vmapped two-phase block-max call."""
+        q = np.asarray(q_batch)
+        B = q.shape[0]
+        idf = jnp.asarray(self.global_idf(q))
+        qj = jnp.asarray(q, jnp.int32)
+        parts_v, parts_i = [], []
+        for r, dn in zip(self.readers, self._doc_norms):
+            k_eff = min(k, r.index.n_docs)
+            if k_eff <= 0:
+                continue
+            mb = r.query_max_blocks(q)
+            v, i = r.topk_fn(k_eff, mb, batched=True)(qj, idf, dn)
+            parts_v.append(v)
+            parts_i.append(i)
+        if not parts_v:
+            return self._empty((B,), k)
+        vals = jnp.concatenate(parts_v, axis=1)
+        ids = jnp.concatenate(parts_i, axis=1)
+        kk = min(k, vals.shape[1])
+        top_v, pos = jax.lax.top_k(vals, kk)
+        top_i = jnp.take_along_axis(ids, pos, axis=1)
+        if kk < k:
+            top_v = jnp.pad(top_v, ((0, 0), (0, k - kk)))
+            top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=-1)
+        return top_v, top_i
+
+
+@dataclass
+class ReaderCache:
+    """Reader cache keyed by segment identity (``Segment.seg_id``).
+
+    ``refresh(segs)`` returns a searcher over exactly ``segs``, reusing
+    cached readers for segments seen before and evicting readers whose
+    segments left the live set (merged away). After a merge cascade only
+    the cascade's *output* segment needs a reader build.
+    """
+
+    k1: float = 0.9
+    b: float = 0.4
+    builds: int = 0
+    hits: int = 0
+    evictions: int = 0
+    _readers: dict = field(default_factory=dict)
+
+    def refresh(self, segs: list) -> IndexSearcher:
+        live, readers = {}, []
+        for seg in segs:
+            r = self._readers.get(seg.seg_id)
+            if r is None:
+                r = SegmentReader.open(seg, self.k1, self.b)
+                self.builds += 1
+            else:
+                self.hits += 1
+            live[seg.seg_id] = r
+            readers.append(r)
+        self.evictions += len(set(self._readers) - set(live))
+        self._readers = live
+        return IndexSearcher(readers=readers, k1=self.k1, b=self.b)

@@ -8,11 +8,14 @@ doc vectors + stored docs — the paper stores all of these, §2).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
 
 BLOCK = 128
+
+_seg_ids = itertools.count()
 
 
 def _np_block_bits(stream: np.ndarray) -> int:
@@ -40,6 +43,10 @@ class Segment:
     doc_ids: np.ndarray        # (D,) absolute doc ids covered
     doc_len: np.ndarray        # (D,)
     generation: int = 0        # merge tier
+    # process-unique identity: segments are immutable, so readers built from
+    # a segment can be cached under this key across refreshes (id() would be
+    # reusable after GC and is not safe as a cache key).
+    seg_id: int = field(default_factory=lambda: next(_seg_ids))
 
     @property
     def n_terms(self) -> int:

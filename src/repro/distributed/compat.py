@@ -1,0 +1,37 @@
+"""jax version compatibility shims.
+
+``shard_map`` graduated out of ``jax.experimental`` and, in the move, its
+replication-check kwarg was renamed (``check_rep`` -> ``check_vma``).  Every
+SPMD region in this repo imports the wrapper below instead of reaching into
+jax directly, so the same call sites lower on both old (0.4.x) and new jax:
+
+    from repro.distributed.compat import shard_map
+    shard_map(fn, mesh=mesh, in_specs=..., out_specs=..., check_vma=False)
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # new jax: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map
+except ImportError:  # old jax: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    _params = inspect.signature(_shard_map).parameters
+    if "check_vma" in _params:
+        _CHECK_KW = "check_vma"
+    elif "check_rep" in _params:
+        _CHECK_KW = "check_rep"
+    else:
+        _CHECK_KW = None
+except (TypeError, ValueError):  # signature not introspectable: drop the
+    _CHECK_KW = None             # kwarg rather than guess and TypeError
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Version-stable ``shard_map``: accepts ``check_vma`` everywhere."""
+    if check_vma is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

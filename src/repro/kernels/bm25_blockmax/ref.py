@@ -13,15 +13,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.postings_pack.ref import unpack_ref
+from repro.kernels.postings_pack.ref import unpack_fast
 
 
 def bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
                     idf, active, k1: float = 0.9):
     """-> (docids (NB,128) int32, tf (NB,128) f32, num (NB,128) f32)."""
-    deltas = unpack_ref(packed_docs, bw_docs).astype(jnp.int32)
+    deltas = unpack_fast(packed_docs, bw_docs).astype(jnp.int32)
     docids = first_doc[:, None] + jnp.cumsum(deltas, axis=1)
-    tf = unpack_ref(packed_tf, bw_tf).astype(jnp.float32)
+    tf = unpack_fast(packed_tf, bw_tf).astype(jnp.float32)
     num = idf[:, None] * (k1 + 1.0) * tf
     act = (active > 0)[:, None]
     return (jnp.where(act, docids, 0),

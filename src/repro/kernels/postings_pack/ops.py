@@ -29,6 +29,9 @@ def pack(deltas: jnp.ndarray):
     """deltas: (nb, 128) uint32 -> (packed (nb,32,4), bw (nb,))."""
     if _on_tpu():
         return tuple(pack_pallas(deltas, interpret=False))
+    # pack_ref, not pack_fast: XLA fuses the broadcast form into one pass,
+    # which wins at the large nb of whole-segment builds (the transpose
+    # form wins for the small-nb unpacks of the query path).
     return ref.pack_ref(deltas)
 
 
@@ -36,7 +39,7 @@ def pack(deltas: jnp.ndarray):
 def unpack(packed: jnp.ndarray, bw: jnp.ndarray):
     if _on_tpu():
         return unpack_pallas(packed, bw, interpret=False)
-    return ref.unpack_ref(packed, bw)
+    return ref.unpack_fast(packed, bw)  # == unpack_ref
 
 
 packed_bytes = ref.packed_bytes

@@ -185,16 +185,19 @@ def _local_dispatch_ffn(tokens, router_w, wg, wu, wd, *, cfg, compute_dtype,
 
 def moe_ffn_shard_map(params, x, cfg, compute_dtype, mi):
     """EP via shard_map: local dispatch, psum combine (§Perf iteration 4)."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
 
     B, S, d = x.shape
     dp = mi.dp()
     E = cfg.n_experts
 
+    n_model = mi.mesh.shape[mi.model_axis]  # static (lax.axis_size is not
+    # available on older jax, and n_local must be static anyway)
+
     def fn(xs, router_w, wg, wu, wd):
         midx = lax.axis_index(mi.model_axis)
-        n_model = lax.axis_size(mi.model_axis)
         n_local = E // n_model
         tokens = xs.reshape(-1, d)
         out, aux = _local_dispatch_ffn(

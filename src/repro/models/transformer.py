@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed.compat import shard_map
 
 from repro.models import layers as L
 from repro.models.moe import moe_ffn, moe_init

@@ -1,0 +1,86 @@
+"""Batched BM25 query scheduler: fixed-slot continuous batching for the
+read path, mirroring ``DecodeScheduler``'s serving shape.
+
+Fixed ``slots`` query slots, queries padded to ``max_terms`` terms with -1
+(a term id absent from every segment, so pad lanes contribute nothing).
+Every step drains up to ``slots`` requests from the queue into one
+fixed-shape ``IndexSearcher.search_batched`` call — the batch shape never
+changes, so XLA compiles each segment's evaluator once and never again.
+Unlike decode, a query finishes in a single step, so "continuous" here
+means the queue refills all slots every step instead of per-slot refill.
+
+``swap_searcher`` installs a fresh ``IndexSearcher`` from the indexer's
+``refresh()`` between steps: serving continues against the old snapshot
+until the swap, which is the write-read decoupling contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class QueryRequest:
+    rid: int
+    terms: np.ndarray           # (q,) int32 query term ids
+    k: int = 10
+    scores: np.ndarray = None   # (k,) filled on completion
+    doc_ids: np.ndarray = None  # (k,) absolute doc ids
+    done: bool = False
+
+
+@dataclass
+class QueryScheduler:
+    searcher: object            # IndexSearcher snapshot being served
+    slots: int = 32
+    max_terms: int = 8
+    k: int = 10
+    queue: list = field(default_factory=list)
+    served: int = 0
+    steps: int = 0
+
+    def submit(self, req: QueryRequest):
+        if len(req.terms) > self.max_terms:
+            raise ValueError(
+                f"query {req.rid}: {len(req.terms)} terms exceeds the "
+                f"scheduler's fixed shape (max_terms={self.max_terms})")
+        if req.k > self.k:
+            raise ValueError(
+                f"query {req.rid}: k={req.k} exceeds the scheduler's "
+                f"fixed shape (k={self.k})")
+        self.queue.append(req)
+
+    def swap_searcher(self, searcher):
+        """Install a fresher snapshot (from ``DistributedIndexer.refresh``);
+        takes effect from the next step."""
+        self.searcher = searcher
+
+    def step(self):
+        """Serve one fixed-shape batch from the queue; returns finished
+        requests (every admitted request finishes in its step)."""
+        if not self.queue:
+            return []
+        batch = [self.queue.pop(0)
+                 for _ in range(min(self.slots, len(self.queue)))]
+        q = np.full((self.slots, self.max_terms), -1, np.int32)
+        for i, req in enumerate(batch):
+            t = np.asarray(req.terms, np.int32)
+            q[i, :len(t)] = t
+        vals, ids = self.searcher.search_batched(q, self.k)
+        vals, ids = np.asarray(vals), np.asarray(ids)
+        for i, req in enumerate(batch):
+            kk = min(req.k, self.k)
+            req.scores, req.doc_ids = vals[i, :kk], ids[i, :kk]
+            req.done = True
+        self.served += len(batch)
+        self.steps += 1
+        return batch
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        out = []
+        for _ in range(max_steps):
+            out += self.step()
+            if not self.queue:
+                break
+        return out

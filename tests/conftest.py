@@ -1,7 +1,20 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device (the dry-run sets its own 512-device env in a subprocess).
 Multi-device distribution tests run via subprocess (tests/test_distributed.py).
+
+When the real ``hypothesis`` library is unavailable (the CI image does not
+ship it), a minimal bounded-random stand-in is registered that supports the
+exact API surface these tests use (given / settings / integers / booleans /
+sampled_from / lists). It draws ``max_examples`` seeded-random examples per
+test — weaker than real property search (no shrinking), but it keeps the
+property tests executable instead of un-collectable.
 """
+import inspect
+import random
+import sys
+import types
+import zlib
+
 import numpy as np
 import pytest
 
@@ -9,3 +22,69 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def _install_hypothesis_stub():
+    class _Strategy:
+        def __init__(self, draw):
+            self.example = draw
+
+    def integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def sampled_from(xs):
+        xs = list(xs)
+        return _Strategy(lambda r: xs[r.randrange(len(xs))])
+
+    def lists(elem, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elem.example(r) for _ in range(r.randint(min_size,
+                                                               max_size))])
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            fixture_params = params[:len(params) - len(strats)]
+            drawn_names = [p.name for p in params[len(params) - len(strats):]]
+
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", 50)
+                r = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    kw = dict(kwargs)
+                    kw.update((nm, s.example(r))
+                              for nm, s in zip(drawn_names, strats))
+                    fn(*args, **kw)
+
+            # pytest must only see the fixture params, not the drawn ones
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers, st.booleans = integers, booleans
+    st.sampled_from, st.lists = sampled_from, lists
+    mod.given, mod.settings, mod.strategies = given, settings, st
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401  (real library, preferred)
+except ImportError:
+    _install_hypothesis_stub()

@@ -23,8 +23,13 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 900):
     r = subprocess.run(
         [sys.executable, "-c", env_code + textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout,
+        # JAX_PLATFORMS=cpu: these tests want n *virtual host* devices;
+        # without it jax probes for real accelerators first, which on
+        # images that ship libtpu means a minute of metadata lookups and,
+        # depending on how they fail, a broken backend instead of the
+        # CPU fallback.
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"})
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     return r.stdout
 
@@ -33,7 +38,7 @@ def test_shuffle_conservation_and_ownership():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.distributed.compat import shard_map
         from repro.core.shuffle import invert_and_shuffle
         mesh = jax.make_mesh((8,), ("model",))
         D_per, L, V = 8, 24, 71
@@ -146,7 +151,7 @@ def test_packed2_shuffle_parity():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.distributed.compat import shard_map
         from repro.core.shuffle import invert_and_shuffle
         mesh = jax.make_mesh((8,), ("model",))
         D_per, L, V = 16, 32, 97

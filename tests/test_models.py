@@ -167,4 +167,6 @@ def test_scan_vs_unrolled_layers_identical():
     l1, _ = forward_train(params, batch, cfg, MI)
     cfg_u = dataclasses.replace(cfg, scan_layers=False)
     l2, _ = forward_train(params, batch, cfg_u, MI)
-    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    # same function, but XLA fuses/reassociates the f32 accumulations
+    # differently between the scanned and unrolled layer bodies
+    np.testing.assert_allclose(float(l1), float(l2), rtol=5e-5)

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.invert import invert_shard
 from repro.core.merge import merge_segments
-from repro.core.query import (build_block_index, bm25_exhaustive, bm25_topk)
+from repro.core.query import bm25_exhaustive, bm25_topk
+from repro.core.searcher import build_block_index
 from repro.core.segments import segment_from_run
 
 

@@ -8,7 +8,8 @@ import pytest
 
 from repro.configs.registry import get_arch
 from repro.core.indexer import DistributedIndexer
-from repro.core.query import build_block_index, bm25_topk, bm25_exhaustive
+from repro.core.query import bm25_topk, bm25_exhaustive
+from repro.core.searcher import build_block_index
 from repro.data.corpus import TINY, SyntheticCorpus
 from repro.core.tokenize import docs_to_buffer, tokenize_text
 
