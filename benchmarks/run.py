@@ -1,5 +1,7 @@
 """Benchmark harness — one function per paper table/figure + kernel
-micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
+micro-benches. Prints ``name,value,derived`` CSV rows and (with ``--json``)
+writes them as a ``BENCH_*.json`` artifact so CI accumulates the perf
+trajectory.
 
   table1_envelope   the paper's Table 1: calibrated envelope vs actuals
   indexing_pipeline our own pipeline's measured throughput + alpha
@@ -9,14 +11,29 @@ micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
   build_reader      vectorized vs scalar-loop block-index build speedup
   search_batched    batched multi-segment search qps vs batch size
   searcher_refresh  NRT refresh latency vs live segment count (cold/warm)
+  merge_throughput  streaming O(P) merge vs the lexsort oracle
+  index_gb_per_min  end-to-end ingest: sync vs concurrent merge scheduler
+                    (flush stalls while a merge is in flight)
+
+``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
+runs a single bench.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+ROWS: list[dict] = []
+
+
+def emit(name: str, value: float, derived: str = "", fmt: str = ".0f"):
+    ROWS.append({"name": name, "value": float(value), "derived": derived})
+    print(f"{name},{value:{fmt}},{derived}")
 
 
 def _time(fn, *args, iters=5, warmup=2):
@@ -28,21 +45,22 @@ def _time(fn, *args, iters=5, warmup=2):
     return (time.time() - t0) / iters * 1e6, out
 
 
-def table1_envelope():
+def table1_envelope(smoke=False):
     from repro.core.envelope import calibrate
     media, p, table = calibrate()
     errs = [abs(v["err"]) for v in table.values()]
-    print(f"table1_envelope.alpha,{p.alpha:.3f},merge-amplification")
-    print(f"table1_envelope.c_idx,{p.c_idx:.0f},core-s-per-GB")
-    print(f"table1_envelope.mean_abs_err,{np.mean(errs)*100:.1f},percent")
-    print(f"table1_envelope.max_abs_err,{np.max(errs)*100:.1f},percent")
+    emit("table1_envelope.alpha", p.alpha, "merge-amplification", ".3f")
+    emit("table1_envelope.c_idx", p.c_idx, "core-s-per-GB")
+    emit("table1_envelope.mean_abs_err", np.mean(errs) * 100, "percent",
+         ".1f")
+    emit("table1_envelope.max_abs_err", np.max(errs) * 100, "percent", ".1f")
     for (s, t, col), v in sorted(table.items()):
-        print(f"table1.{s}->{t}.{col},{v['pred']:.0f},"
-              f"actual={v['actual']}s err={v['err']*100:+.1f}% "
-              f"bound={v['bound']}")
+        emit(f"table1.{s}->{t}.{col}", v["pred"],
+             f"actual={v['actual']}s err={v['err']*100:+.1f}% "
+             f"bound={v['bound']}")
 
 
-def indexing_pipeline():
+def indexing_pipeline(smoke=False):
     from repro.configs.registry import get_arch
     from repro.core.indexer import DistributedIndexer
     from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
@@ -51,37 +69,40 @@ def indexing_pipeline():
     corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=cfg.doc_len)
     ix = DistributedIndexer(cfg=cfg, source="ceph", target="ssd")
     t0 = time.time()
-    n_batches, per = 8, 128
+    n_batches, per = (4, 64) if smoke else (8, 128)
     for i in range(n_batches):
         ix.index_batch(corpus.batch(i, per))
     ix.finalize()
     wall = time.time() - t0
     rep = ix.envelope_report()
     docs = n_batches * per
-    print(f"indexing.host_docs_per_s,{docs/wall:.0f},wall-clock(1-core)")
-    print(f"indexing.alpha_measured,{rep['alpha_measured']:.2f},"
-          f"vs-calibrated-2.74")
-    print(f"indexing.modeled_gb_per_min,{rep['gb_per_min_modeled']:.2f},"
-          f"bound={rep['bound']}")
+    emit("indexing.host_docs_per_s", docs / wall, "wall-clock(1-core)")
+    emit("indexing.alpha_measured", rep["alpha_measured"],
+         "vs-calibrated-2.74", ".2f")
+    emit("indexing.modeled_gb_per_min", rep["gb_per_min_modeled"],
+         f"bound={rep['bound']}", ".2f")
+    emit("indexing.merge_wall_s", rep["merge_wall_s"],
+         f"modeled={rep['t_merge_modeled_s']:.3f}s "
+         f"n_merges={rep['n_merges']}", ".3f")
 
 
-def pack_kernel():
+def pack_kernel(smoke=False):
     from repro.kernels.postings_pack import ref
     rng = np.random.default_rng(0)
-    nb = 4096
+    nb = 512 if smoke else 4096
     d = jnp.asarray(rng.integers(0, 10000, (nb, 128)).astype(np.uint32))
     pack = jax.jit(ref.pack_ref)
     us, (p, bw) = _time(pack, d)
     n_ints = nb * 128
-    print(f"pack_kernel.pack,{us:.0f},{n_ints/us:.0f}Mints/s "
-          f"ratio={float(ref.packed_bytes(bw))/(n_ints*4):.3f}")
+    emit("pack_kernel.pack", us, f"{n_ints/us:.0f}Mints/s "
+         f"ratio={float(ref.packed_bytes(bw))/(n_ints*4):.3f}")
     unpack = jax.jit(ref.unpack_ref)
     us2, u = _time(unpack, p, bw)
-    print(f"pack_kernel.unpack,{us2:.0f},{n_ints/us2:.0f}Mints/s")
+    emit("pack_kernel.unpack", us2, f"{n_ints/us2:.0f}Mints/s")
     assert (np.asarray(u) == np.asarray(d)).all()
 
 
-def bm25_query():
+def bm25_query(smoke=False):
     from repro.core.invert import invert_shard
     from repro.core.query import bm25_exhaustive, bm25_topk
     from repro.core.searcher import build_block_index
@@ -103,18 +124,18 @@ def bm25_query():
     _, _, stats = bm25_topk(idx, q, 10)
     frac = float(stats["blocks_scored"]) / max(float(stats["blocks_total"]),
                                                1.0)
-    print(f"bm25.exhaustive,{us_ex:.0f},docs={D}")
-    print(f"bm25.blockmax,{us_pr:.0f},scored_frac={frac:.2f}")
+    emit("bm25.exhaustive", us_ex, f"docs={D}")
+    emit("bm25.blockmax", us_pr, f"scored_frac={frac:.2f}")
 
 
-def invert_kernel():
+def invert_kernel(smoke=False):
     from repro.core.invert import invert_shard
     rng = np.random.default_rng(2)
     D, L = 512, 512
     tokens = jnp.asarray(rng.integers(0, 1 << 18, (D, L)).astype(np.int32))
     f = jax.jit(lambda t: invert_shard(t, 0))
     us, _ = _time(f, tokens)
-    print(f"invert.sort_invert,{us:.0f},{D*L/us:.1f}Mtok/s(1-core-cpu)")
+    emit("invert.sort_invert", us, f"{D*L/us:.1f}Mtok/s(1-core-cpu)")
 
 
 def _cw09b_segment(n_docs=2048, doc_len=384, batch=0, base=0):
@@ -131,7 +152,7 @@ def _cw09b_segment(n_docs=2048, doc_len=384, batch=0, base=0):
                             np.asarray(run.doc_len))
 
 
-def build_reader():
+def build_reader(smoke=False):
     from repro.core.searcher import build_block_index, build_block_index_loop
     seg = _cw09b_segment()
     jax.block_until_ready(build_block_index(seg).packed_docs)  # warm pack
@@ -152,13 +173,13 @@ def build_reader():
                for f in ("terms", "term_block_start", "idf",
                          "packed_docs", "bw_docs", "packed_tf", "bw_tf",
                          "first_doc", "max_tf", "doc_norm"))
-    print(f"build_reader.vectorized,{t_vec*1e6:.0f},"
-          f"terms={seg.n_terms} postings={seg.n_postings}")
-    print(f"build_reader.loop,{t_loop*1e6:.0f},"
-          f"speedup={t_loop/t_vec:.1f}x bit_identical={same}")
+    emit("build_reader.vectorized", t_vec * 1e6,
+         f"terms={seg.n_terms} postings={seg.n_postings}")
+    emit("build_reader.loop", t_loop * 1e6,
+         f"speedup={t_loop/t_vec:.1f}x bit_identical={same}")
 
 
-def search_batched():
+def search_batched(smoke=False):
     from repro.core.searcher import ReaderCache
     from repro.core.merge import MergeDriver
     drv = MergeDriver(fanout=10)
@@ -176,11 +197,11 @@ def search_batched():
         us, _ = _time(lambda qq: searcher.search_batched(qq, 10), q)
         qps = B / (us / 1e6)
         qps1 = qps1 or qps
-        print(f"search_batched.b{B},{us:.0f},{qps:.0f}qps "
-              f"speedup_vs_b1={qps/qps1:.1f}x")
+        emit(f"search_batched.b{B}", us,
+             f"{qps:.0f}qps speedup_vs_b1={qps/qps1:.1f}x")
 
 
-def searcher_refresh():
+def searcher_refresh(smoke=False):
     from repro.core.merge import MergeDriver
     from repro.core.searcher import ReaderCache
     for n_segs in (1, 4, 16):
@@ -195,21 +216,130 @@ def searcher_refresh():
         t0 = time.time()
         cache.refresh(drv.live_segments())  # all readers cached
         warm = time.time() - t0
-        print(f"searcher_refresh.segs{n_segs},{cold*1e6:.0f},"
-              f"warm={warm*1e6:.0f}us builds={cache.builds} "
-              f"hits={cache.hits}")
+        emit(f"searcher_refresh.segs{n_segs}", cold * 1e6,
+             f"warm={warm*1e6:.0f}us builds={cache.builds} "
+             f"hits={cache.hits}")
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
-    table1_envelope()
-    indexing_pipeline()
-    pack_kernel()
-    bm25_query()
-    invert_kernel()
-    build_reader()
-    search_batched()
-    searcher_refresh()
+def merge_throughput(smoke=False):
+    """Streaming O(P) merge vs the lexsort oracle (same inputs, identical
+    output asserted). The acceptance bar is >= 3x on the merge row."""
+    from repro.core.merge import merge_segments, merge_segments_sorted
+    k, n_docs = (4, 512) if smoke else (10, 4096)  # k = driver fanout
+    segs = [_cw09b_segment(n_docs=n_docs, doc_len=384, batch=i,
+                           base=i * n_docs) for i in range(k)]
+    P = sum(s.n_postings for s in segs)
+
+    def best_of(fn, n=3):
+        best, out = float("inf"), None
+        for _ in range(n):
+            t0 = time.perf_counter()
+            out = fn(segs)
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    t_new, m_new = best_of(merge_segments)
+    t_old, m_old = best_of(merge_segments_sorted)
+    same = all(np.array_equal(getattr(m_new, f), getattr(m_old, f))
+               for f in ("terms", "term_start", "docs", "tf", "positions",
+                         "pos_start", "doc_ids", "doc_len"))
+    assert same, "streaming merge diverged from the lexsort oracle"
+    emit("merge.streaming", t_new * 1e6,
+         f"segs={k} postings={P} {P/t_new/1e6:.1f}Mpost/s")
+    emit("merge.lexsort", t_old * 1e6,
+         f"speedup={t_old/t_new:.1f}x bit_identical={same}")
+
+
+def index_gb_per_min(smoke=False):
+    """End-to-end ingest at media speed: the same batch stream through the
+    synchronous write path (merges stall flushes) and the concurrent
+    scheduler (merges ride background threads). The stall row is the max
+    ``index_batch`` wall time — in sync mode the cascade-triggering batch
+    pays the whole merge; with the scheduler it must not."""
+    import dataclasses
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+
+    cfg = get_arch("lucene-envelope").smoke
+    n_batches, per, doc_len = (8, 128, 128) if smoke else (16, 512, 256)
+    cfg = dataclasses.replace(cfg, doc_len=doc_len)
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=doc_len)
+    batches = [corpus.batch(i, per) for i in range(n_batches)]
+    results = {}
+    for threads in (0, 2):
+        ix = DistributedIndexer(cfg=cfg, source="ceph", target="ssd",
+                                merge_threads=threads)
+        lat = []
+        t0 = time.perf_counter()
+        for b in batches:
+            t1 = time.perf_counter()
+            ix.index_batch(b)
+            lat.append(time.perf_counter() - t1)
+        ingest_wall = time.perf_counter() - t0
+        # cascade merges only: finalize()'s force merge is inline by design
+        if ix.merge_scheduler is not None:
+            ix.merge_scheduler.drain()  # land in-flight cascades first
+        cascade_merge_wall = ix.merger.merge_wall_s
+        ix.finalize()
+        total_wall = time.perf_counter() - t0
+        gb = ix.stats.read_bytes / 1e9
+        results[threads] = {
+            "gb_per_min": gb / (total_wall / 60),
+            "ingest_gb_per_min": gb / (ingest_wall / 60),
+            "max_flush_ms": max(lat) * 1e3,
+            "merge_wall_s": cascade_merge_wall,
+            "n_merges": ix.merger.n_merges,
+        }
+        ix.close()
+    sync, conc = results[0], results[2]
+    emit("index_gb_per_min.sync", sync["gb_per_min"],
+         f"ingest={sync['ingest_gb_per_min']:.2f} "
+         f"n_merges={sync['n_merges']}", ".2f")
+    emit("index_gb_per_min.concurrent", conc["gb_per_min"],
+         f"ingest={conc['ingest_gb_per_min']:.2f} "
+         f"speedup={conc['gb_per_min']/sync['gb_per_min']:.2f}x "
+         f"merge_wall={conc['merge_wall_s']:.2f}s(backgrounded)", ".2f")
+    emit("index_gb_per_min.flush_stall_sync_ms", sync["max_flush_ms"],
+         "max index_batch wall (pays merge inline)", ".1f")
+    emit("index_gb_per_min.flush_stall_concurrent_ms", conc["max_flush_ms"],
+         f"stall_free={conc['max_flush_ms'] <= sync['max_flush_ms']}", ".1f")
+
+
+BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
+           invert_kernel, build_reader, search_batched, searcher_refresh,
+           merge_throughput, index_gb_per_min]
+SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
+                 invert_kernel, merge_throughput, index_gb_per_min]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset at reduced sizes")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as a BENCH_*.json artifact")
+    ap.add_argument("--only", metavar="NAME",
+                    help="run a single bench by function name")
+    args = ap.parse_args(argv)
+    benches = SMOKE_BENCHES if args.smoke else BENCHES
+    if args.only:
+        benches = [b for b in BENCHES if b.__name__ == args.only]
+        if not benches:
+            raise SystemExit(f"unknown bench {args.only!r}; one of "
+                             f"{[b.__name__ for b in BENCHES]}")
+    print("name,value,derived")
+    t0 = time.time()
+    for bench in benches:
+        bench(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke,
+                       "backend": jax.default_backend(),
+                       "wall_s": time.time() - t0,
+                       "benches": [b.__name__ for b in benches],
+                       "rows": ROWS}, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

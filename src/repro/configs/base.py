@@ -189,6 +189,9 @@ class EnvelopeConfig:
     postings_block: int = 128  # lane-blocked PFor block size
     flush_budget_mb: int = 256
     merge_fanout: int = 10  # tiered-merge fanout (Lucene default)
+    # background merge workers (ConcurrentMergeScheduler); 0 = merges run
+    # synchronously inside add_flush (the coupled write path)
+    merge_threads: int = 0
     store_positions: bool = True
     store_doc_vectors: bool = True
     # "raw": 3x int32 per entry over the wire; "packed2": (local_doc|pos,

@@ -22,6 +22,7 @@ force-merged end state.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -35,7 +36,7 @@ from repro.distributed.compat import shard_map
 
 from repro.core import envelope as env
 from repro.core.invert import invert_shard
-from repro.core.merge import MergeDriver
+from repro.core.merge import ConcurrentMergeScheduler, MergeDriver
 from repro.core.searcher import IndexSearcher, ReaderCache
 from repro.core.segments import Segment, segment_from_run
 from repro.core.shuffle import invert_and_shuffle
@@ -129,6 +130,13 @@ class DistributedIndexer:
     stats: IndexStats = field(default_factory=IndexStats)
     merger: MergeDriver = None
     reader_cache: ReaderCache = None
+    # > 0: run merges on a ConcurrentMergeScheduler with that many worker
+    # threads, so index_batch/_flush never wait on a cascade. 0: synchronous
+    # merges inside add_flush, the paper's coupled write path. None
+    # (default): take cfg.merge_threads (an explicit 0 here overrides a
+    # concurrent config).
+    merge_threads: int = None
+    merge_scheduler: ConcurrentMergeScheduler = None
     _next_doc: int = 0
 
     def __post_init__(self):
@@ -136,8 +144,18 @@ class DistributedIndexer:
         self.media = self.media or env.MEDIA
         self.params = self.params or env.EnvelopeParams()
         self.merger = MergeDriver(fanout=self.cfg.merge_fanout)
+        if self.merge_threads is None:
+            self.merge_threads = self.cfg.merge_threads
+        if self.merge_threads:
+            self.merge_scheduler = ConcurrentMergeScheduler(
+                self.merger, max_threads=self.merge_threads)
         self.reader_cache = ReaderCache()
         self._flush_policy = FlushPolicy(budget_mb=self.cfg.flush_budget_mb)
+        # serializes the flush buffer handoff + doc-id allocation: refresh
+        # (flush=True) may be called from a search thread while the ingest
+        # thread is mid-index_batch, and overlapping doc-id ranges would
+        # break the disjointness invariant the merge path asserts on
+        self._flush_lock = threading.RLock()
         self._jit_invert = jax.jit(invert_shard)
 
     def index_batch(self, tokens: np.ndarray):
@@ -147,11 +165,16 @@ class DistributedIndexer:
         self.stats.docs += tokens.shape[0]
         self.stats.tokens += int((tokens > 0).sum())
         self.stats.read_bytes += tokens.nbytes
-        if self._flush_policy.add(tokens):
-            return self._flush()
+        with self._flush_lock:
+            if self._flush_policy.add(tokens):
+                return self._flush()
         return None
 
     def _flush(self):
+        with self._flush_lock:
+            return self._flush_locked()
+
+    def _flush_locked(self):
         if self._flush_policy.pending_docs == 0:
             return None
         t0 = time.time()
@@ -169,8 +192,17 @@ class DistributedIndexer:
         return seg
 
     def finalize(self) -> Segment:
+        """Force-merge to the paper's single-segment end state. With a
+        scheduler attached this first drains in-flight cascades (inside
+        ``MergeDriver.finalize``); the scheduler stays usable afterwards."""
         self._flush()
         return self.merger.finalize()
+
+    def close(self):
+        """Release the background merge pool (no-op when synchronous)."""
+        if self.merge_scheduler is not None:
+            self.merge_scheduler.close()
+            self.merge_scheduler = None
 
     def refresh(self, flush: bool = True) -> IndexSearcher:
         """Near-real-time snapshot: everything indexed so far becomes
@@ -195,8 +227,9 @@ class DistributedIndexer:
         """Charge measured bytes to the configured media pair."""
         src, tgt = self.media[self.source], self.media[self.target]
         G = self.stats.read_bytes
-        W = self.merger.bytes_written
-        alpha = self.merger.amplification()
+        merge = self.merger.snapshot()  # atomic vs in-flight merge installs
+        W = merge["bytes_written"]
+        alpha = merge["amplification"]
         t_read = G / (src.read_bw * env.GB)
         t_write = W / (tgt.write_bw * env.GB)
         t_cpu = (G / env.GB) * self.params.c_idx / self.params.n_cores
@@ -209,6 +242,13 @@ class DistributedIndexer:
             total = max(t_read, t_cpu, t_write)
             bound = ["read", "cpu", "write"][int(np.argmax(
                 [t_read, t_cpu, t_write]))]
+        # merge cost: what the model charges the cascade (re-reads from the
+        # target + merge re-writes at target bandwidth) next to the wall
+        # clock the merges actually took — the modeled-vs-actual gap.
+        merge_writes = W - merge["flushed_bytes"]
+        t_merge_modeled = (merge["bytes_read_merge"]
+                           / (tgt.read_bw * env.GB)
+                           + merge_writes / (tgt.write_bw * env.GB))
         return {
             "alpha_measured": alpha,
             "bytes_read": G, "bytes_written": W,
@@ -216,6 +256,10 @@ class DistributedIndexer:
             "modeled_total_s": total, "bound": bound,
             "gb_per_min_modeled": (G / env.GB) / max(total / 60, 1e-9),
             "docs_per_s_modeled": self.stats.docs / max(total, 1e-9),
-            "n_merges": self.merger.n_merges,
+            "n_merges": merge["n_merges"],
             "wall_s_host": self.stats.wall_s,
+            "t_merge_modeled_s": t_merge_modeled,
+            "merge_wall_s": merge["merge_wall_s"],
+            "merge_concurrency": (self.merge_scheduler.max_threads
+                                  if self.merge_scheduler else 0),
         }

@@ -7,21 +7,52 @@ amplification the envelope model charges to the target medium. The tiered
 policy here mirrors Lucene's TieredMergePolicy at ``fanout`` segments per
 tier; ``MergeDriver.bytes_written`` divided by the final segment size IS
 the measured amplification alpha that calibrates the paper's Table 1.
+
+Two write-path lessons from the paper are implemented here:
+
+* ``merge_segments`` is a streaming O(P) k-way merge. The inputs already
+  satisfy two invariants — each segment is sorted by ``(term, doc)`` and
+  doc-id spaces are disjoint contiguous ranges — so re-sorting the union
+  (the old lexsort) throws information away. Instead, each input's output
+  positions are computed with ``np.searchsorted`` on the merged term
+  dictionary plus offset arithmetic and the postings/tf/position-runs are
+  scattered directly. The lexsort implementation survives as
+  ``merge_segments_sorted``, the parity oracle asserted in tests.
+* ``ConcurrentMergeScheduler`` (the shape of Lucene's class of the same
+  name) runs merges on a background thread pool so ``index_batch``/
+  ``_flush`` never wait on a merge — write-write decoupling to match the
+  read path's write-read decoupling. The driver stays the single owner of
+  tier state: workers *claim* a batch under the driver lock (the batch
+  moves from its tier to the in-flight list, so ``live_segments()``
+  snapshots stay complete), merge outside the lock, and install the output
+  under the lock.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.core.segments import Segment
+from repro.core.segments import Segment, fresh_seg_id
 
 
-def merge_segments(segs: list[Segment]) -> Segment:
-    """k-way merge: exact union of postings. Doc-id spaces of the inputs
-    must be disjoint (per-device doc partitions guarantee this)."""
+def _bump_single(seg: Segment) -> Segment:
+    """A 1-way "merge": same postings, next generation. Shares the input's
+    (immutable) arrays; gets a fresh seg_id because tier accounting treats
+    it as a new segment."""
+    return replace(seg, generation=seg.generation + 1,
+                   seg_id=fresh_seg_id())
+
+
+def merge_segments_sorted(segs: list[Segment]) -> Segment:
+    """Lexsort-based k-way merge — the original implementation, kept as the
+    parity oracle for ``merge_segments`` (asserted bit-identical in
+    tests/test_merge.py). Only requires doc-id spaces to be disjoint."""
     if len(segs) == 1:
-        return segs[0]
+        return _bump_single(segs[0])
     terms = np.concatenate([np.repeat(s.terms, np.diff(s.term_start))
                             for s in segs])
     docs = np.concatenate([s.docs for s in segs])
@@ -58,9 +89,103 @@ def merge_segments(segs: list[Segment]) -> Segment:
                    generation=max(s.generation for s in segs) + 1)
 
 
+def merge_segments(segs: list[Segment]) -> Segment:
+    """Streaming O(P) k-way merge: exact union of postings, bit-identical
+    to ``merge_segments_sorted`` but without the O(P log P) re-sort.
+
+    Exploited invariants (both hold for every segment the pipeline
+    produces — asserted cheaply below):
+      * each input is sorted by ``(term, doc)``;
+      * doc-id spaces are disjoint contiguous ranges, so once the inputs
+        are ordered by their first doc id, concatenating each term's
+        per-segment runs in input order is already doc-sorted.
+
+    The merged term dictionary comes from ``np.unique`` over the (small)
+    input dictionaries; every posting's output slot is then pure offset
+    arithmetic — merged term start + within-term offset of its segment's
+    run + rank within the run — and postings scatter straight to their
+    slots in one vectorized pass per input. Position runs never touch an
+    intermediate concatenated stream: each input's position array is
+    already ordered by (term, doc), so it scatters as contiguous source
+    runs with a single fused ``repeat(dst_start - src_start) + arange``
+    index per input (``repeat(a, l) + repeat(b, l) == repeat(a + b, l)``).
+    """
+    if len(segs) == 1:
+        return _bump_single(segs[0])
+    # order inputs by doc range (empty inputs first; they contribute nothing)
+    segs = sorted(segs, key=lambda s: int(s.doc_ids[0]) if s.n_docs else -1)
+    doc_ids = np.concatenate([s.doc_ids for s in segs])
+    assert doc_ids.size < 2 or (np.diff(doc_ids) > 0).all(), \
+        "doc-id spaces must be disjoint ordered ranges"
+    doc_len = np.concatenate([s.doc_len for s in segs])
+
+    uterms = np.unique(np.concatenate([s.terms for s in segs]))
+    T = uterms.size
+    P = sum(s.n_postings for s in segs)
+    # merged df per term, then CSR starts
+    df_out = np.zeros(T, np.int64)
+    tpos, dfs = [], []
+    for s in segs:
+        ti = np.searchsorted(uterms, s.terms)
+        df = np.diff(s.term_start).astype(np.int64)
+        np.add.at(df_out, ti, df)
+        tpos.append(ti)
+        dfs.append(df)
+    term_start = np.concatenate([[0], np.cumsum(df_out)])
+
+    docs = np.empty(P, np.int64)
+    tf = np.empty(P, np.int64)
+    # within-term write cursor advances as segments are consumed in order
+    cursor = term_start[:-1].copy()
+    outs = []
+    for s, ti, df in zip(segs, tpos, dfs):
+        p = s.n_postings
+        out = None
+        if p:
+            starts = cursor[ti]
+            cursor[ti] += df
+            # posting j of this input lands at
+            #   starts[term(j)] + (j - term_start[term(j)])
+            out = np.repeat(starts - s.term_start[:-1], df) + np.arange(p)
+            docs[out] = s.docs
+            tf[out] = s.tf
+        outs.append(out)
+    pos_start = np.concatenate([[0], np.cumsum(tf)])
+    positions = np.empty(int(pos_start[-1]) if P else 0, np.int64)
+    for s, out in zip(segs, outs):
+        if out is not None and len(s.positions):
+            # element m of this input's position stream belongs to its
+            # posting j(m); it lands at pos_start[out[j]] + (m - src_start)
+            dst = np.repeat(pos_start[:-1][out] - s.pos_start[:-1],
+                            s.tf) + np.arange(len(s.positions))
+            positions[dst] = s.positions
+    return Segment(terms=uterms, term_start=term_start, docs=docs, tf=tf,
+                   positions=positions, pos_start=pos_start,
+                   doc_ids=doc_ids, doc_len=doc_len,
+                   generation=max(s.generation for s in segs) + 1)
+
+
+@dataclass(eq=False)
+class _MergeWork:
+    """One claimed merge: its source tier and the batch pulled from it.
+    Identity equality (eq=False) — instances are tracked in lists."""
+
+    tier: int
+    batch: list
+
+
 @dataclass
 class MergeDriver:
-    """Tiered merge policy with write-amplification accounting."""
+    """Tiered merge policy with write-amplification accounting.
+
+    Thread-safety: all tier/counter mutation happens under ``_lock``. A
+    merge is *claimed* (``pop_merge_work``: the batch leaves its tier and
+    parks in ``_in_flight``), executed lock-free (``merge_segments`` is
+    pure), and *installed* (``run_merge`` tail: counters + output segment
+    move under the lock). ``live_segments()`` therefore always sees every
+    doc exactly once: claimed inputs stay visible until the instant their
+    merged output replaces them.
+    """
 
     fanout: int = 10
     tiers: dict = field(default_factory=dict)
@@ -68,25 +193,77 @@ class MergeDriver:
     bytes_read_merge: int = 0   # merge re-reads
     n_merges: int = 0
     flushed_bytes: int = 0
+    merge_wall_s: float = 0.0   # measured wall-clock inside merge_segments
+    scheduler: object = None    # ConcurrentMergeScheduler when attached
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+    _in_flight: list = field(default_factory=list, repr=False)
 
     def add_flush(self, seg: Segment):
-        sz = seg.total_bytes()
-        self.bytes_written += sz
-        self.flushed_bytes += sz
-        self.tiers.setdefault(0, []).append(seg)
-        self._cascade()
+        """Account a freshly flushed segment. With a scheduler attached
+        this only notifies the background pool (the caller — the ingest
+        thread — never merges); without one it cascades synchronously."""
+        sz = seg.total_bytes()  # memoized: the O(P) pass stays off the lock
+        with self._lock:
+            self.bytes_written += sz
+            self.flushed_bytes += sz
+            self.tiers.setdefault(0, []).append(seg)
+        sched = self.scheduler
+        if sched is not None:
+            try:
+                sched.notify()
+                return
+            except RuntimeError:
+                # pool raced a concurrent close() between the check above
+                # and submit; the claim was restored — merge inline instead
+                pass
+        self._drain_sync()
 
-    def _cascade(self):
-        tier = 0
-        while len(self.tiers.get(tier, [])) >= self.fanout:
-            batch = self.tiers[tier][:self.fanout]
-            self.tiers[tier] = self.tiers[tier][self.fanout:]
-            self.bytes_read_merge += sum(s.total_bytes() for s in batch)
-            merged = merge_segments(batch)
+    def pop_merge_work(self) -> _MergeWork | None:
+        """Claim the lowest-tier pending merge, or None. The claimed batch
+        moves from its tier to ``_in_flight`` so it stays searchable."""
+        with self._lock:
+            for tier in sorted(self.tiers):
+                if len(self.tiers[tier]) >= self.fanout:
+                    batch = self.tiers[tier][:self.fanout]
+                    self.tiers[tier] = self.tiers[tier][self.fanout:]
+                    work = _MergeWork(tier, batch)
+                    self._in_flight.append(work)
+                    return work
+        return None
+
+    def run_merge(self, work: _MergeWork) -> Segment:
+        """Execute one claimed merge and install its output (callable from
+        any thread; the expensive part runs outside the lock)."""
+        t0 = time.perf_counter()
+        try:
+            merged = merge_segments(work.batch)
+            dt = time.perf_counter() - t0
+            # memoized byte accounting: off the lock and off the timer
+            # (merge_wall_s measures the merge itself, not its accounting)
+            merged.total_bytes()
+        except BaseException:
+            self.restore_work(work)  # no doc may ever go missing
+            raise
+        with self._lock:
+            self._in_flight.remove(work)
+            self.bytes_read_merge += sum(s.total_bytes() for s in work.batch)
             self.bytes_written += merged.total_bytes()
             self.n_merges += 1
-            self.tiers.setdefault(tier + 1, []).append(merged)
-            tier += 1
+            self.merge_wall_s += dt
+            self.tiers.setdefault(work.tier + 1, []).append(merged)
+        return merged
+
+    def restore_work(self, work: _MergeWork):
+        """Un-claim a merge that could not run: its batch goes back to the
+        front of its tier, staying claimable and searchable."""
+        with self._lock:
+            self._in_flight.remove(work)
+            self.tiers.setdefault(work.tier, [])[:0] = work.batch
+
+    def _drain_sync(self):
+        while (work := self.pop_merge_work()) is not None:
+            self.run_merge(work)
 
     def live_segments(self) -> list[Segment]:
         """Snapshot of the current searchable segment set, largest tier
@@ -94,25 +271,159 @@ class MergeDriver:
         a distinct doc range; merges union their inputs), so a searcher can
         evaluate them independently and merge top-k. The returned segments
         are immutable — later flushes/merges produce *new* Segment objects,
-        leaving this snapshot valid (write-read decoupling)."""
-        return [s for t in sorted(self.tiers, reverse=True)
-                for s in self.tiers[t]]
+        leaving this snapshot valid (write-read decoupling). Batches of
+        in-flight merges are included (their outputs are not installed
+        yet), so every doc appears exactly once at any instant."""
+        with self._lock:
+            tiers = {w.tier for w in self._in_flight} | set(self.tiers)
+            segs = []
+            for t in sorted(tiers, reverse=True):
+                for w in self._in_flight:
+                    if w.tier == t:
+                        segs.extend(w.batch)
+                segs.extend(self.tiers.get(t, []))
+            return segs
 
     def finalize(self) -> Segment:
-        """Force-merge everything into one segment (the paper's end state)."""
-        remaining = [s for t in sorted(self.tiers) for s in self.tiers[t]]
-        assert remaining, "nothing indexed"
-        while len(remaining) > 1:
-            batch = remaining[:self.fanout]
-            remaining = remaining[self.fanout:]
-            self.bytes_read_merge += sum(s.total_bytes() for s in batch)
-            merged = merge_segments(batch)
-            self.bytes_written += merged.total_bytes()
-            self.n_merges += 1
-            remaining.append(merged)
-        self.tiers = {0: remaining}
-        return remaining[0]
+        """Force-merge everything into one segment (the paper's end state).
+        Drains the scheduler first, so in-flight cascades land before the
+        final merge tree is built."""
+        if self.scheduler is not None:
+            self.scheduler.drain()
+        self._drain_sync()  # any tier that filled right at the end
+        while True:
+            with self._lock:
+                assert not self._in_flight
+                remaining = [s for t in sorted(self.tiers)
+                             for s in self.tiers[t]]
+                assert remaining, "nothing indexed"
+                if len(remaining) == 1:
+                    self.tiers = {0: remaining}
+                    return remaining[0]
+                batch = remaining[:self.fanout]
+                top = max(self.tiers)
+                keep = remaining[self.fanout:]
+                self.tiers = {0: keep} if keep else {}
+                work = _MergeWork(top, batch)
+                self._in_flight.append(work)
+            self.run_merge(work)
+
+    def snapshot(self) -> dict:
+        """All counters read atomically (a background merge installing
+        mid-read would otherwise tear e.g. bytes_written vs
+        bytes_read_merge by one merge)."""
+        with self._lock:
+            live = [s for t in self.tiers.values() for s in t]
+            live += [s for w in self._in_flight for s in w.batch]
+            final = sum(s.total_bytes() for s in live)
+            return {
+                "bytes_written": self.bytes_written,
+                "bytes_read_merge": self.bytes_read_merge,
+                "flushed_bytes": self.flushed_bytes,
+                "n_merges": self.n_merges,
+                "merge_wall_s": self.merge_wall_s,
+                "amplification": self.bytes_written / max(final, 1),
+            }
 
     def amplification(self) -> float:
-        final = sum(s.total_bytes() for t in self.tiers.values() for s in t)
-        return self.bytes_written / max(final, 1)
+        return self.snapshot()["amplification"]
+
+
+class ConcurrentMergeScheduler:
+    """Background merge execution, mirroring Lucene's scheduler of the same
+    name: ingest threads only *enqueue* merge pressure; a small thread pool
+    claims batches from the ``MergeDriver`` and runs them concurrently.
+
+    Lifecycle: constructing the scheduler attaches it to the driver
+    (``driver.scheduler = self``); ``notify()`` (called by ``add_flush``)
+    claims every currently-available merge and submits it; each completed
+    merge re-notifies, so cascades propagate tier by tier without the
+    ingest thread ever blocking. ``drain()`` blocks until no merge is
+    pending or in flight (used by ``finalize`` and tests); ``close()``
+    drains, detaches, and shuts the pool down.
+
+    Worker exceptions are captured keyed by the claimed batch (a failed
+    merge must not be silently dropped — its inputs go back to their tier)
+    and re-raised from the next ``drain()``. A later *successful* merge of
+    the same batch clears its recorded error: transient failures self-heal
+    instead of raising stale on a healthy index; persistent failures keep
+    raising.
+    """
+
+    def __init__(self, driver: MergeDriver, max_threads: int = 2):
+        self.driver = driver
+        self.max_threads = max_threads
+        self.pool = ThreadPoolExecutor(max_workers=max_threads,
+                                       thread_name_prefix="merge")
+        self._cv = threading.Condition()
+        self._pending = {}          # future -> _MergeWork, not yet done
+        self._errors = {}           # batch key -> exception
+        self.submitted = 0
+        self.peak_pending = 0
+        driver.scheduler = self
+
+    @staticmethod
+    def _key(work: _MergeWork):
+        return tuple(s.seg_id for s in work.batch)
+
+    def notify(self):
+        """Claim and submit every merge the driver currently has ready."""
+        while (work := self.driver.pop_merge_work()) is not None:
+            try:
+                with self._cv:
+                    fut = self.pool.submit(self.driver.run_merge, work)
+                    self._pending[fut] = work
+                    self.submitted += 1
+                    self.peak_pending = max(self.peak_pending,
+                                            len(self._pending))
+            except BaseException:
+                # submit can fail (pool racing shutdown): un-claim so the
+                # batch is neither lost nor stuck in _in_flight
+                self.driver.restore_work(work)
+                raise
+            fut.add_done_callback(self._done)
+
+    def _done(self, fut):
+        exc = fut.exception()
+        with self._cv:
+            work = self._pending.pop(fut, None)
+            if work is not None:
+                if exc is None:
+                    self._errors.pop(self._key(work), None)  # retry healed
+                else:
+                    self._errors[self._key(work)] = exc
+        if exc is None:
+            self.notify()   # the installed output may have filled a tier
+        with self._cv:
+            self._cv.notify_all()
+
+    def drain(self):
+        """Block until every pending and in-flight merge has completed
+        (and the cascades they trigger), then re-raise the first still-
+        pending worker error. Raising only after quiescing means callers
+        observe a settled driver (nothing pending or in flight, failed
+        inputs restored to their tiers); each drain retries a failed batch
+        at most once more via its leading ``notify``."""
+        while True:
+            self.notify()
+            with self._cv:
+                while self._pending:
+                    self._cv.wait(0.1)
+                if self._errors:
+                    raise self._errors.pop(next(iter(self._errors)))
+            with self.driver._lock:
+                busy = bool(self.driver._in_flight)
+                ready = any(len(v) >= self.driver.fanout
+                            for v in self.driver.tiers.values())
+            if not busy and not ready:
+                break
+
+    def close(self):
+        try:
+            self.drain()
+        finally:  # release threads/detach even when drain re-raises;
+            # detach FIRST so a racing add_flush falls back to synchronous
+            # merging instead of submitting to a closed pool
+            if self.driver.scheduler is self:
+                self.driver.scheduler = None
+            self.pool.shutdown(wait=True)

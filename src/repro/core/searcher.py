@@ -33,6 +33,7 @@ old searcher while indexing proceeds, and swap in a fresh one per refresh.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import jax
@@ -246,6 +247,8 @@ class IndexSearcher:
     n_docs: int = 0
     avgdl: float = 1.0
     _doc_norms: list = None
+    _df_terms: np.ndarray = None   # (U,) sorted union of segment terms
+    _df_table: np.ndarray = None   # (U,) collection-wide df per term
 
     def __post_init__(self):
         dls = [r.seg.doc_len for r in self.readers]
@@ -258,23 +261,36 @@ class IndexSearcher:
                          r.seg.doc_len.astype(np.float64) / self.avgdl)
                          ).astype(np.float32))
             for r in self.readers]
+        # merged (term, df) table, built once per snapshot: doc spaces are
+        # disjoint, so collection df is the plain sum of per-segment dfs.
+        # global_idf then costs one searchsorted per query batch instead of
+        # one per (reader, query).
+        if self.readers:
+            all_t = np.concatenate([r.terms_np for r in self.readers])
+            all_df = np.concatenate([r.df_np for r in self.readers])
+            self._df_terms, inv = np.unique(all_t, return_inverse=True)
+            self._df_table = np.zeros(self._df_terms.size, np.int64)
+            np.add.at(self._df_table, inv, all_df)
+        else:
+            self._df_terms = np.zeros(0, np.int64)
+            self._df_table = np.zeros(0, np.int64)
 
     @property
     def n_segments(self) -> int:
         return len(self.readers)
 
     def global_idf(self, q_terms: np.ndarray) -> np.ndarray:
-        """Collection-wide idf for ``q_terms`` (any shape): per-segment df
-        looked up host-side and summed, then the same idf formula the
-        single-segment builder bakes in."""
+        """Collection-wide idf for ``q_terms`` (any shape): one lookup in
+        the precomputed merged (term, df) table, then the same idf formula
+        the single-segment builder bakes in. Terms absent from every
+        segment (including -1 query padding) get df 0."""
         q = np.asarray(q_terms, np.int64)
-        df = np.zeros(q.shape, np.int64)
-        for r in self.readers:
-            t = r.terms_np
-            if t.size == 0:
-                continue
+        t = self._df_terms
+        if t.size == 0:
+            df = np.zeros(q.shape, np.int64)
+        else:
             rows = np.clip(np.searchsorted(t, q), 0, t.size - 1)
-            df += np.where(t[rows] == q, r.df_np[rows], 0)
+            df = np.where(t[rows] == q, self._df_table[rows], 0)
         return np.log(1.0 + (self.n_docs - df + 0.5) / (df + 0.5)
                       ).astype(np.float32)
 
@@ -348,6 +364,12 @@ class ReaderCache:
     cached readers for segments seen before and evicting readers whose
     segments left the live set (merged away). After a merge cascade only
     the cascade's *output* segment needs a reader build.
+
+    Thread-safe under the concurrent merge scheduler: ``segs`` is an
+    atomic ``live_segments()`` snapshot of immutable segments, so reader
+    builds never race with the merge that produced a segment; the internal
+    lock only serializes concurrent ``refresh`` callers mutating the cache
+    dict and its counters.
     """
 
     k1: float = 0.9
@@ -356,18 +378,40 @@ class ReaderCache:
     hits: int = 0
     evictions: int = 0
     _readers: dict = field(default_factory=dict)
+    _max_seen: int = -1  # newest seg_id ever installed (monotonic)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
 
     def refresh(self, segs: list) -> IndexSearcher:
-        live, readers = {}, []
-        for seg in segs:
-            r = self._readers.get(seg.seg_id)
-            if r is None:
-                r = SegmentReader.open(seg, self.k1, self.b)
-                self.builds += 1
-            else:
-                self.hits += 1
-            live[seg.seg_id] = r
-            readers.append(r)
-        self.evictions += len(set(self._readers) - set(live))
-        self._readers = live
+        with self._lock:
+            have = dict(self._readers)
+        # build missing readers OUTSIDE the lock: a refresh that is all
+        # cache hits must never wait behind another thread's cold build
+        # (segments are immutable, so the worst case is a duplicate build
+        # and one copy wins the swap below)
+        fresh = {seg.seg_id: SegmentReader.open(seg, self.k1, self.b)
+                 for seg in segs if seg.seg_id not in have}
+        with self._lock:
+            self.builds += len(fresh)  # counted where the build happened
+            live, readers = {}, []
+            for seg in segs:
+                r = self._readers.get(seg.seg_id)
+                if r is None:
+                    # fall back to ``have`` for a reader another refresh
+                    # evicted between our snapshot and this swap
+                    r = fresh.get(seg.seg_id) or have.get(seg.seg_id)
+                else:
+                    self.hits += 1
+                live[seg.seg_id] = r
+                readers.append(r)
+            # install only if this snapshot is not older than what the
+            # cache already holds: seg_ids are monotonic and segments only
+            # leave the live set by merging into a *newer* segment, so a
+            # stale snapshot must not evict newer readers (its searcher is
+            # still returned — correctness is per-snapshot either way)
+            snap_max = max(live, default=-1)
+            if snap_max >= self._max_seen:
+                self._max_seen = snap_max
+                self.evictions += len(set(self._readers) - set(live))
+                self._readers = live
         return IndexSearcher(readers=readers, k1=self.k1, b=self.b)

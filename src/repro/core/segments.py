@@ -18,6 +18,12 @@ BLOCK = 128
 _seg_ids = itertools.count()
 
 
+def fresh_seg_id() -> int:
+    """Next process-unique segment id (for dataclasses.replace-built
+    segments, which would otherwise inherit their source's identity)."""
+    return next(_seg_ids)
+
+
 def _np_block_bits(stream: np.ndarray) -> int:
     """Compacted lane-blocked-PFor bit count for a uint32 stream (numpy
     mirror of kernels/postings_pack accounting: 128-blocks, per-block bw)."""
@@ -46,7 +52,7 @@ class Segment:
     # process-unique identity: segments are immutable, so readers built from
     # a segment can be cached under this key across refreshes (id() would be
     # reusable after GC and is not safe as a cache key).
-    seg_id: int = field(default_factory=lambda: next(_seg_ids))
+    seg_id: int = field(default_factory=fresh_seg_id)
 
     @property
     def n_terms(self) -> int:
@@ -61,7 +67,19 @@ class Segment:
         return len(self.doc_ids)
 
     def index_bytes(self) -> dict:
-        """Byte accounting of what writing this segment costs (packed)."""
+        """Byte accounting of what writing this segment costs (packed).
+
+        Memoized on the instance: segments are immutable, the computation
+        is O(P), and the merge cascade consults it several times per
+        segment (flush accounting, merge-read accounting, amplification).
+        Benign if two threads race — both compute the same value."""
+        cached = getattr(self, "_index_bytes_cache", None)
+        if cached is None:
+            cached = self._compute_index_bytes()
+            self._index_bytes_cache = cached
+        return dict(cached)
+
+    def _compute_index_bytes(self) -> dict:
         # doc deltas per term (re-deltaed), tf, position deltas
         ddelta = np.diff(self.docs, prepend=0).astype(np.int64)
         firsts = self.term_start[:-1]
@@ -87,7 +105,11 @@ class Segment:
         }
 
     def total_bytes(self) -> int:
-        return sum(self.index_bytes().values())
+        cached = getattr(self, "_total_bytes_cache", None)
+        if cached is None:
+            cached = sum(self.index_bytes().values())
+            self._total_bytes_cache = cached
+        return cached
 
 
 def segment_from_run(run_np: dict, doc_ids: np.ndarray,

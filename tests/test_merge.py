@@ -1,0 +1,168 @@
+"""Streaming O(P) merge parity: ``merge_segments`` must be bit-identical
+to the retained lexsort oracle ``merge_segments_sorted`` on randomized
+segment sets (empty segments, single-posting terms, all-one-term, shuffled
+input order), plus the satellite invariants: single-segment merges bump
+``generation``, and segment byte accounting is memoized."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.segments as segments_mod
+from repro.core.merge import merge_segments, merge_segments_sorted
+from repro.core.segments import Segment
+
+ARRAY_FIELDS = ("terms", "term_start", "docs", "tf", "positions",
+                "pos_start", "doc_ids", "doc_len")
+
+
+def make_segment(rng, base, n_docs, vocab=60, max_terms=12, max_tf=3,
+                 one_term=False, single_postings=False, generation=0):
+    """Random valid Segment over doc range [base, base + n_docs): sorted
+    unique terms, postings sorted by (term, doc), strictly increasing
+    positions per run — the invariants the pipeline guarantees."""
+    doc_ids = np.arange(base, base + n_docs, dtype=np.int64)
+    doc_len = rng.integers(1, 30, n_docs).astype(np.int64) \
+        if n_docs else np.zeros(0, np.int64)
+    if one_term:
+        terms = np.array([7], np.int64)
+    else:
+        n_t = int(rng.integers(0, max_terms + 1)) if n_docs else 0
+        terms = np.sort(rng.choice(vocab, size=n_t, replace=False)
+                        ).astype(np.int64)
+    docs, tf, positions, pos_start, term_start = [], [], [], [0], [0]
+    for _ in terms:
+        n_d = 1 if (single_postings or n_docs == 1) \
+            else int(rng.integers(1, n_docs + 1))
+        tdocs = np.sort(rng.choice(doc_ids, size=n_d, replace=False))
+        for d in tdocs:
+            n_p = 1 if single_postings else int(rng.integers(1, max_tf + 1))
+            pos = np.sort(rng.choice(200, size=n_p, replace=False))
+            docs.append(d)
+            tf.append(n_p)
+            positions.extend(pos.tolist())
+            pos_start.append(pos_start[-1] + n_p)
+        term_start.append(len(docs))
+    if not len(terms):  # fully empty postings (maybe even zero docs)
+        return Segment(terms=np.zeros(0, np.int64),
+                       term_start=np.array([0], np.int64),
+                       docs=np.zeros(0, np.int64), tf=np.zeros(0, np.int64),
+                       positions=np.zeros(0, np.int64),
+                       pos_start=np.array([0], np.int64),
+                       doc_ids=doc_ids, doc_len=doc_len,
+                       generation=generation)
+    return Segment(terms=terms, term_start=np.asarray(term_start, np.int64),
+                   docs=np.asarray(docs, np.int64),
+                   tf=np.asarray(tf, np.int64),
+                   positions=np.asarray(positions, np.int64),
+                   pos_start=np.asarray(pos_start, np.int64),
+                   doc_ids=doc_ids, doc_len=doc_len, generation=generation)
+
+
+def assert_bit_identical(a: Segment, b: Segment):
+    for f in ARRAY_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype, f
+        assert x.shape == y.shape, f
+        assert (x == y).all(), f
+    assert a.generation == b.generation
+
+
+def random_seg_set(seed, n_segs, spacing=1000):
+    """n_segs segments on disjoint doc ranges, handed over in shuffled
+    order (the O(P) merge must re-derive doc-range order itself)."""
+    rng = np.random.default_rng(seed)
+    segs = []
+    for i in range(n_segs):
+        kind = rng.integers(0, 5)
+        segs.append(make_segment(
+            rng, base=i * spacing,
+            n_docs=0 if kind == 0 else int(rng.integers(1, 9)),
+            one_term=kind == 1, single_postings=kind == 2,
+            generation=int(rng.integers(0, 3))))
+    order = rng.permutation(n_segs)
+    return [segs[i] for i in order]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 100000), st.integers(2, 6))
+def test_streaming_merge_bit_identical(seed, n_segs):
+    segs = random_seg_set(seed, n_segs)
+    assert_bit_identical(merge_segments(segs), merge_segments_sorted(segs))
+
+
+def test_merge_all_one_term():
+    rng = np.random.default_rng(5)
+    segs = [make_segment(rng, 100 * i, n_docs=6, one_term=True)
+            for i in range(4)]
+    m = merge_segments(segs)
+    assert_bit_identical(m, merge_segments_sorted(segs))
+    assert list(m.terms) == [7]
+    assert (np.diff(m.docs) > 0).all()  # one run, globally doc-sorted
+
+
+def test_merge_single_posting_terms():
+    rng = np.random.default_rng(6)
+    segs = [make_segment(rng, 50 * i, n_docs=4, single_postings=True)
+            for i in range(3)]
+    m = merge_segments(segs)
+    assert_bit_identical(m, merge_segments_sorted(segs))
+    assert (m.tf == 1).all()
+
+
+def test_merge_with_empty_segments():
+    rng = np.random.default_rng(7)
+    empty = make_segment(rng, 300, n_docs=0)
+    zero_postings = make_segment(rng, 400, n_docs=3, max_terms=0)
+    full = make_segment(rng, 500, n_docs=5)
+    for segs in ([empty, full], [full, zero_postings, empty],
+                 [empty, zero_postings]):
+        assert_bit_identical(merge_segments(list(segs)),
+                             merge_segments_sorted(list(segs)))
+
+
+def test_single_segment_merge_bumps_generation():
+    rng = np.random.default_rng(8)
+    s = make_segment(rng, 0, n_docs=4, generation=2)
+    for fn in (merge_segments, merge_segments_sorted):
+        m = fn([s])
+        assert m.generation == 3  # a merge output must report a new tier
+        assert m.seg_id != s.seg_id
+        assert s.generation == 2  # input untouched
+        for f in ARRAY_FIELDS:
+            assert getattr(m, f) is getattr(s, f)  # zero-copy
+
+
+def test_merge_preserves_position_runs():
+    """Every (term, doc) position run survives the scatter verbatim."""
+    rng = np.random.default_rng(9)
+    segs = [make_segment(rng, 100 * i, n_docs=5) for i in range(3)]
+    runs = {}
+    for s in segs:
+        for ti, t in enumerate(s.terms):
+            for j in range(s.term_start[ti], s.term_start[ti + 1]):
+                runs[(int(t), int(s.docs[j]))] = \
+                    s.positions[s.pos_start[j]:s.pos_start[j + 1]].tolist()
+    m = merge_segments(segs)
+    for ti, t in enumerate(m.terms):
+        for j in range(m.term_start[ti], m.term_start[ti + 1]):
+            got = m.positions[m.pos_start[j]:m.pos_start[j + 1]].tolist()
+            assert got == runs.pop((int(t), int(m.docs[j])))
+    assert not runs  # nothing lost, nothing invented
+
+
+def test_segment_bytes_memoized(monkeypatch):
+    rng = np.random.default_rng(10)
+    s = make_segment(rng, 0, n_docs=6)
+    first = s.index_bytes()
+    total = s.total_bytes()
+    assert total == sum(first.values())
+    # the O(P) computation must not run again on an immutable segment
+
+    def boom(*a, **k):
+        raise AssertionError("recomputed memoized byte accounting")
+
+    monkeypatch.setattr(segments_mod, "_np_block_bits", boom)
+    assert s.index_bytes() == first
+    assert s.total_bytes() == total
+    first["postings"] = -1  # callers get a copy, not the cache
+    assert s.index_bytes()["postings"] != -1
