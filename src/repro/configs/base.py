@@ -194,6 +194,16 @@ class EnvelopeConfig:
     merge_threads: int = 0
     store_positions: bool = True
     store_doc_vectors: bool = True
+    # --- durable storage (repro.storage) ---
+    # media profiles (storage.MEDIA_PROFILES keys) for the source collection
+    # and target index when the run goes through ThrottledDirectory pairs;
+    # envelope.PROFILE_TO_MEDIA maps them onto the paper's Table-1 media
+    source_media: str = "nas"
+    target_media: str = "ssd"
+    # segment codec for the on-disk format: "pfor" (delta + lane-blocked
+    # bit-planes, the compressed default) or "raw" (int64 streams, the
+    # incompressible baseline the envelope benchmarks compare against)
+    codec: str = "pfor"
     # "raw": 3x int32 per entry over the wire; "packed2": (local_doc|pos,
     # term) = 2 words, doc rebased from the source-device row after the
     # all_to_all (EXPERIMENTS.md §Perf — the paper's compression insight

@@ -2,13 +2,17 @@
 
 Distributed inverted indexing: per-device SPIMI inversion -> lane-blocked
 PFor packing -> all-to-all term shuffle -> hierarchical merge, with the
-three-stage media envelope model from the paper.
+three-stage media envelope model from the paper — and, when a target
+``Directory`` is attached, a durable on-disk index (repro.storage): the
+``codec``/``source_media``/``target_media`` knobs pick the segment codec
+and the ThrottledDirectory profiles of a measured source->target run.
 """
 from repro.configs.base import EnvelopeConfig, ShapeSpec
 
 # packed2 shuffle payload: bit-identical to raw (tested), 33% fewer
 # shuffle bytes — §Perf HC-C; baseline archived as *.baseline.json
-CONFIG = EnvelopeConfig(name="lucene_envelope", shuffle_payload="packed2")
+CONFIG = EnvelopeConfig(name="lucene_envelope", shuffle_payload="packed2",
+                        codec="pfor", source_media="nas", target_media="ssd")
 
 SMOKE = EnvelopeConfig(
     name="lucene-envelope-smoke",

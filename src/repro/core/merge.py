@@ -195,6 +195,10 @@ class MergeDriver:
     flushed_bytes: int = 0
     merge_wall_s: float = 0.0   # measured wall-clock inside merge_segments
     scheduler: object = None    # ConcurrentMergeScheduler when attached
+    # storage.SegmentStore when the index is durable: every flushed and
+    # merged segment is encoded through the target Directory *before* it
+    # becomes live, and merges re-read their inputs' files (measured IO)
+    store: object = None
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
     _in_flight: list = field(default_factory=list, repr=False)
@@ -204,6 +208,11 @@ class MergeDriver:
         this only notifies the background pool (the caller — the ingest
         thread — never merges); without one it cascades synchronously."""
         sz = seg.total_bytes()  # memoized: the O(P) pass stays off the lock
+        if self.store is not None:
+            # durable write-path: the segment's bytes hit the target medium
+            # before the segment is searchable, so a commit taken at any
+            # instant only references fully-written files
+            self.store.write(seg)
         with self._lock:
             self.bytes_written += sz
             self.flushed_bytes += sz
@@ -219,18 +228,87 @@ class MergeDriver:
                 pass
         self._drain_sync()
 
+    @staticmethod
+    def _first_doc(seg: Segment) -> int:
+        return int(seg.doc_ids[0]) if seg.n_docs else -1
+
     def pop_merge_work(self) -> _MergeWork | None:
-        """Claim the lowest-tier pending merge, or None. The claimed batch
-        moves from its tier to ``_in_flight`` so it stays searchable."""
+        """Claim the smallest eligible merge, or None.
+
+        Size-proportional selection: among every tier holding >= ``fanout``
+        segments, candidate batches are the tier's doc-range-consecutive
+        windows of ``fanout`` segments, and the window with the smallest
+        summed bytes across all tiers is claimed first (ties go to the
+        lower tier). A worker that would previously have queued behind one
+        huge pending merge now clears the cheap ones first, so large
+        merges never starve small ones.
+
+        Doc-space safety: merging a batch whose doc-id span contains some
+        OTHER segment's docs would create a segment whose doc range
+        interleaves with the bystander's, and a later merge of the two
+        would violate ``merge_segments``' disjoint-ordered-ranges
+        invariant. So a window ABSORBS every tier-resident bystander
+        inside its span into the batch (a cross-tier, doc-consecutive
+        merge — the output lands one tier above the highest input, and no
+        segment is ever stranded behind a higher-tier barrier), while a
+        window spanning an *in-flight* batch is simply not claimable yet.
+
+        ``total_bytes`` is memoized on the (immutable) segments, so the
+        selection under the lock is O(segments^2), not O(postings). The
+        claimed batch moves from its tier(s) to ``_in_flight`` so it
+        stays searchable."""
         with self._lock:
-            for tier in sorted(self.tiers):
-                if len(self.tiers[tier]) >= self.fanout:
-                    batch = self.tiers[tier][:self.fanout]
-                    self.tiers[tier] = self.tiers[tier][self.fanout:]
-                    work = _MergeWork(tier, batch)
-                    self._in_flight.append(work)
-                    return work
-        return None
+            # disjoint doc spaces => "first doc inside the span" is
+            # exactly "some docs inside the span"
+            inflight_firsts = [self._first_doc(s) for w in self._in_flight
+                               for s in w.batch if s.n_docs]
+            best = None  # (batch_bytes, tier, seg_id set of the batch)
+            for tier, segs in self.tiers.items():
+                if len(segs) < self.fanout:
+                    continue
+                order = sorted(range(len(segs)),
+                               key=lambda i: self._first_doc(segs[i]))
+                for w in range(len(segs) - self.fanout + 1):
+                    take = [segs[i] for i in order[w:w + self.fanout]]
+                    docked = [s for s in take if s.n_docs]
+                    absorb = []
+                    if docked:
+                        lo = self._first_doc(docked[0])
+                        hi = int(docked[-1].doc_ids[-1])
+                        if any(lo < f <= hi for f in inflight_firsts):
+                            continue  # span swallows an in-flight merge
+                        member = {s.seg_id for s in take}
+                        absorb = [s for t2 in self.tiers.values()
+                                  for s in t2
+                                  if s.seg_id not in member and s.n_docs
+                                  and lo < self._first_doc(s) <= hi]
+                    batch = take + absorb
+                    size = sum(s.total_bytes() for s in batch)
+                    out_tier = max([tier] + [self._seg_tier(s)
+                                             for s in absorb])
+                    if best is None or (size, out_tier) < (best[0], best[1]):
+                        best = (size, out_tier,
+                                {s.seg_id for s in batch})
+            if best is None:
+                return None
+            _, tier, taken = best
+            batch = []
+            for t2 in self.tiers:
+                keep = []
+                for s in self.tiers[t2]:
+                    (batch if s.seg_id in taken else keep).append(s)
+                self.tiers[t2] = keep
+            batch.sort(key=self._first_doc)
+            work = _MergeWork(tier, batch)
+            self._in_flight.append(work)
+            return work
+
+    def _seg_tier(self, seg: Segment) -> int:
+        """Tier currently holding ``seg`` (callers hold ``_lock``)."""
+        for t, segs in self.tiers.items():
+            if any(s.seg_id == seg.seg_id for s in segs):
+                return t
+        return 0
 
     def run_merge(self, work: _MergeWork) -> Segment:
         """Execute one claimed merge and install its output (callable from
@@ -242,6 +320,12 @@ class MergeDriver:
             # memoized byte accounting: off the lock and off the timer
             # (merge_wall_s measures the merge itself, not its accounting)
             merged.total_bytes()
+            if self.store is not None:
+                # a durable merge re-reads its inputs from the target and
+                # writes its output there before installing it (measured
+                # counterparts of bytes_read_merge / bytes_written)
+                self.store.read_back(work.batch)
+                self.store.write(merged)
         except BaseException:
             self.restore_work(work)  # no doc may ever go missing
             raise
@@ -252,6 +336,11 @@ class MergeDriver:
             self.n_merges += 1
             self.merge_wall_s += dt
             self.tiers.setdefault(work.tier + 1, []).append(merged)
+        if self.store is not None:
+            # inputs have now left the live set permanently: their files
+            # become delete-eligible at the next commit (never before —
+            # a commit snapshot taken pre-install still references them)
+            self.store.mark_superseded(work.batch)
         return merged
 
     def restore_work(self, work: _MergeWork):
@@ -297,6 +386,10 @@ class MergeDriver:
                 remaining = [s for t in sorted(self.tiers)
                              for s in self.tiers[t]]
                 assert remaining, "nothing indexed"
+                # batch in doc-range order: every force-merge batch is a
+                # doc-consecutive window, so intermediate outputs never
+                # interleave with segments still waiting in ``keep``
+                remaining.sort(key=self._first_doc)
                 if len(remaining) == 1:
                     self.tiers = {0: remaining}
                     return remaining[0]
@@ -322,6 +415,11 @@ class MergeDriver:
                 "flushed_bytes": self.flushed_bytes,
                 "n_merges": self.n_merges,
                 "merge_wall_s": self.merge_wall_s,
+                # THE index-size figure: the modeled (packed, pre-codec)
+                # bytes of the live segment set. Everything downstream
+                # (amplification here, envelope_report's raw-vs-encoded
+                # split) derives from this one number.
+                "live_bytes_raw": final,
                 "amplification": self.bytes_written / max(final, 1),
             }
 

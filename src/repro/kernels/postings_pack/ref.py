@@ -100,6 +100,35 @@ def unpack_fast(packed: jnp.ndarray, bw: jnp.ndarray) -> jnp.ndarray:
     return vals.reshape(nb, BLOCK)
 
 
+def compact_planes(packed: "np.ndarray", bw: "np.ndarray") -> "np.ndarray":
+    """Host-side compaction of a fixed-stride packed buffer: keep only the
+    ``bw[b]`` live planes of each block. (nb, 32, 4) uint32 + (nb,) ->
+    (sum(bw), 4) uint32 rows, block-major then plane-major — the byte
+    stream the storage codec writes at flush (the docstring's 'compaction
+    to sum(bw_b) * 16 bytes happens at flush (host side)')."""
+    import numpy as np
+    packed = np.asarray(packed, np.uint32)
+    bw = np.asarray(bw, np.int64)
+    mask = np.arange(32)[None, :] < bw[:, None]
+    return packed[mask]
+
+
+def expand_planes(rows: "np.ndarray", bw: "np.ndarray") -> "np.ndarray":
+    """Inverse of ``compact_planes``: scatter the compacted (sum(bw), 4)
+    rows back into the fixed-stride (nb, 32, 4) buffer ``unpack_fast``
+    consumes; dead planes (>= bw) are zero, as the pack contract requires."""
+    import numpy as np
+    rows = np.asarray(rows, np.uint32).reshape(-1, WORDS_PER_PLANE)
+    bw = np.asarray(bw, np.int64)
+    full = np.zeros((len(bw), 32, WORDS_PER_PLANE), np.uint32)
+    mask = np.arange(32)[None, :] < bw[:, None]
+    if rows.shape[0] != int(mask.sum()):
+        raise ValueError(f"compacted stream holds {rows.shape[0]} plane rows"
+                         f", bit widths require {int(mask.sum())}")
+    full[mask] = rows
+    return full
+
+
 def packed_bytes(bw: jnp.ndarray) -> jnp.ndarray:
     """Compacted size in bytes: bw planes x 4 words x 4 bytes + 1 byte/block
     header (the bit width). float accumulation: counts can exceed int32."""

@@ -3,11 +3,15 @@ retrieval path (inverted-index BM25 — the paper's serving counterpart).
 
   python -m repro.launch.serve --arch gemma2-9b --requests 4 --gen 16
   python -m repro.launch.serve --mode retrieval --requests 64 --slots 32
+  python -m repro.launch.serve --mode retrieval --index-dir /tmp/idx
 
 Retrieval mode exercises the full write-read-decoupled read path: index
 batches, ``refresh()`` a live (un-finalized) searcher, serve a batched
 query stream through the fixed-slot ``QueryScheduler``, keep indexing,
-refresh again (cached readers) and serve the grown corpus.
+refresh again (cached readers) and serve the grown corpus. With
+``--index-dir`` the index is durable (repro.storage): segments are
+committed to an ``FSDirectory``, then recovered from disk into a fresh
+searcher before serving — restart-and-serve from the last commit point.
 """
 from __future__ import annotations
 
@@ -53,10 +57,26 @@ def serve_retrieval(args):
 
     cfg = get_arch("lucene-envelope").smoke
     corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
-    ix = DistributedIndexer(cfg=cfg)
+    target_dir = None
+    if args.index_dir:
+        from repro.storage import FSDirectory
+        target_dir = FSDirectory(args.index_dir)
+    ix = DistributedIndexer(cfg=cfg, target_dir=target_dir)
+    recovered_docs = sum(s.n_docs for s in ix.merger.live_segments()) \
+        if target_dir else 0
     for i in range(4):
         ix.index_batch(corpus.batch(i, 32))
-    searcher = ix.refresh()
+    if target_dir is not None:
+        gen = ix.commit()
+        # recover from the just-committed bytes: the searcher we serve is
+        # built from storage, not from the in-memory segments
+        from repro.storage import open_searcher
+        gen_r, searcher = open_searcher(target_dir)
+        print(f"durable index: commit gen {gen} "
+              f"({recovered_docs} docs recovered at startup); serving "
+              f"{searcher.n_docs} docs recovered from {args.index_dir}")
+    else:
+        searcher = ix.refresh()
     sched = QueryScheduler(searcher=searcher, slots=args.slots,
                            max_terms=args.query_terms, k=args.topk)
 
@@ -110,6 +130,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=32)
     ap.add_argument("--query-terms", type=int, default=4)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--index-dir", default=None,
+                    help="retrieval mode: durable FSDirectory index — "
+                         "commit, recover from disk, then serve (resumes "
+                         "an existing index at its last commit point)")
     args = ap.parse_args(argv)
 
     if args.mode == "retrieval":

@@ -1,0 +1,24 @@
+"""Durable segment storage: Directory media seam + codec + commit points.
+
+The storage subsystem turns the envelope model's *predicted* media
+behavior into something measured: segments become checksummed bytes
+written through a ``Directory`` (RAM / filesystem / bandwidth-throttled
+media emulation), commits make them durable, recovery reloads them.
+"""
+from repro.storage.codec import (CODECS, CorruptSegment, SEGMENT_SUFFIXES,
+                                 decode_segment, encode_segment,
+                                 read_segment, write_segment)
+from repro.storage.commit import (SegmentStore, list_commits, open_latest,
+                                  open_searcher, read_commit, write_commit)
+from repro.storage.directory import (MEDIA_PROFILES, DeviceThrottle,
+                                     Directory, FSDirectory, MediaProfile,
+                                     RAMDirectory, ThrottledDirectory)
+
+__all__ = [
+    "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES", "decode_segment",
+    "encode_segment", "read_segment", "write_segment",
+    "SegmentStore", "list_commits", "open_latest", "open_searcher",
+    "read_commit", "write_commit",
+    "MEDIA_PROFILES", "DeviceThrottle", "Directory", "FSDirectory",
+    "MediaProfile", "RAMDirectory", "ThrottledDirectory",
+]

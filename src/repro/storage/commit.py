@@ -1,0 +1,255 @@
+"""Commit points: ``segments_N`` manifests, two-phase rename, recovery.
+
+Lucene's durability contract, reproduced: segment files are written
+freely (and non-atomically — a crash can tear them), but a segment only
+*exists* once a ``segments_N`` manifest references it, and the manifest
+itself appears atomically via two-phase commit:
+
+  1. write ``segments_N.tmp`` (framed + checksummed like every file),
+  2. ``rename`` it to ``segments_N`` (atomic ``os.replace``).
+
+``open_latest`` recovers by scanning for the highest N whose manifest
+frame validates AND whose referenced segments all decode checksum-clean;
+anything else — torn segment files from a killed flush, a stranded
+``.tmp``, a manifest that lost the race with the power cord — is ignored
+and the previous commit wins. Every committed doc is therefore searchable
+exactly once after recovery; uncommitted work is simply re-indexed.
+
+``SegmentStore`` is the glue the write path uses: it names and writes
+segments through a target ``Directory`` (via ``storage/codec``), tracks
+encoded sizes (measured bytes, vs ``Segment.total_bytes()``'s model),
+charges merge re-reads, and deletes superseded files after each commit.
+"""
+from __future__ import annotations
+
+import json
+import re
+import struct
+import threading
+from dataclasses import dataclass, field
+
+from repro.storage import codec as seg_codec
+from repro.storage.codec import (CorruptSegment, KIND_MANIFEST, frame,
+                                 read_segment, unframe, write_segment)
+from repro.storage.directory import Directory
+
+MANIFEST_RE = re.compile(r"^segments_(\d+)$")
+_SEG_NAME_RE = re.compile(r"^s([0-9a-f]{8})\.")
+# every file name this store can produce; recovery cleanup must not touch
+# anything else (an --index-dir pointed at a directory with unrelated
+# files — or a co-located source spool — must leave them intact)
+_OWNED_RE = re.compile(
+    r"^(s[0-9a-f]{8}\.(dict|pst|pos|doc)|segments_\d+(\.tmp)?)$")
+
+
+def manifest_name(gen: int) -> str:
+    return f"segments_{gen}"
+
+
+def write_commit(directory: Directory, gen: int, names: list[str],
+                 codec: str = "pfor") -> str:
+    """Two-phase commit of one manifest; returns its file name."""
+    payload = json.dumps({"gen": gen, "codec": codec,
+                          "segments": list(names)},
+                         sort_keys=True).encode()
+    name = manifest_name(gen)
+    directory.write_file(name + ".tmp", frame(KIND_MANIFEST, payload))
+    directory.rename(name + ".tmp", name)
+    return name
+
+
+def read_commit(directory: Directory, name: str) -> dict:
+    meta = json.loads(unframe(directory.read_file(name), KIND_MANIFEST))
+    if not isinstance(meta.get("segments"), list):
+        raise CorruptSegment(f"manifest {name} has no segment list")
+    return meta
+
+
+def list_commits(directory: Directory) -> list[int]:
+    """Commit generations present (not yet validated), newest first."""
+    gens = [int(m.group(1)) for m in map(MANIFEST_RE.match,
+                                         directory.list_files()) if m]
+    return sorted(gens, reverse=True)
+
+
+def _open_latest_full(directory: Directory) -> tuple[int, list, list]:
+    """Newest fully-valid commit as ``(gen, segments, names)`` — shared
+    by ``open_latest`` and ``SegmentStore.open`` so the manifest is read
+    (and its bytes charged to the device) exactly once."""
+    for gen in list_commits(directory):
+        try:
+            meta = read_commit(directory, manifest_name(gen))
+            segs = [read_segment(directory, n) for n in meta["segments"]]
+        except (CorruptSegment, json.JSONDecodeError, struct.error):
+            continue
+        return gen, segs, list(meta["segments"])
+    return 0, [], []
+
+
+def open_latest(directory: Directory) -> tuple[int, list]:
+    """Load the newest fully-valid commit point: ``(gen, segments)``.
+
+    Walks commits newest-first; a commit whose manifest or any referenced
+    segment file fails its checksum (torn by an interrupted run) is
+    skipped entirely — partial commits never surface partially. An empty
+    or never-committed directory recovers to ``(0, [])``.
+    """
+    gen, segs, _ = _open_latest_full(directory)
+    return gen, segs
+
+
+def open_searcher(directory: Directory, reader_cache=None):
+    """Recovery straight to the read path: load the latest commit and
+    refresh a ``ReaderCache`` over it (loaded segments get fresh seg_ids,
+    so the cache treats them like any live segment set)."""
+    from repro.core.searcher import ReaderCache
+    gen, segs = open_latest(directory)
+    cache = reader_cache if reader_cache is not None else ReaderCache()
+    return gen, cache.refresh(segs)
+
+
+@dataclass
+class SegmentStore:
+    """Write-path glue between the merge driver and a target Directory.
+
+    Segments are written *before* they become live (flush installs after
+    ``write``; a merge installs its output after writing it), so a commit
+    of ``live_segments()`` only ever references fully-written files.
+
+    Deletion protocol: a file may only be deleted once its segment has
+    been *superseded* — the merge driver calls ``mark_superseded`` on a
+    merge's inputs after installing the output, the one event after which
+    a segment can never be referenced by a future commit — AND it is not
+    referenced by the newest manifest (a commit whose snapshot predates
+    the install still references the inputs; their files survive until
+    the next commit). A segment that is merely written-but-not-yet-live
+    (a flush or merge output racing a commit) is never superseded, so it
+    can never be deleted out from under the thread installing it.
+    """
+
+    directory: Directory
+    codec: str = "pfor"
+    gen: int = 0
+    bytes_encoded_written: int = 0   # cumulative, flush + every merge
+    bytes_encoded_read: int = 0      # merge re-reads through the directory
+    n_commits: int = 0
+    _counter: int = 0
+    _names: dict = field(default_factory=dict)   # seg_id -> file base name
+    _sizes: dict = field(default_factory=dict)   # base name -> encoded bytes
+    _superseded: set = field(default_factory=set)  # names eligible to delete
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    @classmethod
+    def open(cls, directory: Directory, codec: str = "pfor"
+             ) -> tuple["SegmentStore", list]:
+        """Recover a store over an existing directory: load the latest
+        commit, register its segments, delete every unreferenced
+        store-owned file (stray tmp manifests, torn post-commit flushes —
+        there are no concurrent writers during recovery, so cleanup is
+        safe here). Files the store could not have written (spooled
+        source batches, anything else living in the directory) are left
+        untouched."""
+        gen, segs, names = _open_latest_full(directory)
+        store = cls(directory=directory, codec=codec, gen=gen)
+        keep = set()
+        if gen:
+            for seg, name in zip(segs, names):
+                store._names[seg.seg_id] = name
+                store._sizes[name] = sum(
+                    directory.file_size(name + sfx)
+                    for sfx in seg_codec.SEGMENT_SUFFIXES)
+                keep.update(name + sfx
+                            for sfx in seg_codec.SEGMENT_SUFFIXES)
+            keep.add(manifest_name(gen))
+        for f in directory.list_files():
+            if f not in keep and _OWNED_RE.match(f):
+                directory.delete_file(f)
+        counters = [int(m.group(1), 16) for m in
+                    map(_SEG_NAME_RE.match, directory.list_files()) if m]
+        store._counter = max(counters, default=-1) + 1
+        return store, segs
+
+    def write(self, seg) -> str:
+        """Encode + write one segment; returns its on-disk base name.
+        Registration happens only after the write completes, so a commit
+        concurrent with this write cannot reference a torn segment."""
+        with self._lock:
+            name = f"s{self._counter:08x}"
+            self._counter += 1
+        n = write_segment(self.directory, name, seg, self.codec)
+        with self._lock:
+            self._names[seg.seg_id] = name
+            self._sizes[name] = n
+            self.bytes_encoded_written += n
+        return name
+
+    def read_back(self, segs) -> int:
+        """Re-read segments' files through the directory (a merge re-reads
+        its inputs — the measured counterpart of ``bytes_read_merge``).
+        Bytes move and get charged; content is discarded, the in-memory
+        Segment is authoritative."""
+        total = 0
+        for seg in segs:
+            with self._lock:
+                name = self._names.get(seg.seg_id)
+            if name is None:
+                continue  # segment predates the store attachment
+            for sfx in seg_codec.SEGMENT_SUFFIXES:
+                total += len(self.directory.read_file(name + sfx))
+        with self._lock:
+            self.bytes_encoded_read += total
+        return total
+
+    def mark_superseded(self, segs) -> None:
+        """Record that ``segs`` left the live set permanently (their merge
+        output has been installed). Only superseded segments' files are
+        ever deleted — the merge driver calls this after install."""
+        with self._lock:
+            for seg in segs:
+                name = self._names.get(seg.seg_id)
+                if name is not None:
+                    self._superseded.add(name)
+
+    def encoded_bytes_live(self, segs) -> int:
+        """Encoded size of a segment set (measured files, not the model)."""
+        with self._lock:
+            return sum(self._sizes[self._names[s.seg_id]] for s in segs
+                       if s.seg_id in self._names)
+
+    def commit(self, live_segments) -> int:
+        """Durably publish ``live_segments`` as commit ``gen+1``, then
+        delete segment files that are superseded AND unreferenced by this
+        manifest, plus all older manifests."""
+        with self._lock:
+            try:
+                names = [self._names[s.seg_id] for s in live_segments]
+            except KeyError as e:
+                raise ValueError("cannot commit a segment this store never "
+                                 f"wrote (seg_id {e.args[0]})") from e
+            self.gen += 1
+            gen = self.gen
+        write_commit(self.directory, gen, names, self.codec)
+        with self._lock:
+            self.n_commits += 1
+            live = set(names)
+            dead = [n for n in self._superseded if n not in live]
+            for n in dead:
+                self._superseded.discard(n)
+                self._sizes.pop(n, None)
+            gone = set(dead)
+            self._names = {sid: n for sid, n in self._names.items()
+                           if n not in gone}
+        for n in dead:
+            for sfx in seg_codec.SEGMENT_SUFFIXES:
+                try:
+                    self.directory.delete_file(n + sfx)
+                except FileNotFoundError:
+                    pass
+        for old in list_commits(self.directory):
+            if old < gen:
+                try:
+                    self.directory.delete_file(manifest_name(old))
+                except FileNotFoundError:
+                    pass
+        return gen

@@ -1,0 +1,339 @@
+"""Directory abstraction — the media seam of the storage subsystem.
+
+Lucene's ``Directory`` is the one interface everything above the device
+talks to ("On Using Non-Volatile Memory in Apache Lucene" swaps media
+exactly here); we mirror that shape so the paper's source/target media
+experiments become *runnable* instead of modeled:
+
+  ``RAMDirectory``        dict-backed, for tests and as the inner store of
+                          throttled in-silico experiments.
+  ``FSDirectory``         one flat filesystem directory. ``write_file`` is
+                          deliberately NOT atomic (a kill mid-write leaves a
+                          torn file, like a real crash); only ``rename`` is
+                          atomic (``os.replace``), which is all the two-phase
+                          commit protocol in ``storage/commit.py`` needs.
+  ``ThrottledDirectory``  wraps any Directory and charges every byte to a
+                          ``DeviceThrottle`` — a single device timeline with
+                          the bandwidth/latency profile of one of the paper's
+                          media. Two throttled directories SHARING one
+                          throttle model source and target on the same
+                          device/controller (reads and writes serialize, the
+                          paper's SSD->SSD case); separate throttles model
+                          physical isolation (streams overlap).
+
+Every Directory measures itself: ``bytes_read``/``bytes_written`` and the
+wall time spent in reads/writes, so ``envelope_report`` can print measured
+GB/min next to the analytic ``core/envelope.py`` prediction.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass
+
+
+class Directory:
+    """Abstract flat byte store with measured-IO accounting.
+
+    Subclasses implement ``_write/_read/_list/_delete/_rename/_size``;
+    the public methods add thread-safe byte + wall-clock accounting.
+    File names are flat (no separators) — the commit layer owns naming.
+    """
+
+    def __init__(self):
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.write_wall_s = 0.0
+        self.read_wall_s = 0.0
+        self._acct_lock = threading.Lock()
+
+    # -- accounting wrappers ------------------------------------------------
+    def write_file(self, name: str, data: bytes) -> int:
+        _check_name(name)
+        data = bytes(data)
+        t0 = time.perf_counter()
+        self._write(name, data)
+        dt = time.perf_counter() - t0
+        with self._acct_lock:
+            self.bytes_written += len(data)
+            self.write_wall_s += dt
+        return len(data)
+
+    def read_file(self, name: str) -> bytes:
+        _check_name(name)
+        t0 = time.perf_counter()
+        data = self._read(name)
+        dt = time.perf_counter() - t0
+        with self._acct_lock:
+            self.bytes_read += len(data)
+            self.read_wall_s += dt
+        return data
+
+    def list_files(self) -> list[str]:
+        return sorted(self._list())
+
+    def delete_file(self, name: str) -> None:
+        _check_name(name)
+        self._delete(name)
+
+    def rename(self, src: str, dst: str) -> None:
+        """Atomic replace: after return, ``dst`` exists with ``src``'s
+        content and ``src`` is gone — the commit point's linchpin."""
+        _check_name(src)
+        _check_name(dst)
+        self._rename(src, dst)
+
+    def file_exists(self, name: str) -> bool:
+        return name in self._list()
+
+    def file_size(self, name: str) -> int:
+        _check_name(name)
+        return self._size(name)
+
+    def reset_counters(self) -> None:
+        """Zero the measured-IO counters (e.g. after spooling the source
+        collection, so the experiment only measures the indexing run)."""
+        with self._acct_lock:
+            self.bytes_written = self.bytes_read = 0
+            self.write_wall_s = self.read_wall_s = 0.0
+
+    # -- to implement -------------------------------------------------------
+    def _write(self, name, data):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _read(self, name):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _list(self):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _delete(self, name):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _rename(self, src, dst):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _size(self, name):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+def _check_name(name: str) -> None:
+    if not name or "/" in name or "\\" in name or name in (".", ".."):
+        raise ValueError(f"invalid directory file name {name!r}")
+
+
+class RAMDirectory(Directory):
+    """In-memory Directory (a dict under a lock)."""
+
+    def __init__(self):
+        super().__init__()
+        self._files: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def _write(self, name, data):
+        with self._lock:
+            self._files[name] = data
+
+    def _read(self, name):
+        with self._lock:
+            if name not in self._files:
+                raise FileNotFoundError(name)
+            return self._files[name]
+
+    def _list(self):
+        with self._lock:
+            return list(self._files)
+
+    def _delete(self, name):
+        with self._lock:
+            if name not in self._files:
+                raise FileNotFoundError(name)
+            del self._files[name]
+
+    def _rename(self, src, dst):
+        with self._lock:
+            if src not in self._files:
+                raise FileNotFoundError(src)
+            self._files[dst] = self._files.pop(src)
+
+    def _size(self, name):
+        with self._lock:
+            if name not in self._files:
+                raise FileNotFoundError(name)
+            return len(self._files[name])
+
+
+class FSDirectory(Directory):
+    """One flat directory on the local filesystem.
+
+    ``write_file`` writes in place (non-atomic on purpose: a crash can
+    leave a torn file, which the codec's checksums and the commit
+    protocol's recovery must survive). ``rename`` is ``os.replace`` —
+    atomic on POSIX — and is the only primitive the two-phase commit
+    relies on.
+    """
+
+    def __init__(self, path: str):
+        super().__init__()
+        self.path = str(path)
+        os.makedirs(self.path, exist_ok=True)
+
+    def _p(self, name):
+        return os.path.join(self.path, name)
+
+    def _write(self, name, data):
+        with open(self._p(name), "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _read(self, name):
+        try:
+            with open(self._p(name), "rb") as f:
+                return f.read()
+        except OSError as e:
+            raise FileNotFoundError(name) from e
+
+    def _list(self):
+        return [n for n in os.listdir(self.path)
+                if os.path.isfile(self._p(n))]
+
+    def _delete(self, name):
+        os.remove(self._p(name))
+
+    def _rename(self, src, dst):
+        os.replace(self._p(src), self._p(dst))
+
+    def _size(self, name):
+        try:
+            return os.path.getsize(self._p(name))
+        except OSError as e:
+            raise FileNotFoundError(name) from e
+
+
+# ---------------------------------------------------------------------------
+# media throttling
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MediaProfile:
+    """Bandwidth/latency envelope of one physical medium (bytes/s)."""
+
+    name: str
+    read_bw: float
+    write_bw: float
+    read_latency_s: float = 0.0
+    write_latency_s: float = 0.0
+
+    def scaled(self, factor: float) -> "MediaProfile":
+        """Same medium, bandwidths divided by ``factor`` — lets a KB-scale
+        in-silico corpus exercise the same *ratios* the paper's 231 GB
+        collection does, at measurable device times."""
+        return MediaProfile(self.name, self.read_bw / factor,
+                            self.write_bw / factor,
+                            self.read_latency_s, self.write_latency_s)
+
+
+# the paper's three media (§2): a network-attached store behind 10 GbE, a
+# direct-attached disk array (fast sequential reads, slow RAID-6 writes),
+# and a SATA SSD pinned near its ~500 MB/s interface ceiling both ways.
+MEDIA_PROFILES = {
+    "nas": MediaProfile("nas", read_bw=1.1e9, write_bw=0.5e9,
+                        read_latency_s=5e-4, write_latency_s=5e-4),
+    "disk": MediaProfile("disk", read_bw=2.0e9, write_bw=0.32e9,
+                         read_latency_s=8e-3, write_latency_s=8e-3),
+    "ssd": MediaProfile("ssd", read_bw=0.52e9, write_bw=0.50e9,
+                        read_latency_s=5e-5, write_latency_s=5e-5),
+}
+
+
+class DeviceThrottle:
+    """One device's timeline: every operation charges latency + bytes/bw.
+
+    ``busy_read_s``/``busy_write_s`` accumulate exact *device time* — the
+    measured counterpart of the envelope model's T_read/T_write stages —
+    independent of how fast the backing store really is. Directories that
+    share one throttle share one controller: their charges land on the same
+    timeline, so total device time is the SUM of both streams (the paper's
+    shared-media serialization). Directories with separate throttles
+    overlap (isolation).
+
+    ``pace`` > 0 additionally sleeps ``pace * cost`` per operation, turning
+    the simulated timeline into real wall-clock (pace=1 emulates the medium
+    in real time; the default 0 only accounts).
+    """
+
+    def __init__(self, profile: MediaProfile, pace: float = 0.0):
+        self.profile = profile
+        self.pace = pace
+        self.busy_read_s = 0.0
+        self.busy_write_s = 0.0
+        self.ops_read = 0
+        self.ops_write = 0
+        self._lock = threading.Lock()
+
+    def charge_read(self, n_bytes: int) -> float:
+        cost = self.profile.read_latency_s + n_bytes / self.profile.read_bw
+        with self._lock:
+            self.busy_read_s += cost
+            self.ops_read += 1
+        if self.pace > 0:
+            time.sleep(cost * self.pace)
+        return cost
+
+    def charge_write(self, n_bytes: int) -> float:
+        cost = self.profile.write_latency_s + n_bytes / self.profile.write_bw
+        with self._lock:
+            self.busy_write_s += cost
+            self.ops_write += 1
+        if self.pace > 0:
+            time.sleep(cost * self.pace)
+        return cost
+
+    @property
+    def busy_s(self) -> float:
+        return self.busy_read_s + self.busy_write_s
+
+    def reset(self) -> None:
+        with self._lock:
+            self.busy_read_s = self.busy_write_s = 0.0
+            self.ops_read = self.ops_write = 0
+
+
+class ThrottledDirectory(Directory):
+    """A Directory whose every byte pays a ``DeviceThrottle``'s toll.
+
+    Wraps an inner Directory (RAM or FS); the inner store holds the actual
+    bytes, the throttle holds the device timeline. Build the paper's
+    isolated pair with two throttles, the shared pair by passing the SAME
+    throttle to both the source and target directory.
+    """
+
+    def __init__(self, inner: Directory, throttle: DeviceThrottle):
+        super().__init__()
+        self.inner = inner
+        self.throttle = throttle
+
+    def _write(self, name, data):
+        self.throttle.charge_write(len(data))
+        self.inner.write_file(name, data)
+
+    def _read(self, name):
+        data = self.inner.read_file(name)
+        self.throttle.charge_read(len(data))
+        return data
+
+    def _list(self):
+        return self.inner._list()
+
+    def _delete(self, name):
+        self.inner.delete_file(name)
+
+    def _rename(self, src, dst):
+        # metadata-only on real media: charge latency, not bandwidth
+        self.throttle.charge_write(0)
+        self.inner.rename(src, dst)
+
+    def _size(self, name):
+        return self.inner.file_size(name)

@@ -150,6 +150,99 @@ def test_merge_preserves_position_runs():
     assert not runs  # nothing lost, nothing invented
 
 
+def test_pop_merge_work_claims_smallest_batch_first():
+    """Size-proportional merge selection: across mixed-size tiers the
+    batch with the smallest summed bytes is claimed first (even from a
+    higher tier), and within a tier the smallest doc-adjacent window of
+    ``fanout`` segments forms the batch — so one huge pending merge never
+    starves the cheap ones."""
+    from repro.core.merge import MergeDriver
+    rng = np.random.default_rng(11)
+    big = [make_segment(rng, 1000 * i, n_docs=8, max_terms=12, max_tf=3)
+           for i in range(2)]
+    small = [make_segment(rng, 10000 + 100 * i, n_docs=1, max_terms=2,
+                          single_postings=True) for i in range(2)]
+    assert sum(s.total_bytes() for s in small) \
+        < sum(s.total_bytes() for s in big)
+    drv = MergeDriver(fanout=2)
+    drv.tiers = {0: list(big), 1: list(small)}
+    work = drv.pop_merge_work()
+    assert work.tier == 1, "the smaller batch lives in tier 1"
+    assert [s.seg_id for s in work.batch] == [s.seg_id for s in small]
+    drv.restore_work(work)
+    assert [s.seg_id for s in drv.tiers[1]] == [s.seg_id for s in small]
+
+    # within one tier: the two smallest of four, arrival order preserved
+    drv2 = MergeDriver(fanout=2)
+    mixed = [big[0], small[0], big[1], small[1]]
+    drv2.tiers = {0: list(mixed)}
+    w = drv2.pop_merge_work()
+    assert [s.seg_id for s in w.batch] == [small[0].seg_id, small[1].seg_id]
+    assert [s.seg_id for s in drv2.tiers[0]] == [big[0].seg_id,
+                                                 big[1].seg_id]
+    # the cascade still drains completely: the big batch is claimable next
+    merged = drv2.run_merge(w)
+    w2 = drv2.pop_merge_work()
+    assert w2 is not None and [s.seg_id for s in w2.batch] \
+        == [big[0].seg_id, big[1].seg_id]
+    drv2.run_merge(w2)
+    live = drv2.live_segments()
+    got = np.sort(np.concatenate([s.doc_ids for s in live]))
+    want = np.sort(np.concatenate([s.doc_ids for s in mixed]))
+    assert (got == want).all()
+    assert merged.seg_id in {s.seg_id for s in live}
+
+
+def test_pop_merge_work_never_interleaves_doc_ranges():
+    """A batch that skips a doc-range sibling must not be claimable:
+    merging tier-mates [small(0..), small(200..)] around big(100..) would
+    create a segment whose doc range swallows big, and the later co-merge
+    of the two would violate the disjoint-ordered-ranges invariant. Only
+    doc-adjacent windows qualify, however small the skipping batch is."""
+    from repro.core.merge import MergeDriver
+    rng = np.random.default_rng(13)
+    s0 = make_segment(rng, 0, n_docs=1, max_terms=2, single_postings=True)
+    big = make_segment(rng, 100, n_docs=8, max_terms=12)
+    s2 = make_segment(rng, 200, n_docs=1, max_terms=2, single_postings=True)
+    drv = MergeDriver(fanout=2)
+    drv.tiers = {0: [s0, big, s2]}
+    w = drv.pop_merge_work()
+    firsts = [int(s.doc_ids[0]) for s in w.batch]
+    assert firsts in ([0, 100], [100, 200]), \
+        f"claimed a doc-interleaving batch: {firsts}"
+    drv.run_merge(w)
+    final = drv.finalize()  # must not trip the disjoint-ranges assert
+    want = np.sort(np.concatenate([s.doc_ids for s in (s0, big, s2)]))
+    assert (final.doc_ids == want).all()
+
+
+def test_interior_merge_does_not_strand_flanks():
+    """Progress guarantee: merging an interior pair parks its output one
+    tier up, in the middle of the flanks' doc range. The flanking window
+    must then ABSORB that cross-tier barrier into a doc-consecutive batch
+    instead of stalling forever (stranded segments would otherwise
+    accumulate without bound in a long-running NRT service)."""
+    from repro.core.merge import MergeDriver
+    rng = np.random.default_rng(14)
+    L1 = make_segment(rng, 0, n_docs=8, max_terms=12)
+    S1 = make_segment(rng, 100, n_docs=1, max_terms=2, single_postings=True)
+    S2 = make_segment(rng, 200, n_docs=1, max_terms=2, single_postings=True)
+    L2 = make_segment(rng, 300, n_docs=8, max_terms=12)
+    drv = MergeDriver(fanout=2)
+    drv.tiers = {0: [L1, S1, S2, L2]}
+    w1 = drv.pop_merge_work()
+    assert [int(s.doc_ids[0]) for s in w1.batch] == [100, 200]
+    m = drv.run_merge(w1)  # barrier at tier 1 spanning docs 100..2xx
+    w2 = drv.pop_merge_work()
+    assert w2 is not None, "flanks stranded behind the tier-1 barrier"
+    assert [int(s.doc_ids[0]) for s in w2.batch] == [0, 100, 300]
+    assert m.seg_id in {s.seg_id for s in w2.batch}
+    out = drv.run_merge(w2)
+    assert drv.live_segments() == [out]
+    want = np.concatenate([s.doc_ids for s in (L1, S1, S2, L2)])
+    assert (out.doc_ids == np.sort(want)).all()
+
+
 def test_segment_bytes_memoized(monkeypatch):
     rng = np.random.default_rng(10)
     s = make_segment(rng, 0, n_docs=6)
