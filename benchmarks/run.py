@@ -17,6 +17,9 @@ trajectory.
   envelope_measured measured media envelope: spool -> throttled index ->
                     commit -> recover -> search per source x target pair,
                     measured GB/min vs the analytic prediction
+  update_heavy      document-lifecycle workload: ingest GB/min and batched
+                    search latency under 10% and 50% churn (tombstoned
+                    deletes + re-adds), plus merge-time compaction ratio
 
 ``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
 runs a single bench.
@@ -389,9 +392,68 @@ def envelope_measured(smoke=False):
          f"calibrate() incl. {len(mruns)} measured runs", ".3f")
 
 
+def update_heavy(smoke=False):
+    """Document lifecycle under churn: a base corpus is ingested, then
+    10% / 50% of its docs are replaced (tombstone + re-add — the
+    update-heavy regime where Asadi & Lin's incremental indexes earn
+    their keep). Rows: churn-phase ingest GB/min (tombstones are cheap
+    bitmaps, so this should stay near the append-only rate), batched
+    search latency over the live (masked) snapshot, and the live doc
+    count after finalize — which also proves merge-time compaction
+    returned the index to exactly the corpus size."""
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+
+    cfg = get_arch("lucene-envelope").smoke
+    n_base, per = (6, 64) if smoke else (12, 256)
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=cfg.doc_len)
+    n_docs = n_base * per
+    for churn in (0.10, 0.50):
+        ix = DistributedIndexer(cfg=cfg, merge_threads=2)
+        for i in range(n_base):
+            ix.index_batch(corpus.batch(i, per))
+        base_read = ix.stats.read_bytes
+        n_upd = int(churn * n_docs)
+        t0 = time.perf_counter()
+        done = 0
+        while done < n_upd:
+            m = min(per, n_upd - done)
+            # replace docs [done, done+m): bulk tombstone + one re-add
+            # batch (the fresh docs get new ids; corpus size is steady)
+            ix.delete(np.arange(done, done + m))
+            ix.index_batch(corpus.batch(n_base + done // per, m))
+            done += m
+        searcher = ix.refresh()
+        churn_wall = time.perf_counter() - t0
+        assert searcher.n_docs == n_docs, (searcher.n_docs, n_docs)
+        gb = (ix.stats.read_bytes - base_read) / 1e9
+        tag = f"churn{int(churn * 100)}"
+        emit(f"update_heavy.{tag}.ingest_gb_per_min",
+             gb / (churn_wall / 60),
+             f"replaced {n_upd}/{n_docs} docs in {churn_wall*1000:.0f}ms",
+             ".3f")
+        rep = ix.envelope_report()
+        vocab = np.unique(corpus.batch(0, 64))[1:]
+        rng = np.random.default_rng(5)
+        q = np.stack([rng.choice(vocab, 4, replace=False) for _ in range(8)]
+                     ).astype(np.int32)
+        us, _ = _time(lambda qq: searcher.search_batched(qq, 10), q)
+        emit(f"update_heavy.{tag}.search_ms_b8", us / 1e3,
+             f"live={rep['live_docs']} tombstoned={rep['deleted_docs']}",
+             ".2f")
+        final = ix.finalize()
+        assert final.n_docs == n_docs and not final.has_deletes
+        emit(f"update_heavy.{tag}.compacted_docs", final.n_docs,
+             f"deletes_acked={rep['deletes_acked']} "
+             f"n_merges={ix.merger.n_merges}")
+        ix.close()
+
+
 BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
            invert_kernel, build_reader, search_batched, searcher_refresh,
-           merge_throughput, index_gb_per_min, envelope_measured]
+           merge_throughput, index_gb_per_min, envelope_measured,
+           update_heavy]
 SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
                  invert_kernel, merge_throughput, index_gb_per_min]
 

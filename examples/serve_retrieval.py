@@ -55,6 +55,20 @@ print(f"after refresh ({indexer.stats.last_refresh_s*1000:.1f}ms, "
       f"{sched.searcher.n_docs} docs searchable, "
       f"top score {float(req.scores[0]):.3f}")
 
+# document lifecycle mid-serving: tombstone two served docs, replace one
+served = np.unique(np.concatenate([r.doc_ids for r in done]))
+victims = served[served >= 0][:2].astype(np.int64)
+indexer.delete(victims)
+indexer.update(int(served[served >= 0][2]), corpus.batch(7, 32)[0])
+sched.swap_searcher(indexer.refresh())
+sched.submit(QueryRequest(rid=100, terms=done[0].terms))
+req = sched.run_to_completion()[0]
+assert not np.isin(req.doc_ids, victims).any()
+print(f"lifecycle: deleted {victims.tolist()} + updated 1 doc; "
+      f"{sched.searcher.n_docs} live docs, reader reopens "
+      f"{indexer.reader_cache.reopens} (no index rebuilds), "
+      f"tombstoned docs never served")
+
 # ---- dense path: two-tower ----
 cfg = get_arch("two-tower-retrieval").smoke
 params = RS.two_tower_init(jax.random.PRNGKey(0), cfg)

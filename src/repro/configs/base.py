@@ -192,6 +192,13 @@ class EnvelopeConfig:
     # background merge workers (ConcurrentMergeScheduler); 0 = merges run
     # synchronously inside add_flush (the coupled write path)
     merge_threads: int = 0
+    # cap background-merge IO at this MB/s (Lucene's ioThrottle shape) so
+    # cascades on the target medium never starve flushes; 0 = uncapped
+    merge_io_mbps: float = 0.0
+    # NRT refresh daemon period in seconds: > 0 starts a thread in
+    # DistributedIndexer that swaps ``indexer.searcher`` atomically every
+    # period (stopped by close()); 0 = manual refresh() only
+    refresh_every: float = 0.0
     store_positions: bool = True
     store_doc_vectors: bool = True
     # --- durable storage (repro.storage) ---

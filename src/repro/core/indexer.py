@@ -19,6 +19,18 @@ search-while-indexing. Per-segment readers are cached across refreshes
 keyed by segment identity, so a refresh after a merge cascade only builds
 a reader for the cascade's output. ``finalize()`` remains the paper's
 force-merged end state.
+
+Document lifecycle: ``delete(doc_ids)`` tombstones docs and
+``update(doc_id, doc)`` is delete + re-add under the flush lock (doc-id
+allocation unchanged — the replacement content gets a fresh id at flush).
+Deletes are buffered like Lucene's BufferedUpdates and folded into the
+live segment set at the next flush/refresh/commit, so every snapshot
+taken after the call returns excludes the docs; tombstoned postings are
+physically dropped by merges (core.merge) and the bitmaps become durable
+``.liv`` generation files at ``commit()`` (repro.storage). With
+``refresh_every > 0`` a daemon thread refreshes ``self.searcher``
+periodically (the swap is a single attribute store, already atomic) and
+is stopped/joined by ``close()``.
 """
 from __future__ import annotations
 
@@ -111,6 +123,8 @@ class IndexStats:
     wall_s: float = 0.0
     refreshes: int = 0
     last_refresh_s: float = 0.0
+    deletes: int = 0    # acknowledged delete ids (incl. updates' deletes)
+    updates: int = 0
 
 
 @dataclass
@@ -146,6 +160,16 @@ class DistributedIndexer:
     # concurrent config).
     merge_threads: int = None
     merge_scheduler: ConcurrentMergeScheduler = None
+    # > 0: cap background-merge IO at this MB/s (Lucene's ioThrottle) so
+    # cascades never monopolize the target medium against flushes. None:
+    # take cfg.merge_io_mbps; 0 disables.
+    merge_io_mbps: float = None
+    # > 0: a daemon thread refreshes ``self.searcher`` every this many
+    # seconds (NRT reader polling); the swap is a plain attribute store,
+    # so serving threads just read ``indexer.searcher``. None: take
+    # cfg.refresh_every; 0 disables. Stopped and joined by ``close()``.
+    refresh_every: float = None
+    searcher: IndexSearcher = None   # latest refreshed snapshot
     _next_doc: int = 0
 
     def __post_init__(self):
@@ -177,6 +201,11 @@ class DistributedIndexer:
         if self.merge_threads:
             self.merge_scheduler = ConcurrentMergeScheduler(
                 self.merger, max_threads=self.merge_threads)
+        if self.merge_io_mbps is None:
+            self.merge_io_mbps = getattr(self.cfg, "merge_io_mbps", 0.0)
+        if self.merge_io_mbps:
+            from repro.core.merge import MergeRateLimiter
+            self.merger.io_limiter = MergeRateLimiter(self.merge_io_mbps)
         self.reader_cache = ReaderCache()
         self._flush_policy = FlushPolicy(budget_mb=self.cfg.flush_budget_mb)
         # serializes the flush buffer handoff + doc-id allocation: refresh
@@ -185,6 +214,18 @@ class DistributedIndexer:
         # break the disjointness invariant the merge path asserts on
         self._flush_lock = threading.RLock()
         self._jit_invert = jax.jit(invert_shard)
+        # document lifecycle: acknowledged-but-unapplied delete ids
+        # (Lucene's BufferedUpdates), drained at flush under _flush_lock
+        self._buffered_deletes = np.zeros(0, np.int64)
+        if self.refresh_every is None:
+            self.refresh_every = getattr(self.cfg, "refresh_every", 0.0)
+        self._stop_refresh = threading.Event()
+        self._refresh_error = None
+        self._refresh_thread = None
+        if self.refresh_every and self.refresh_every > 0:
+            self._refresh_thread = threading.Thread(
+                target=self._refresh_loop, name="nrt-refresh", daemon=True)
+            self._refresh_thread.start()
 
     def index_batch(self, tokens: np.ndarray):
         """tokens: (D, L) int32 host buffer. Accumulates in the in-memory
@@ -198,12 +239,67 @@ class DistributedIndexer:
                 return self._flush()
         return None
 
+    def delete(self, doc_ids) -> int:
+        """Tombstone ``doc_ids`` (absolute ids, any shape). Buffered like
+        Lucene's ``BufferedUpdates``: the ids are folded into the live
+        segment set at the next flush/refresh/commit, so every snapshot
+        taken after this call returns excludes them (ids never indexed
+        are silently ignored). Cheap: no segment bytes move until a merge
+        compacts the tombstones away. Returns the ids acknowledged."""
+        ids = np.unique(np.asarray(doc_ids, np.int64).reshape(-1))
+        if ids.size == 0:
+            return 0
+        with self._flush_lock:
+            self._buffered_deletes = np.union1d(self._buffered_deletes, ids)
+            self.stats.deletes += int(ids.size)
+        return int(ids.size)
+
+    def update(self, doc_id: int, doc: np.ndarray):
+        """Replace one document (Lucene's ``updateDocument``): tombstone
+        ``doc_id`` and buffer ``doc``'s tokens as a new document under the
+        existing lock — doc-id allocation is unchanged, the replacement
+        gets the next fresh id at flush. Both sides surface together at
+        the next flush/refresh: no snapshot ever sees old and new at
+        once. Returns ``index_batch``'s result (a segment if the buffer
+        flushed)."""
+        doc = np.asarray(doc, np.int32)
+        if doc.ndim == 1:
+            doc = doc[None]
+        assert doc.shape[0] == 1, "update replaces exactly one document"
+        with self._flush_lock:
+            self.delete([doc_id])
+            self.stats.updates += 1
+            return self.index_batch(doc)
+
+    def _apply_deletes_locked(self, drain: bool):
+        """Fold buffered deletes into the live segment set (callers hold
+        ``_flush_lock``). The buffer is only DRAINED when every doc that
+        could be a target has left the in-memory token buffer (right
+        after a flush, or whenever nothing is awaiting one) — a delete
+        for a doc still awaiting flush must survive to be re-applied once
+        that doc's segment exists. Re-application is idempotent
+        (``with_deletes`` no-ops), but draining eagerly keeps a
+        delete-only serving workload (NRT daemon, no ingest) from
+        rescanning an ever-growing buffer every tick."""
+        ids = self._buffered_deletes
+        if not ids.size:
+            return
+        self.merger.apply_deletes(ids)
+        if drain:
+            self._buffered_deletes = np.zeros(0, np.int64)
+        elif self._flush_policy.pending_docs == 0:
+            # nothing awaits flush: every id below the allocation frontier
+            # has landed wherever it ever will; only ids of docs not yet
+            # allocated (meaningless until a future flush) stay buffered
+            self._buffered_deletes = ids[ids >= self._next_doc]
+
     def _flush(self):
         with self._flush_lock:
             return self._flush_locked()
 
     def _flush_locked(self):
         if self._flush_policy.pending_docs == 0:
+            self._apply_deletes_locked(drain=True)
             return None
         t0 = time.time()
         tokens = self._flush_policy.take()
@@ -215,6 +311,10 @@ class DistributedIndexer:
         seg = segment_from_run(run_np, np.arange(base, base + D),
                                run_np["doc_len"])
         self.merger.add_flush(seg)
+        # Lucene's BufferedUpdates contract: deletes land WITH the flush
+        # (after it, so deletes targeting docs in this very buffer hit
+        # the segment they just became), then the buffer drains
+        self._apply_deletes_locked(drain=True)
         self.stats.flushed_bytes += seg.total_bytes()
         self.stats.wall_s += time.time() - t0
         return seg
@@ -233,12 +333,17 @@ class DistributedIndexer:
         return n
 
     def commit(self, flush: bool = True) -> int:
-        """Durable commit point: flush buffered docs, then publish the
-        live segment set as ``segments_N`` (two-phase rename) and delete
-        superseded files. Returns the new commit generation."""
+        """Durable commit point: flush buffered docs and deletes, then
+        publish the live segment set as ``segments_N`` (two-phase rename
+        — per-segment ``.liv`` delete generations are written first and
+        referenced by the manifest) and delete superseded files. Returns
+        the new commit generation."""
         assert self.store is not None, "commit() requires target_dir"
-        if flush:
-            self._flush()
+        with self._flush_lock:
+            if flush:
+                self._flush_locked()
+            else:
+                self._apply_deletes_locked(drain=False)
         return self.store.commit(self.merger.live_segments())
 
     def finalize(self) -> Segment:
@@ -253,10 +358,32 @@ class DistributedIndexer:
         return final
 
     def close(self):
-        """Release the background merge pool (no-op when synchronous)."""
+        """Stop the NRT refresh daemon (join), then release the background
+        merge pool (no-op when synchronous). A refresh-thread error is
+        re-raised here rather than dying silently on a daemon thread."""
+        if self._refresh_thread is not None:
+            self._stop_refresh.set()
+            self._refresh_thread.join(timeout=30)
+            assert not self._refresh_thread.is_alive(), \
+                "refresh daemon failed to stop"
+            self._refresh_thread = None
+            if self._refresh_error is not None:
+                err, self._refresh_error = self._refresh_error, None
+                raise err
         if self.merge_scheduler is not None:
             self.merge_scheduler.close()
             self.merge_scheduler = None
+
+    def _refresh_loop(self):
+        """Daemon body: periodically swap ``self.searcher`` to a fresh
+        snapshot (flush=False — the ingest thread owns flushing; buffered
+        deletes are still folded in, see ``refresh``)."""
+        while not self._stop_refresh.wait(self.refresh_every):
+            try:
+                self.refresh(flush=False)
+            except Exception as e:  # surfaced by close()
+                self._refresh_error = e
+                return
 
     def refresh(self, flush: bool = True) -> IndexSearcher:
         """Near-real-time snapshot: everything indexed so far becomes
@@ -268,13 +395,22 @@ class DistributedIndexer:
         Readers are reused from ``reader_cache`` for every segment that
         survived since the last refresh; the returned searcher stays valid
         across future flushes/merges — callers swap searchers at their own
-        cadence while indexing continues (write-read decoupling)."""
-        if flush:
-            self._flush()
+        cadence while indexing continues (write-read decoupling).
+
+        Buffered deletes are folded in FIRST either way (``flush=False``
+        keeps them buffered for re-application, in case a target doc is
+        still in the token buffer), so a snapshot taken after a delete
+        was acknowledged never returns the doc."""
+        with self._flush_lock:
+            if flush:
+                self._flush_locked()
+            else:
+                self._apply_deletes_locked(drain=False)
         t0 = time.time()
         searcher = self.reader_cache.refresh(self.merger.live_segments())
         self.stats.refreshes += 1
         self.stats.last_refresh_s = time.time() - t0
+        self.searcher = searcher   # the (atomic) NRT swap
         return searcher
 
     def envelope_report(self) -> dict:
@@ -314,6 +450,12 @@ class DistributedIndexer:
             "wall_s_host": self.stats.wall_s,
             "t_merge_modeled_s": t_merge_modeled,
             "merge_wall_s": merge["merge_wall_s"],
+            "merge_io_paused_s": merge["merge_io_paused_s"],
+            # document lifecycle: live vs tombstoned docs in the live set
+            "live_docs": merge["live_docs"],
+            "deleted_docs": merge["deleted_docs"],
+            "deletes_acked": self.stats.deletes,
+            "updates_acked": self.stats.updates,
             "merge_concurrency": (self.merge_scheduler.max_threads
                                   if self.merge_scheduler else 0),
             # index size, from the ONE authoritative figure

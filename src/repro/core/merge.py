@@ -16,8 +16,12 @@ Two write-path lessons from the paper are implemented here:
   (the old lexsort) throws information away. Instead, each input's output
   positions are computed with ``np.searchsorted`` on the merged term
   dictionary plus offset arithmetic and the postings/tf/position-runs are
-  scattered directly. The lexsort implementation survives as
-  ``merge_segments_sorted``, the parity oracle asserted in tests.
+  scattered directly. Tombstoned docs are COMPACTED during that same
+  scatter — the live mask is folded into the per-input offset math (kept
+  ranks replace ``arange``), no post-hoc filter pass — so a merge output
+  never carries deletes. The lexsort implementation survives as
+  ``merge_segments_sorted`` (folding deletes naively via ``drop_deleted``
+  first), the parity oracle asserted in tests.
 * ``ConcurrentMergeScheduler`` (the shape of Lucene's class of the same
   name) runs merges on a background thread pool so ``index_batch``/
   ``_flush`` never wait on a merge — write-write decoupling to match the
@@ -36,7 +40,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.core.segments import Segment, fresh_seg_id
+from repro.core.segments import Segment, fresh_seg_id, live_posting_stats
 
 
 def _bump_single(seg: Segment) -> Segment:
@@ -47,10 +51,39 @@ def _bump_single(seg: Segment) -> Segment:
                    seg_id=fresh_seg_id())
 
 
+def drop_deleted(seg: Segment) -> Segment:
+    """Naive tombstone fold: boolean-filter every stream of ``seg`` down to
+    its live docs (dictionary terms whose live df hits zero drop out too).
+
+    This is the oracle the compacting scatter in ``merge_segments`` is
+    asserted bit-identical against; it is also the production path for
+    compacting a LONE segment (a 1-way merge of a deleted-into segment),
+    where there is no scatter to fold the mask into. Returns ``seg``
+    itself when there is nothing to drop."""
+    if not seg.has_deletes:
+        return seg
+    live = ~seg.deletes
+    keep, df_live, _ = live_posting_stats(seg)
+    alive_t = df_live > 0
+    tf_live = seg.tf[keep]
+    return Segment(
+        terms=seg.terms[alive_t],
+        term_start=np.concatenate(
+            [[0], np.cumsum(df_live[alive_t], dtype=np.int64)]),
+        docs=seg.docs[keep], tf=tf_live,
+        positions=seg.positions[np.repeat(keep, seg.tf)],
+        pos_start=np.concatenate([[0], np.cumsum(tf_live, dtype=np.int64)]),
+        doc_ids=seg.doc_ids[live], doc_len=seg.doc_len[live],
+        generation=seg.generation)
+
+
 def merge_segments_sorted(segs: list[Segment]) -> Segment:
     """Lexsort-based k-way merge — the original implementation, kept as the
     parity oracle for ``merge_segments`` (asserted bit-identical in
-    tests/test_merge.py). Only requires doc-id spaces to be disjoint."""
+    tests/test_merge.py). Only requires doc-id spaces to be disjoint.
+    Tombstones are folded the naive way: each input is filtered down to
+    its live docs (``drop_deleted``) before the merge."""
+    segs = [drop_deleted(s) for s in segs]
     if len(segs) == 1:
         return _bump_single(segs[0])
     terms = np.concatenate([np.repeat(s.terms, np.diff(s.term_start))
@@ -90,8 +123,10 @@ def merge_segments_sorted(segs: list[Segment]) -> Segment:
 
 
 def merge_segments(segs: list[Segment]) -> Segment:
-    """Streaming O(P) k-way merge: exact union of postings, bit-identical
-    to ``merge_segments_sorted`` but without the O(P log P) re-sort.
+    """Streaming O(P) k-way merge: exact union of the inputs' LIVE
+    postings, bit-identical to ``merge_segments_sorted`` (which folds
+    tombstones naively first) but without the O(P log P) re-sort and
+    without any separate filter pass.
 
     Exploited invariants (both hold for every segment the pipeline
     produces — asserted cheaply below):
@@ -101,64 +136,100 @@ def merge_segments(segs: list[Segment]) -> Segment:
         per-segment runs in input order is already doc-sorted.
 
     The merged term dictionary comes from ``np.unique`` over the (small)
-    input dictionaries; every posting's output slot is then pure offset
-    arithmetic — merged term start + within-term offset of its segment's
-    run + rank within the run — and postings scatter straight to their
-    slots in one vectorized pass per input. Position runs never touch an
-    intermediate concatenated stream: each input's position array is
-    already ordered by (term, doc), so it scatters as contiguous source
-    runs with a single fused ``repeat(dst_start - src_start) + arange``
-    index per input (``repeat(a, l) + repeat(b, l) == repeat(a + b, l)``).
+    input dictionaries, restricted to terms whose LIVE df is non-zero;
+    every surviving posting's output slot is then pure offset arithmetic —
+    merged term start + within-term offset of its segment's run + its rank
+    *among the kept postings* of the run — and postings scatter straight
+    to their slots in one vectorized pass per input. The tombstone mask is
+    folded into that index math: the kept-rank (an exclusive cumsum of the
+    live mask) replaces the ``arange`` of the append-only path, so
+    compaction costs one extra cumsum per input instead of a second pass.
+    Position runs never touch an intermediate concatenated stream: each
+    input's position array is already ordered by (term, doc), so it
+    scatters as contiguous source runs with a single fused
+    ``repeat(dst_start - src_start) + arange`` index per input
+    (``repeat(a, l) + repeat(b, l) == repeat(a + b, l)``), masked down to
+    the kept runs. The output carries no deletes — merging IS compaction.
     """
     if len(segs) == 1:
-        return _bump_single(segs[0])
+        # no scatter to fold the mask into: compact naively, then bump
+        return _bump_single(drop_deleted(segs[0]))
     # order inputs by doc range (empty inputs first; they contribute nothing)
     segs = sorted(segs, key=lambda s: int(s.doc_ids[0]) if s.n_docs else -1)
-    doc_ids = np.concatenate([s.doc_ids for s in segs])
+    doc_ids = np.concatenate([s.live_doc_ids() for s in segs])
     assert doc_ids.size < 2 or (np.diff(doc_ids) > 0).all(), \
         "doc-id spaces must be disjoint ordered ranges"
-    doc_len = np.concatenate([s.doc_len for s in segs])
+    doc_len = np.concatenate([s.doc_len if not s.has_deletes
+                              else s.doc_len[~s.deletes] for s in segs])
 
-    uterms = np.unique(np.concatenate([s.terms for s in segs]))
-    T = uterms.size
-    P = sum(s.n_postings for s in segs)
-    # merged df per term, then CSR starts
-    df_out = np.zeros(T, np.int64)
-    tpos, dfs = [], []
+    uterms_all = np.unique(np.concatenate([s.terms for s in segs]))
+    # merged LIVE df per term; terms whose live df is zero leave the
+    # dictionary (their postings all point at tombstoned docs)
+    df_all = np.zeros(uterms_all.size, np.int64)
+    per_input = []  # (ti into uterms_all, df_full, df_live, keep, kept_before)
     for s in segs:
-        ti = np.searchsorted(uterms, s.terms)
-        df = np.diff(s.term_start).astype(np.int64)
-        np.add.at(df_out, ti, df)
-        tpos.append(ti)
-        dfs.append(df)
-    term_start = np.concatenate([[0], np.cumsum(df_out)])
+        ti = np.searchsorted(uterms_all, s.terms)
+        df_full = np.diff(s.term_start).astype(np.int64)
+        keep, df_live, kept_before = live_posting_stats(s)
+        np.add.at(df_all, ti, df_live)
+        per_input.append((ti, df_full, df_live, keep, kept_before))
+    alive_t = df_all > 0
+    uterms = uterms_all[alive_t]
+    term_start = np.concatenate([[0], np.cumsum(df_all[alive_t])])
+    # old dictionary slot -> compacted slot (dead slots map to a clamped
+    # neighbor; they are only ever indexed with a zero-live-df advance)
+    remap = np.maximum(np.cumsum(alive_t) - 1, 0)
 
+    P = int(term_start[-1])
     docs = np.empty(P, np.int64)
     tf = np.empty(P, np.int64)
     # within-term write cursor advances as segments are consumed in order
     cursor = term_start[:-1].copy()
     outs = []
-    for s, ti, df in zip(segs, tpos, dfs):
+    for s, (ti, df_full, df_live, keep, kept_before) in zip(segs, per_input):
         p = s.n_postings
         out = None
-        if p:
+        if p and int(df_live.sum()):
+            ti = remap[ti]
             starts = cursor[ti]
-            cursor[ti] += df
-            # posting j of this input lands at
-            #   starts[term(j)] + (j - term_start[term(j)])
-            out = np.repeat(starts - s.term_start[:-1], df) + np.arange(p)
-            docs[out] = s.docs
-            tf[out] = s.tf
-        outs.append(out)
-    pos_start = np.concatenate([[0], np.cumsum(tf)])
+            live_i = df_live > 0  # ti is injective over these rows
+            cursor[ti[live_i]] += df_live[live_i]
+            if keep is None:
+                # posting j of this input lands at
+                #   starts[term(j)] + (j - term_start[term(j)])
+                out = np.repeat(starts - s.term_start[:-1], df_full) \
+                    + np.arange(p)
+                docs[out] = s.docs
+                tf[out] = s.tf
+            else:
+                # kept posting j lands at starts[term(j)] + its rank among
+                # the KEPT postings of its run: the exclusive cumsum of the
+                # mask replaces arange — dropped slots get garbage values
+                # that are never scattered
+                excl = np.cumsum(keep, dtype=np.int64) - keep
+                out = np.repeat(starts - kept_before, df_full) + excl
+                docs[out[keep]] = s.docs[keep]
+                tf[out[keep]] = s.tf[keep]
+        outs.append((out, keep))
+    pos_start = np.concatenate([[0], np.cumsum(tf)]) if P \
+        else np.zeros(1, np.int64)
     positions = np.empty(int(pos_start[-1]) if P else 0, np.int64)
-    for s, out in zip(segs, outs):
-        if out is not None and len(s.positions):
+    for s, (out, keep) in zip(segs, outs):
+        if out is None or not len(s.positions):
+            continue
+        if keep is None:
             # element m of this input's position stream belongs to its
             # posting j(m); it lands at pos_start[out[j]] + (m - src_start)
             dst = np.repeat(pos_start[:-1][out] - s.pos_start[:-1],
                             s.tf) + np.arange(len(s.positions))
             positions[dst] = s.positions
+        else:
+            safe_out = np.where(keep, out, 0)
+            run_dst = np.where(keep, pos_start[:-1][safe_out], 0)
+            elem_keep = np.repeat(keep, s.tf)
+            dst = np.repeat(run_dst - s.pos_start[:-1],
+                            s.tf) + np.arange(len(s.positions))
+            positions[dst[elem_keep]] = s.positions[elem_keep]
     return Segment(terms=uterms, term_start=term_start, docs=docs, tf=tf,
                    positions=positions, pos_start=pos_start,
                    doc_ids=doc_ids, doc_len=doc_len,
@@ -168,10 +239,49 @@ def merge_segments(segs: list[Segment]) -> Segment:
 @dataclass(eq=False)
 class _MergeWork:
     """One claimed merge: its source tier and the batch pulled from it.
-    Identity equality (eq=False) — instances are tracked in lists."""
+    Identity equality (eq=False) — instances are tracked in lists.
+    ``deferred`` collects delete batches that arrived while the merge was
+    running: the worker may have read the pre-delete inputs, so they are
+    re-applied to the merge output at install time (no delete is ever
+    lost mid-merge)."""
 
     tier: int
     batch: list
+    deferred: list = field(default_factory=list)
+
+
+class MergeRateLimiter:
+    """Lucene's ioThrottle shape: background merges pay for their bytes at
+    a capped MB/s, sleeping off the debt in bounded slices, so merge IO is
+    *spaced out* in wall-clock instead of monopolizing the target device —
+    flushes on the same medium always find headroom. The cap applies to a
+    merge's re-reads and its output write; flushes are never charged.
+
+    ``max_pause_s`` bounds any single sleep (a giant top-tier merge must
+    not stall its worker for minutes at a time); debt beyond the bound is
+    forgiven, which makes the cap soft exactly the way Lucene's is."""
+
+    def __init__(self, mb_per_s: float = 50.0, max_pause_s: float = 0.25):
+        assert mb_per_s > 0
+        self.mb_per_s = mb_per_s
+        self.max_pause_s = max_pause_s
+        self.paused_s = 0.0       # total wall-clock slept by merge workers
+        self.bytes_charged = 0
+        self._lock = threading.Lock()
+
+    def charge(self, n_bytes: int) -> float:
+        """Charge ``n_bytes`` of merge IO; sleeps this (worker) thread for
+        up to ``max_pause_s`` to hold the configured rate. Returns the
+        seconds actually slept."""
+        with self._lock:
+            self.bytes_charged += n_bytes
+            pause = min(n_bytes / (self.mb_per_s * 1e6), self.max_pause_s)
+        if pause > 1e-4:
+            time.sleep(pause)
+            with self._lock:
+                self.paused_s += pause
+            return pause
+        return 0.0
 
 
 @dataclass
@@ -199,6 +309,10 @@ class MergeDriver:
     # merged segment is encoded through the target Directory *before* it
     # becomes live, and merges re-read their inputs' files (measured IO)
     store: object = None
+    # MergeRateLimiter when merge IO is capped (Lucene's ioThrottle):
+    # run_merge charges its measured store reads/writes against it so
+    # background merges never monopolize the target device
+    io_limiter: object = None
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
     _in_flight: list = field(default_factory=list, repr=False)
@@ -231,6 +345,37 @@ class MergeDriver:
     @staticmethod
     def _first_doc(seg: Segment) -> int:
         return int(seg.doc_ids[0]) if seg.n_docs else -1
+
+    def apply_deletes(self, doc_ids) -> int:
+        """Route tombstones to every live holder of the targeted docs.
+
+        Tier-resident segments are swapped for their ``with_deletes``
+        copies (shared postings, fresh seg_id — reader caches invalidate
+        by key; the store, when attached, re-keys the on-disk name).
+        In-flight merge inputs are swapped too, because snapshots include
+        them — AND the ids are recorded on the claim: the merge worker may
+        already have read the old objects, so ``run_merge`` re-applies the
+        deferred ids to its output at install. Either way no delete is
+        lost mid-merge, and any snapshot taken after this call returns
+        excludes the docs. Returns how many segments changed."""
+        ids = np.asarray(doc_ids, np.int64).reshape(-1)
+        if ids.size == 0:
+            return 0
+        changed = 0
+        with self._lock:
+            holders = list(self.tiers.values()) \
+                + [w.batch for w in self._in_flight]
+            for segs in holders:
+                for i, s in enumerate(segs):
+                    ns = s.with_deletes(ids)
+                    if ns is not s:
+                        segs[i] = ns
+                        changed += 1
+                        if self.store is not None:
+                            self.store.relabel(s, ns)
+            for w in self._in_flight:
+                w.deferred.append(ids)
+        return changed
 
     def pop_merge_work(self) -> _MergeWork | None:
         """Claim the smallest eligible merge, or None.
@@ -323,14 +468,26 @@ class MergeDriver:
             if self.store is not None:
                 # a durable merge re-reads its inputs from the target and
                 # writes its output there before installing it (measured
-                # counterparts of bytes_read_merge / bytes_written)
-                self.store.read_back(work.batch)
-                self.store.write(merged)
+                # counterparts of bytes_read_merge / bytes_written);
+                # with an io_limiter the bytes are paid at a capped rate
+                n_read = self.store.read_back(work.batch)
+                name = self.store.write(merged)
+                if self.io_limiter is not None:
+                    self.io_limiter.charge(n_read
+                                           + self.store.size_of(name))
         except BaseException:
             self.restore_work(work)  # no doc may ever go missing
             raise
         with self._lock:
             self._in_flight.remove(work)
+            # deletes that arrived mid-merge: the worker may have read the
+            # pre-delete inputs, so fold the deferred ids into the output
+            # before it becomes live (idempotent when the merge saw them)
+            for ids in work.deferred:
+                nm = merged.with_deletes(ids)
+                if nm is not merged and self.store is not None:
+                    self.store.relabel(merged, nm)
+                merged = nm
             self.bytes_read_merge += sum(s.total_bytes() for s in work.batch)
             self.bytes_written += merged.total_bytes()
             self.n_merges += 1
@@ -390,7 +547,10 @@ class MergeDriver:
                 # doc-consecutive window, so intermediate outputs never
                 # interleave with segments still waiting in ``keep``
                 remaining.sort(key=self._first_doc)
-                if len(remaining) == 1:
+                if len(remaining) == 1 and not remaining[0].has_deletes:
+                    # the paper's end state is COMPACTED: a lone segment
+                    # still carrying tombstones takes one more (1-way)
+                    # merge through the loop below to fold them away
                     self.tiers = {0: remaining}
                     return remaining[0]
                 batch = remaining[:self.fanout]
@@ -415,6 +575,10 @@ class MergeDriver:
                 "flushed_bytes": self.flushed_bytes,
                 "n_merges": self.n_merges,
                 "merge_wall_s": self.merge_wall_s,
+                "live_docs": sum(s.live_doc_count for s in live),
+                "deleted_docs": sum(s.n_deleted for s in live),
+                "merge_io_paused_s": (self.io_limiter.paused_s
+                                      if self.io_limiter else 0.0),
                 # THE index-size figure: the modeled (packed, pre-codec)
                 # bytes of the live segment set. Everything downstream
                 # (amplification here, envelope_report's raw-vs-encoded
@@ -462,7 +626,10 @@ class ConcurrentMergeScheduler:
 
     @staticmethod
     def _key(work: _MergeWork):
-        return tuple(s.seg_id for s in work.batch)
+        # base_id, not seg_id: a delete landing mid-merge swaps the batch
+        # entries for with_deletes copies (new seg_ids, same cores), and a
+        # retried batch must still clear its recorded error
+        return tuple(sorted(s.base_id for s in work.batch))
 
     def notify(self):
         """Claim and submit every merge the driver currently has ready."""

@@ -106,9 +106,20 @@ def block_upper_bounds(index: BlockMaxIndex, bidx, in_term, idf_q):
     return jnp.where(in_term & (mt > 0), ub, 0.0)
 
 
+def _mask_live(scores, live):
+    """Tombstone mask: deleted docs sink to -1, below every real BM25
+    score (>= 0), so ``top_k`` never surfaces them while live zero-score
+    docs still rank above. ``live`` is a (D,) bool vector (True = live);
+    None means the segment carries no deletes and the scores pass through
+    untouched (identical compiled graph to the pre-tombstone path)."""
+    if live is None:
+        return scores
+    return jnp.where(live, scores, -1.0)
+
+
 def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
               prune: bool = True, idf_q=None, doc_norm=None,
-              max_blocks=None):
+              max_blocks=None, live=None):
     """Returns (scores (k,), doc_ids (k,), stats dict).
 
     ``idf_q`` (Q,) and ``doc_norm`` (D,) default to the segment-local
@@ -117,6 +128,11 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     bound only assumes b/k1, not which stats produced idf/doc_norm).
     ``max_blocks`` narrows the per-term candidate window (see
     ``_gather_term_blocks``) — exact iff it covers every query term.
+    ``live`` (D,) masks tombstoned docs out of BOTH phases: the phase-1
+    threshold theta comes from masked scores (a lower theta only weakens
+    pruning, never correctness), and the final top-k sees deleted docs at
+    -1 — callers keep k <= live-doc count, so results are exactly the
+    live index's (asserted equal to searching the compacted merge).
     """
     q_terms = q_terms.astype(jnp.int32)
     rows, found, bidx, in_term = _gather_term_blocks(index, q_terms,
@@ -127,7 +143,8 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     idf_pb = jnp.broadcast_to(idf_q[:, None], bidx.shape)
 
     if not prune:
-        scores = _score_blocks(index, bidx, in_term, idf_pb, doc_norm)
+        scores = _mask_live(
+            _score_blocks(index, bidx, in_term, idf_pb, doc_norm), live)
         vals, ids = jax.lax.top_k(scores, k)
         return vals, ids, {"blocks_scored": in_term.sum(),
                            "blocks_total": in_term.sum()}
@@ -138,7 +155,8 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     n_phase1 = max(n_cand // 2, min(n_cand, 8))
     thresh_ub = jnp.sort(ub.reshape(-1))[-n_phase1]
     phase1 = in_term & (ub >= thresh_ub)
-    scores1 = _score_blocks(index, bidx, phase1, idf_pb, doc_norm)
+    scores1 = _mask_live(
+        _score_blocks(index, bidx, phase1, idf_pb, doc_norm), live)
     theta = jax.lax.top_k(scores1, k)[0][-1]  # valid lower bound on final theta
 
     # phase 2 (MaxScore test): block survives iff its UB plus every other
@@ -147,14 +165,15 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     others = term_best.sum() - term_best  # (Q,)
     needed = ub + others[:, None] > theta
     active = in_term & (phase1 | needed)
-    scores = _score_blocks(index, bidx, active, idf_pb, doc_norm)
+    scores = _mask_live(
+        _score_blocks(index, bidx, active, idf_pb, doc_norm), live)
     vals, ids = jax.lax.top_k(scores, k)
     return vals, ids, {"blocks_scored": active.sum(),
                        "blocks_total": in_term.sum(), "theta": theta}
 
 
 def bm25_exhaustive(index: BlockMaxIndex, q_terms, k: int = 10,
-                    idf_q=None, doc_norm=None):
+                    idf_q=None, doc_norm=None, live=None):
     return bm25_topk(index, q_terms, k, prune=False,
-                     idf_q=idf_q, doc_norm=doc_norm)
+                     idf_q=idf_q, doc_norm=doc_norm, live=live)
 

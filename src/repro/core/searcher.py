@@ -12,17 +12,26 @@ decoupling), rather than the paper's force-merged end state:
                           segment; bit-identical to the scalar reference
                           ``build_block_index_loop`` it replaced.
   ``SegmentReader``       one open segment: its block-max index, the
-                          local->absolute doc-id map, and a cache of jitted
-                          top-k evaluators (single and vmap-batched).
+                          local->absolute doc-id map, the live-doc mask
+                          (tombstones), and a cache of jitted top-k
+                          evaluators (single and vmap-batched).
   ``IndexSearcher``       an immutable snapshot over a list of readers.
                           Evaluates each segment under collection-GLOBAL
-                          statistics (summed df -> idf, global avgdl ->
-                          doc_norm) and merges per-segment top-k, so results
-                          equal searching the force-merged index exactly.
+                          statistics computed from LIVE docs only (summed
+                          live df -> idf, live avgdl -> doc_norm), masks
+                          tombstones inside the two-phase evaluation, and
+                          merges per-segment top-k — so results equal
+                          searching the force-merged COMPACTED index
+                          exactly, and a deleted doc is never returned.
   ``ReaderCache``         keyed by ``Segment.seg_id``: successive refreshes
                           only build readers for segments they have not
                           seen, so a merge cascade costs one reader build
-                          for the merged output, not one per input.
+                          for the merged output, not one per input. A
+                          delete only swaps the bitmap (``with_deletes``
+                          keeps ``base_id``), so the cache REOPENS the
+                          existing reader over the new liveness — the
+                          packed index and its compiled evaluators are
+                          reused, not rebuilt.
 
 Refresh lifecycle (see ``DistributedIndexer.refresh``): the indexer flushes
 its in-memory buffer, snapshots ``MergeDriver.live_segments()``, and asks
@@ -41,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.query import BLOCK, BlockMaxIndex, bm25_topk
-from repro.core.segments import Segment
+from repro.core.segments import Segment, live_posting_stats
 from repro.kernels.postings_pack import ops as pack_ops
 
 
@@ -159,26 +168,62 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
 # readers and the multi-segment searcher
 # --------------------------------------------------------------------------
 
+def _live_term_df(seg: Segment) -> np.ndarray:
+    """Per-term LIVE df: postings whose doc is tombstoned do not count
+    toward collection statistics (df must describe the searchable index,
+    or multi-segment idf would diverge from the compacted merge's).
+    Same kernel the merge folds into its scatter — bit-identity between
+    the read path and merge-time compaction by construction."""
+    return live_posting_stats(seg)[1]
+
+
 @dataclass
 class SegmentReader:
-    """One open segment: device index + doc-id map + jitted evaluators."""
+    """One open segment: device index + doc-id map + liveness + jitted
+    evaluators. The block-max index always covers the FULL postings (the
+    bytes on device never change under deletes); tombstones live in the
+    ``live`` mask the evaluators apply, and in the live-only statistics
+    (``df_np``, ``live_doc_len``) the searcher aggregates."""
 
     seg: Segment
     index: BlockMaxIndex
     doc_map: jnp.ndarray          # (D,) local -> absolute doc id
     terms_np: np.ndarray          # host copies for global-df lookups
-    df_np: np.ndarray
+    df_np: np.ndarray             # (T,) LIVE df per term
     nb_np: np.ndarray             # (T,) blocks per term
+    live: object = None           # (D,) bool device mask; None = no deletes
+    live_doc_len: np.ndarray = None  # host doc lengths of live docs only
     _fns: dict = field(default_factory=dict)
 
     @classmethod
     def open(cls, seg: Segment, k1: float = 0.9, b: float = 0.4
              ) -> "SegmentReader":
-        df = np.diff(seg.term_start).astype(np.int64)
+        df_full = np.diff(seg.term_start).astype(np.int64)
         return cls(seg=seg, index=build_block_index(seg, k1, b),
                    doc_map=jnp.asarray(seg.doc_ids.astype(np.int32)),
-                   terms_np=np.asarray(seg.terms), df_np=df,
-                   nb_np=-(-df // BLOCK))
+                   terms_np=np.asarray(seg.terms),
+                   df_np=_live_term_df(seg),
+                   nb_np=-(-df_full // BLOCK),
+                   live=(jnp.asarray(~seg.deletes) if seg.has_deletes
+                         else None),
+                   live_doc_len=(seg.doc_len[~seg.deletes]
+                                 if seg.has_deletes else seg.doc_len))
+
+    def reopen(self, seg: Segment) -> "SegmentReader":
+        """Same postings core (``seg.base_id == self.seg.base_id``), new
+        tombstone bitmap: shares the packed device index, the doc map AND
+        the compiled evaluator cache (liveness is an argument of the
+        masked evaluators, not baked into their traces) — a delete costs
+        one O(P) host pass for live stats instead of an index rebuild."""
+        assert seg.base_id == self.seg.base_id, "reopen needs the same core"
+        return SegmentReader(
+            seg=seg, index=self.index, doc_map=self.doc_map,
+            terms_np=self.terms_np, df_np=_live_term_df(seg),
+            nb_np=self.nb_np,
+            live=(jnp.asarray(~seg.deletes) if seg.has_deletes else None),
+            live_doc_len=(seg.doc_len[~seg.deletes] if seg.has_deletes
+                          else seg.doc_len),
+            _fns=self._fns)
 
     @property
     def seg_id(self) -> int:
@@ -187,6 +232,10 @@ class SegmentReader:
     @property
     def n_docs(self) -> int:
         return self.seg.n_docs
+
+    @property
+    def live_docs(self) -> int:
+        return self.seg.live_doc_count
 
     def query_max_blocks(self, q: np.ndarray) -> int:
         """Exact max blocks-per-term over the query's terms, rounded up to
@@ -205,53 +254,80 @@ class SegmentReader:
                    max(self.index.max_blocks_per_term, 1))
 
     def topk_fn(self, k: int, max_blocks: int, batched: bool = False):
-        """Jitted ``(q, idf_q, doc_norm) -> (scores, absolute doc ids)``.
+        """Jitted ``(q, idf_q, doc_norm[, live]) -> (scores, abs doc ids)``.
 
         idf/doc_norm arrive as arguments (not baked into the trace) so a
-        refresh that only changes global stats reuses the compiled fn.
-        Pruning is left to the TPU kernel path, where the active mask
-        actually skips blocks; the jnp reference path computes every lane
-        either way, so there the single exhaustive pass (identical
-        results) is strictly cheaper than the two-phase one.
+        refresh that only changes global stats reuses the compiled fn; the
+        masked variant additionally takes the (D,) live mask as an
+        argument, so successive delete generations of the same core reuse
+        one compiled evaluator (see ``reopen``). Pruning is left to the
+        TPU kernel path, where the active mask actually skips blocks; the
+        jnp reference path computes every lane either way, so there the
+        single exhaustive pass (identical results) is strictly cheaper
+        than the two-phase one.
         """
-        key = (k, max_blocks, batched)
+        masked = self.live is not None
+        key = (k, max_blocks, batched, masked)
         if key not in self._fns:
             index, doc_map = self.index, self.doc_map
             prune = jax.default_backend() == "tpu"
 
-            def single(q, idf_q, doc_norm):
-                vals, ids, _ = bm25_topk(index, q, k, prune=prune,
-                                         idf_q=idf_q, doc_norm=doc_norm,
-                                         max_blocks=max_blocks)
-                return vals, doc_map[ids]
+            if masked:
+                def single(q, idf_q, doc_norm, live):
+                    vals, ids, _ = bm25_topk(index, q, k, prune=prune,
+                                             idf_q=idf_q, doc_norm=doc_norm,
+                                             max_blocks=max_blocks,
+                                             live=live)
+                    return vals, doc_map[ids]
 
-            fn = jax.vmap(single, in_axes=(0, 0, None)) if batched else single
+                fn = jax.vmap(single, in_axes=(0, 0, None, None)) \
+                    if batched else single
+            else:
+                def single(q, idf_q, doc_norm):
+                    vals, ids, _ = bm25_topk(index, q, k, prune=prune,
+                                             idf_q=idf_q, doc_norm=doc_norm,
+                                             max_blocks=max_blocks)
+                    return vals, doc_map[ids]
+
+                fn = jax.vmap(single, in_axes=(0, 0, None)) \
+                    if batched else single
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
+
+    def topk(self, q, idf_q, doc_norm, k: int, max_blocks: int,
+             batched: bool = False):
+        """Evaluate top-k on this segment, masking tombstones when the
+        segment has any (the searcher's one entry point)."""
+        fn = self.topk_fn(k, max_blocks, batched)
+        if self.live is not None:
+            return fn(q, idf_q, doc_norm, self.live)
+        return fn(q, idf_q, doc_norm)
 
 
 @dataclass
 class IndexSearcher:
     """Point-in-time searchable view over a set of live segments.
 
-    Per-segment evaluation runs under collection-global statistics: df is
-    summed across segments (disjoint doc spaces -> df adds), avgdl is the
-    global mean doc length. Each doc lives in exactly one segment, so its
-    score is identical to what the force-merged index would give it, and a
-    merge of per-segment top-k equals global top-k.
+    Per-segment evaluation runs under collection-global statistics
+    computed from LIVE docs only: df is summed across segments (disjoint
+    doc spaces -> live df adds), avgdl is the mean length of live docs.
+    Each live doc is in exactly one segment, so its score is identical to
+    what the force-merged COMPACTED index would give it, and a merge of
+    per-segment top-k equals global top-k; tombstoned docs are masked
+    inside the evaluators and never surface.
     """
 
     readers: list
     k1: float = 0.9
     b: float = 0.4
-    n_docs: int = 0
+    n_docs: int = 0                # LIVE docs in the snapshot
     avgdl: float = 1.0
     _doc_norms: list = None
     _df_terms: np.ndarray = None   # (U,) sorted union of segment terms
-    _df_table: np.ndarray = None   # (U,) collection-wide df per term
+    _df_table: np.ndarray = None   # (U,) collection-wide LIVE df per term
 
     def __post_init__(self):
-        dls = [r.seg.doc_len for r in self.readers]
+        dls = [r.live_doc_len for r in self.readers]
         all_dl = (np.concatenate(dls).astype(np.float64) if dls
                   else np.zeros(0, np.float64))
         self.n_docs = int(all_dl.size)
@@ -301,16 +377,18 @@ class IndexSearcher:
     def search(self, q_terms, k: int = 10):
         """Top-k over every live segment; returns (scores (k,), doc_ids (k,))
         with absolute doc ids. Results are identical to ``bm25_topk`` over
-        the force-merged segment (asserted in tests/test_searcher.py)."""
+        the force-merged compacted segment (asserted in tests). Per-segment
+        k is capped at the LIVE doc count, so a reader's top-k can never be
+        forced to dip into its tombstoned (masked, score -1) docs."""
         q = np.asarray(q_terms)
         idf = jnp.asarray(self.global_idf(q))
         qj = jnp.asarray(q, jnp.int32)
         parts_v, parts_i = [], []
         for r, dn in zip(self.readers, self._doc_norms):
-            k_eff = min(k, r.index.n_docs)
-            if k_eff <= 0:
-                continue
-            v, i = r.topk_fn(k_eff, r.query_max_blocks(q))(qj, idf, dn)
+            k_eff = min(k, r.live_docs)
+            if k_eff <= 0 or r.terms_np.size == 0:
+                continue  # nothing live (or no postings): contributes 0
+            v, i = r.topk(qj, idf, dn, k_eff, r.query_max_blocks(q))
             parts_v.append(v)
             parts_i.append(i)
         if not parts_v:
@@ -336,11 +414,11 @@ class IndexSearcher:
         qj = jnp.asarray(q, jnp.int32)
         parts_v, parts_i = [], []
         for r, dn in zip(self.readers, self._doc_norms):
-            k_eff = min(k, r.index.n_docs)
-            if k_eff <= 0:
-                continue
+            k_eff = min(k, r.live_docs)
+            if k_eff <= 0 or r.terms_np.size == 0:
+                continue  # nothing live (or no postings): contributes 0
             mb = r.query_max_blocks(q)
-            v, i = r.topk_fn(k_eff, mb, batched=True)(qj, idf, dn)
+            v, i = r.topk(qj, idf, dn, k_eff, mb, batched=True)
             parts_v.append(v)
             parts_i.append(i)
         if not parts_v:
@@ -363,7 +441,10 @@ class ReaderCache:
     ``refresh(segs)`` returns a searcher over exactly ``segs``, reusing
     cached readers for segments seen before and evicting readers whose
     segments left the live set (merged away). After a merge cascade only
-    the cascade's *output* segment needs a reader build.
+    the cascade's *output* segment needs a reader build; after a delete
+    (same ``base_id``, new bitmap) the cached reader is REOPENED — the
+    packed index, doc map and compiled evaluators carry over and only the
+    live statistics are recomputed (``reopens`` counts these).
 
     Thread-safe under the concurrent merge scheduler: ``segs`` is an
     atomic ``live_segments()`` snapshot of immutable segments, so reader
@@ -376,6 +457,7 @@ class ReaderCache:
     b: float = 0.4
     builds: int = 0
     hits: int = 0
+    reopens: int = 0   # bitmap-only reader swaps (shared core)
     evictions: int = 0
     _readers: dict = field(default_factory=dict)
     _max_seen: int = -1  # newest seg_id ever installed (monotonic)
@@ -388,11 +470,23 @@ class ReaderCache:
         # build missing readers OUTSIDE the lock: a refresh that is all
         # cache hits must never wait behind another thread's cold build
         # (segments are immutable, so the worst case is a duplicate build
-        # and one copy wins the swap below)
-        fresh = {seg.seg_id: SegmentReader.open(seg, self.k1, self.b)
-                 for seg in segs if seg.seg_id not in have}
+        # and one copy wins the swap below). A miss whose postings core is
+        # already open (a delete generation of a cached segment) reopens
+        # that reader instead of rebuilding the device index.
+        by_base = {r.seg.base_id: r for r in have.values()}
+        fresh, n_reopened = {}, 0
+        for seg in segs:
+            if seg.seg_id in have:
+                continue
+            core = by_base.get(seg.base_id)
+            if core is not None:
+                fresh[seg.seg_id] = core.reopen(seg)
+                n_reopened += 1
+            else:
+                fresh[seg.seg_id] = SegmentReader.open(seg, self.k1, self.b)
         with self._lock:
-            self.builds += len(fresh)  # counted where the build happened
+            self.builds += len(fresh) - n_reopened
+            self.reopens += n_reopened
             live, readers = {}, []
             for seg in segs:
                 r = self._readers.get(seg.seg_id)

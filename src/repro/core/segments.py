@@ -5,11 +5,21 @@ terms with CSR postings (absolute doc ids + tf), a position stream CSR'd
 per posting, per-doc lengths, and the byte accounting the envelope model
 charges against the target medium (packed postings + dictionary + parsed
 doc vectors + stored docs — the paper stores all of these, §2).
+
+Document lifecycle (Lucene's tombstone model): segments stay immutable
+under deletes. A delete produces a NEW segment via ``with_deletes`` — the
+postings arrays are shared, only the ``deletes`` bitmap is copied-on-write
+— so every cached reader, in-flight merge input and published snapshot
+keeps the exact bytes it was built over. ``seg_id`` changes with the
+bitmap (readers cache by it), ``base_id`` names the immutable postings
+core (so a reader can be *reopened* with a fresh bitmap instead of
+rebuilt). Tombstoned docs are physically dropped at merge time
+(``core/merge.py`` folds the mask into its scatter).
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -49,10 +59,23 @@ class Segment:
     doc_ids: np.ndarray        # (D,) absolute doc ids covered
     doc_len: np.ndarray        # (D,)
     generation: int = 0        # merge tier
+    # tombstones: None = no deletes; else a (D,) bool mask aligned with
+    # doc_ids (True = deleted). Never mutated in place — ``with_deletes``
+    # is the only writer and it copies.
+    deletes: np.ndarray = None
     # process-unique identity: segments are immutable, so readers built from
     # a segment can be cached under this key across refreshes (id() would be
     # reusable after GC and is not safe as a cache key).
     seg_id: int = field(default_factory=fresh_seg_id)
+    # identity of the postings CORE (every array except ``deletes``):
+    # preserved by ``with_deletes``, fresh everywhere else. A reader whose
+    # segment left the live set can be reopened over any segment sharing
+    # its base_id — same packed index, new liveness — instead of rebuilt.
+    base_id: int = -1
+
+    def __post_init__(self):
+        if self.base_id < 0:
+            self.base_id = self.seg_id
 
     @property
     def n_terms(self) -> int:
@@ -65,6 +88,54 @@ class Segment:
     @property
     def n_docs(self) -> int:
         return len(self.doc_ids)
+
+    @property
+    def n_deleted(self) -> int:
+        return int(self.deletes.sum()) if self.deletes is not None else 0
+
+    @property
+    def live_doc_count(self) -> int:
+        return self.n_docs - self.n_deleted
+
+    @property
+    def has_deletes(self) -> bool:
+        return self.deletes is not None and bool(self.deletes.any())
+
+    def live_doc_ids(self) -> np.ndarray:
+        if not self.has_deletes:
+            return self.doc_ids
+        return self.doc_ids[~self.deletes]
+
+    def with_deletes(self, doc_ids) -> "Segment":
+        """Copy-on-write tombstone application.
+
+        Returns a NEW segment (fresh ``seg_id``, same ``base_id``, shared
+        postings arrays) whose bitmap additionally marks every id in
+        ``doc_ids`` that this segment holds; returns ``self`` unchanged
+        when nothing new intersects — callers use identity to detect
+        whether anything happened (and reader caches stay warm)."""
+        ids = np.asarray(doc_ids, np.int64).reshape(-1)
+        if ids.size == 0 or self.n_docs == 0:
+            return self
+        pos = np.searchsorted(self.doc_ids, ids)
+        ok = pos < self.n_docs
+        hit = pos[ok][self.doc_ids[pos[ok]] == ids[ok]]
+        if hit.size == 0:
+            return self
+        if self.deletes is not None and bool(self.deletes[hit].all()):
+            return self
+        mask = (np.zeros(self.n_docs, bool) if self.deletes is None
+                else self.deletes.copy())
+        mask[hit] = True
+        new = replace(self, deletes=mask, seg_id=fresh_seg_id())
+        # byte accounting depends only on the shared postings core, so the
+        # memoized figures carry over (tombstones cost a separate .liv file,
+        # measured by the storage layer, not modeled here)
+        for attr in ("_index_bytes_cache", "_total_bytes_cache"):
+            cached = getattr(self, attr, None)
+            if cached is not None:
+                setattr(new, attr, cached)
+        return new
 
     def index_bytes(self) -> dict:
         """Byte accounting of what writing this segment costs (packed).
@@ -110,6 +181,24 @@ class Segment:
             cached = sum(self.index_bytes().values())
             self._total_bytes_cache = cached
         return cached
+
+
+def live_posting_stats(seg: Segment):
+    """The one tombstone-folding kernel every consumer shares:
+    ``(keep, df_live, kept_before)`` where ``keep`` is the (P,) bool
+    live-posting mask (None when the segment has no deletes — callers
+    take their fast path), ``df_live`` the per-term LIVE df, and
+    ``kept_before`` the exclusive count of kept postings before each
+    term's run. The merge scatter, the naive fold oracle and the reader's
+    live statistics all derive from these three arrays — one
+    implementation keeps them bit-identical by construction."""
+    df_full = np.diff(seg.term_start).astype(np.int64)
+    if not seg.has_deletes:
+        return None, df_full, None
+    keep = ~seg.deletes[np.searchsorted(seg.doc_ids, seg.docs)]
+    ck = np.concatenate([[0], np.cumsum(keep, dtype=np.int64)])
+    return (keep, ck[seg.term_start[1:]] - ck[seg.term_start[:-1]],
+            ck[seg.term_start[:-1]])
 
 
 def segment_from_run(run_np: dict, doc_ids: np.ndarray,

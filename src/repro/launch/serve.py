@@ -8,10 +8,13 @@ retrieval path (inverted-index BM25 — the paper's serving counterpart).
 Retrieval mode exercises the full write-read-decoupled read path: index
 batches, ``refresh()`` a live (un-finalized) searcher, serve a batched
 query stream through the fixed-slot ``QueryScheduler``, keep indexing,
-refresh again (cached readers) and serve the grown corpus. With
-``--index-dir`` the index is durable (repro.storage): segments are
-committed to an ``FSDirectory``, then recovered from disk into a fresh
-searcher before serving — restart-and-serve from the last commit point.
+refresh again (cached readers) and serve the grown corpus — then the
+document lifecycle: ``--deletes N`` tombstones N served docs and
+``--updates M`` replaces M more (delete + re-add), the next refresh is
+asserted to never return a deleted doc, and with ``--index-dir`` the
+tombstones are committed as ``.liv`` delete generations and recovered
+from disk. ``--refresh-every S`` serves from the indexer's background
+NRT refresh daemon instead of manual refreshes.
 """
 from __future__ import annotations
 
@@ -61,8 +64,10 @@ def serve_retrieval(args):
     if args.index_dir:
         from repro.storage import FSDirectory
         target_dir = FSDirectory(args.index_dir)
-    ix = DistributedIndexer(cfg=cfg, target_dir=target_dir)
-    recovered_docs = sum(s.n_docs for s in ix.merger.live_segments()) \
+    ix = DistributedIndexer(cfg=cfg, target_dir=target_dir,
+                            refresh_every=args.refresh_every)
+    recovered_docs = sum(s.live_doc_count
+                        for s in ix.merger.live_segments()) \
         if target_dir else 0
     for i in range(4):
         ix.index_batch(corpus.batch(i, 32))
@@ -117,6 +122,59 @@ def serve_retrieval(args):
     done = sched.run_to_completion()
     top = f"top score {float(done[0].scores[0]):.3f}" if done else "no queries"
     print(f"post-refresh: {sched.searcher.n_docs} docs searchable; {top}")
+
+    # --- document lifecycle: delete + update live docs, serve again ------
+    if args.deletes or args.updates:
+        served = np.unique(np.concatenate(
+            [r.doc_ids for r in done if r.doc_ids is not None]))
+        served = served[served >= 0]
+        del_ids = served[:args.deletes]
+        upd_ids = served[args.deletes:args.deletes + args.updates]
+        ix.delete(del_ids)
+        for d in upd_ids:
+            ix.update(int(d), corpus.batch(int(d) % 8, 32)[int(d) % 32])
+        if args.refresh_every:
+            # the NRT daemon folds the deletes in and swaps ix.searcher;
+            # wait for TWO ticks instead of refreshing by hand — a tick
+            # already in flight when we read r0 may predate the acks, but
+            # the one after it must have started after them
+            r0 = ix.stats.refreshes
+            deadline = time.time() + max(40 * args.refresh_every, 10.0)
+            while ix.stats.refreshes < r0 + 2 and time.time() < deadline:
+                time.sleep(args.refresh_every / 4)
+            sched.swap_searcher(ix.searcher)
+        else:
+            sched.swap_searcher(ix.refresh())
+        for r in reqs[:args.slots]:
+            r.done = False
+            sched.submit(r)
+        done2 = sched.run_to_completion()
+        got = np.concatenate([r.doc_ids for r in done2]) if done2 \
+            else np.zeros(0, np.int64)
+        gone = set(del_ids.tolist()) | set(upd_ids.tolist())
+        assert not (set(got[got >= 0].tolist()) & gone), \
+            "a tombstoned doc surfaced after its delete was acknowledged"
+        rep = ix.envelope_report()
+        print(f"lifecycle: deleted {len(del_ids)} + updated {len(upd_ids)} "
+              f"docs; {sched.searcher.n_docs} live "
+              f"({rep['deleted_docs']} tombstoned awaiting merge); "
+              f"no deleted doc served")
+        if target_dir is not None:
+            gen = ix.commit()
+            from repro.storage import open_searcher as open_s
+            _, s_rec = open_s(FSDirectory(args.index_dir))
+            # compare against the indexer's live count, not the served
+            # snapshot: commit() flushes, so it may surface update
+            # re-adds a daemon (flush=False) snapshot hasn't seen yet
+            n_live = sum(s.live_doc_count
+                         for s in ix.merger.live_segments())
+            assert s_rec.n_docs == n_live, (s_rec.n_docs, n_live)
+            livs = [f for f in FSDirectory(args.index_dir).list_files()
+                    if f.endswith(".liv")]
+            print(f"lifecycle durable: commit gen {gen}, "
+                  f"{len(livs)} .liv delete generation(s), recovery "
+                  f"serves {s_rec.n_docs} live docs")
+    ix.close()
     return done
 
 
@@ -130,6 +188,15 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=32)
     ap.add_argument("--query-terms", type=int, default=4)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--deletes", type=int, default=8,
+                    help="retrieval mode: tombstone this many served docs "
+                         "and prove the next snapshot never returns them")
+    ap.add_argument("--updates", type=int, default=4,
+                    help="retrieval mode: replace this many served docs "
+                         "(delete + re-add under the flush lock)")
+    ap.add_argument("--refresh-every", type=float, default=0.0,
+                    help="retrieval mode: run the NRT refresh daemon at "
+                         "this period (s) and serve from its snapshots")
     ap.add_argument("--index-dir", default=None,
                     help="retrieval mode: durable FSDirectory index — "
                          "commit, recover from disk, then serve (resumes "

@@ -6,19 +6,22 @@ written through a ``Directory`` (RAM / filesystem / bandwidth-throttled
 media emulation), commits make them durable, recovery reloads them.
 """
 from repro.storage.codec import (CODECS, CorruptSegment, SEGMENT_SUFFIXES,
-                                 decode_segment, encode_segment,
+                                 decode_liveness, decode_segment,
+                                 encode_liveness, encode_segment,
                                  read_segment, write_segment)
-from repro.storage.commit import (SegmentStore, list_commits, open_latest,
-                                  open_searcher, read_commit, write_commit)
+from repro.storage.commit import (SegmentStore, list_commits, liv_name,
+                                  open_latest, open_searcher, read_commit,
+                                  write_commit)
 from repro.storage.directory import (MEDIA_PROFILES, DeviceThrottle,
                                      Directory, FSDirectory, MediaProfile,
                                      RAMDirectory, ThrottledDirectory)
 
 __all__ = [
-    "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES", "decode_segment",
-    "encode_segment", "read_segment", "write_segment",
-    "SegmentStore", "list_commits", "open_latest", "open_searcher",
-    "read_commit", "write_commit",
+    "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES", "decode_liveness",
+    "decode_segment", "encode_liveness", "encode_segment", "read_segment",
+    "write_segment",
+    "SegmentStore", "list_commits", "liv_name", "open_latest",
+    "open_searcher", "read_commit", "write_commit",
     "MEDIA_PROFILES", "DeviceThrottle", "Directory", "FSDirectory",
     "MediaProfile", "RAMDirectory", "ThrottledDirectory",
 ]

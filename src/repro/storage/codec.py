@@ -14,6 +14,16 @@ One segment = four files, each independently framed and checksummed:
   ``<name>.pos``   positions: per-posting rebased position deltas
   ``<name>.doc``   doc table: generation, doc-id deltas, doc lengths
 
+plus, when the segment carries tombstones, a *delete generation* file
+(Lucene's ``.liv`` shape) that is written WITHOUT rewriting the segment:
+
+  ``<name>_<g>.liv``  packed delete bitmap over the segment's doc table
+
+The four core files of a segment never change once written; every new
+batch of deletes bumps ``g`` and writes a fresh tiny ``.liv``, the commit
+manifest references exactly one generation per segment, and superseded
+generations are deleted after commit.
+
 Frame format (every storage file, including ``segments_N`` manifests):
 
   magic "RSEG" | u32 version | u8 kind | payload | u32 crc32(prefix)
@@ -42,6 +52,7 @@ VERSION = 1
 # frame kinds
 KIND_DICT, KIND_PST, KIND_POS, KIND_DOC = 1, 2, 3, 4
 KIND_MANIFEST, KIND_SPOOL = 5, 6
+KIND_LIV = 7
 
 SEGMENT_SUFFIXES = (".dict", ".pst", ".pos", ".doc")
 _SUFFIX_KIND = {".dict": KIND_DICT, ".pst": KIND_PST,
@@ -243,6 +254,31 @@ def decode_segment(files: dict[str, bytes]) -> Segment:
                    positions=positions, pos_start=pos_start,
                    doc_ids=doc_ids, doc_len=doc_len,
                    generation=int(generation))
+
+
+def encode_liveness(deletes: np.ndarray) -> bytes:
+    """(D,) bool tombstone mask (True = deleted) -> framed ``.liv`` bytes:
+    doc count + packed bitset, crc-protected like every storage file."""
+    mask = np.asarray(deletes, bool)
+    payload = struct.pack("<Q", mask.size) + np.packbits(mask).tobytes()
+    return frame(KIND_LIV, payload)
+
+
+def decode_liveness(data: bytes, n_docs: int) -> np.ndarray:
+    """Framed ``.liv`` bytes -> (n_docs,) bool tombstone mask. The stored
+    doc count must match the segment it annotates — a ``.liv`` torn or
+    attached to the wrong segment fails ``CorruptSegment`` cleanly."""
+    payload = unframe(data, KIND_LIV)
+    if len(payload) < 8:
+        raise CorruptSegment("liveness payload truncated")
+    (n,) = struct.unpack_from("<Q", payload, 0)
+    if n != n_docs:
+        raise CorruptSegment(
+            f"liveness covers {n} docs, segment has {n_docs}")
+    bits = np.frombuffer(payload[8:], np.uint8)
+    if bits.size != -(-n // 8):
+        raise CorruptSegment("liveness bitset truncated")
+    return np.unpackbits(bits)[:n].astype(bool)
 
 
 def write_segment(directory, name: str, seg: Segment,

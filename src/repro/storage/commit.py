@@ -5,8 +5,10 @@ freely (and non-atomically — a crash can tear them), but a segment only
 *exists* once a ``segments_N`` manifest references it, and the manifest
 itself appears atomically via two-phase commit:
 
-  1. write ``segments_N.tmp`` (framed + checksummed like every file),
-  2. ``rename`` it to ``segments_N`` (atomic ``os.replace``).
+  1. ``sync`` every data file the manifest will reference (one batched
+     durability barrier — writes themselves never fsync),
+  2. write ``segments_N.tmp`` (framed + checksummed like every file),
+  3. ``rename`` it to ``segments_N`` (atomic ``os.replace``).
 
 ``open_latest`` recovers by scanning for the highest N whose manifest
 frame validates AND whose referenced segments all decode checksum-clean;
@@ -15,10 +17,19 @@ anything else — torn segment files from a killed flush, a stranded
 and the previous commit wins. Every committed doc is therefore searchable
 exactly once after recovery; uncommitted work is simply re-indexed.
 
+Tombstones ride the same protocol as *delete generations*: a segment's
+bitmap is committed as a tiny ``<name>_<g>.liv`` file (the segment is
+never rewritten), the manifest maps each segment to AT MOST one ``.liv``
+generation, and recovery re-attaches it. A crash between a ``.liv``
+write and its commit therefore recovers the PREVIOUS delete generation —
+deletes, like docs, exist only once a manifest says so.
+
 ``SegmentStore`` is the glue the write path uses: it names and writes
 segments through a target ``Directory`` (via ``storage/codec``), tracks
 encoded sizes (measured bytes, vs ``Segment.total_bytes()``'s model),
-charges merge re-reads, and deletes superseded files after each commit.
+charges merge re-reads, rolls ``.liv`` generations forward at commit,
+and deletes superseded files (segments AND stale ``.liv``) after each
+commit.
 """
 from __future__ import annotations
 
@@ -29,32 +40,55 @@ import threading
 from dataclasses import dataclass, field
 
 from repro.storage import codec as seg_codec
-from repro.storage.codec import (CorruptSegment, KIND_MANIFEST, frame,
+from repro.storage.codec import (CorruptSegment, KIND_MANIFEST,
+                                 decode_liveness, encode_liveness, frame,
                                  read_segment, unframe, write_segment)
 from repro.storage.directory import Directory
 
 MANIFEST_RE = re.compile(r"^segments_(\d+)$")
 _SEG_NAME_RE = re.compile(r"^s([0-9a-f]{8})\.")
+LIV_NAME_RE = re.compile(r"^(s[0-9a-f]{8})_(\d+)\.liv$")
 # every file name this store can produce; recovery cleanup must not touch
 # anything else (an --index-dir pointed at a directory with unrelated
 # files — or a co-located source spool — must leave them intact)
 _OWNED_RE = re.compile(
-    r"^(s[0-9a-f]{8}\.(dict|pst|pos|doc)|segments_\d+(\.tmp)?)$")
+    r"^(s[0-9a-f]{8}\.(dict|pst|pos|doc)|s[0-9a-f]{8}_\d+\.liv"
+    r"|segments_\d+(\.tmp)?)$")
 
 
 def manifest_name(gen: int) -> str:
     return f"segments_{gen}"
 
 
+def liv_name(base: str, gen: int) -> str:
+    return f"{base}_{gen}.liv"
+
+
 def write_commit(directory: Directory, gen: int, names: list[str],
-                 codec: str = "pfor") -> str:
-    """Two-phase commit of one manifest; returns its file name."""
+                 codec: str = "pfor", liv: dict = None) -> str:
+    """Two-phase commit of one manifest; returns its file name. ``liv``
+    maps a segment base name to its current delete-generation file.
+
+    Durability barrier first: every data file the manifest references —
+    the four files of each segment plus any ``.liv`` — is synced in ONE
+    batch, then the manifest tmp is synced, then renamed into place. A
+    manifest can thus never outlive the bytes it points at, and the
+    protocol pays fsync once per commit instead of once per write."""
+    liv = dict(liv or {})
     payload = json.dumps({"gen": gen, "codec": codec,
-                          "segments": list(names)},
+                          "segments": list(names), "liv": liv},
                          sort_keys=True).encode()
     name = manifest_name(gen)
+    data_files = [n + sfx for n in names
+                  for sfx in seg_codec.SEGMENT_SUFFIXES]
+    data_files += sorted(liv.values())
+    directory.sync(data_files)
     directory.write_file(name + ".tmp", frame(KIND_MANIFEST, payload))
+    directory.sync([name + ".tmp"])
     directory.rename(name + ".tmp", name)
+    # the rename's dirent must itself survive a crash before the commit
+    # is acknowledged (FSDirectory syncs the directory inode too)
+    directory.sync([name])
     return name
 
 
@@ -62,6 +96,9 @@ def read_commit(directory: Directory, name: str) -> dict:
     meta = json.loads(unframe(directory.read_file(name), KIND_MANIFEST))
     if not isinstance(meta.get("segments"), list):
         raise CorruptSegment(f"manifest {name} has no segment list")
+    liv = meta.setdefault("liv", {})  # pre-lifecycle manifests lack it
+    if not isinstance(liv, dict):
+        raise CorruptSegment(f"manifest {name} has a malformed liv map")
     return meta
 
 
@@ -72,18 +109,31 @@ def list_commits(directory: Directory) -> list[int]:
     return sorted(gens, reverse=True)
 
 
-def _open_latest_full(directory: Directory) -> tuple[int, list, list]:
-    """Newest fully-valid commit as ``(gen, segments, names)`` — shared
-    by ``open_latest`` and ``SegmentStore.open`` so the manifest is read
-    (and its bytes charged to the device) exactly once."""
+def _open_latest_full(directory: Directory
+                      ) -> tuple[int, list, list, dict]:
+    """Newest fully-valid commit as ``(gen, segments, names, liv)`` —
+    shared by ``open_latest`` and ``SegmentStore.open`` so the manifest
+    is read (and its bytes charged to the device) exactly once. Each
+    segment's committed delete generation is decoded and re-attached
+    (``with_deletes``); a missing or torn ``.liv`` invalidates the whole
+    commit, exactly like a torn segment file."""
     for gen in list_commits(directory):
         try:
             meta = read_commit(directory, manifest_name(gen))
-            segs = [read_segment(directory, n) for n in meta["segments"]]
-        except (CorruptSegment, json.JSONDecodeError, struct.error):
+            segs = []
+            for n in meta["segments"]:
+                seg = read_segment(directory, n)
+                lname = meta["liv"].get(n)
+                if lname is not None:
+                    mask = decode_liveness(directory.read_file(lname),
+                                           seg.n_docs)
+                    seg = seg.with_deletes(seg.doc_ids[mask])
+                segs.append(seg)
+        except (CorruptSegment, json.JSONDecodeError, struct.error,
+                FileNotFoundError):
             continue
-        return gen, segs, list(meta["segments"])
-    return 0, [], []
+        return gen, segs, list(meta["segments"]), dict(meta["liv"])
+    return 0, [], [], {}
 
 
 def open_latest(directory: Directory) -> tuple[int, list]:
@@ -92,9 +142,10 @@ def open_latest(directory: Directory) -> tuple[int, list]:
     Walks commits newest-first; a commit whose manifest or any referenced
     segment file fails its checksum (torn by an interrupted run) is
     skipped entirely — partial commits never surface partially. An empty
-    or never-committed directory recovers to ``(0, [])``.
+    or never-committed directory recovers to ``(0, [])``. Recovered
+    segments carry their committed tombstone bitmaps.
     """
-    gen, segs, _ = _open_latest_full(directory)
+    gen, segs, _, _ = _open_latest_full(directory)
     return gen, segs
 
 
@@ -130,13 +181,20 @@ class SegmentStore:
     directory: Directory
     codec: str = "pfor"
     gen: int = 0
-    bytes_encoded_written: int = 0   # cumulative, flush + every merge
+    bytes_encoded_written: int = 0   # cumulative, flush + merges + .liv
     bytes_encoded_read: int = 0      # merge re-reads through the directory
     n_commits: int = 0
     _counter: int = 0
     _names: dict = field(default_factory=dict)   # seg_id -> file base name
-    _sizes: dict = field(default_factory=dict)   # base name -> encoded bytes
+    _sizes: dict = field(default_factory=dict)   # base/liv name -> bytes
     _superseded: set = field(default_factory=set)  # names eligible to delete
+    # delete generations, per base name: the monotone bitmap makes the
+    # deleted-doc COUNT a sufficient fingerprint for "changed since the
+    # last written .liv"
+    _liv_gen: dict = field(default_factory=dict)   # base -> last gen int
+    _liv_file: dict = field(default_factory=dict)  # base -> current file
+    _liv_count: dict = field(default_factory=dict)  # base -> n_deleted
+    _liv_dead: set = field(default_factory=set)    # superseded .liv files
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
 
@@ -144,13 +202,14 @@ class SegmentStore:
     def open(cls, directory: Directory, codec: str = "pfor"
              ) -> tuple["SegmentStore", list]:
         """Recover a store over an existing directory: load the latest
-        commit, register its segments, delete every unreferenced
-        store-owned file (stray tmp manifests, torn post-commit flushes —
-        there are no concurrent writers during recovery, so cleanup is
-        safe here). Files the store could not have written (spooled
-        source batches, anything else living in the directory) are left
-        untouched."""
-        gen, segs, names = _open_latest_full(directory)
+        commit, register its segments and their committed ``.liv``
+        generations, delete every unreferenced store-owned file (stray
+        tmp manifests, torn post-commit flushes, orphan delete
+        generations — there are no concurrent writers during recovery, so
+        cleanup is safe here). Files the store could not have written
+        (spooled source batches, anything else living in the directory)
+        are left untouched."""
+        gen, segs, names, liv = _open_latest_full(directory)
         store = cls(directory=directory, codec=codec, gen=gen)
         keep = set()
         if gen:
@@ -161,6 +220,14 @@ class SegmentStore:
                     for sfx in seg_codec.SEGMENT_SUFFIXES)
                 keep.update(name + sfx
                             for sfx in seg_codec.SEGMENT_SUFFIXES)
+                lname = liv.get(name)
+                if lname is not None:
+                    m = LIV_NAME_RE.match(lname)
+                    store._liv_gen[name] = int(m.group(2)) if m else 0
+                    store._liv_file[name] = lname
+                    store._liv_count[name] = seg.n_deleted
+                    store._sizes[lname] = directory.file_size(lname)
+                    keep.add(lname)
             keep.add(manifest_name(gen))
         for f in directory.list_files():
             if f not in keep and _OWNED_RE.match(f):
@@ -169,6 +236,23 @@ class SegmentStore:
                     map(_SEG_NAME_RE.match, directory.list_files()) if m]
         store._counter = max(counters, default=-1) + 1
         return store, segs
+
+    def relabel(self, old_seg, new_seg) -> None:
+        """``new_seg`` is a ``with_deletes`` copy that took over
+        ``old_seg``'s place in the live set: map the new seg_id onto the
+        same on-disk base name (the four core files are shared — only the
+        ``.liv`` generation, written at the next commit, differs). The
+        old mapping survives, because a commit snapshot taken before the
+        swap may still reference the old object."""
+        with self._lock:
+            name = self._names.get(old_seg.seg_id)
+            if name is not None:
+                self._names[new_seg.seg_id] = name
+
+    def size_of(self, name: str) -> int:
+        """Encoded bytes of a written segment (or .liv) by name."""
+        with self._lock:
+            return self._sizes.get(name, 0)
 
     def write(self, seg) -> str:
         """Encode + write one segment; returns its on-disk base name.
@@ -212,15 +296,29 @@ class SegmentStore:
                     self._superseded.add(name)
 
     def encoded_bytes_live(self, segs) -> int:
-        """Encoded size of a segment set (measured files, not the model)."""
+        """Encoded size of a segment set (measured files, not the model),
+        including each segment's current delete-generation file."""
         with self._lock:
-            return sum(self._sizes[self._names[s.seg_id]] for s in segs
-                       if s.seg_id in self._names)
+            total = 0
+            for s in segs:
+                name = self._names.get(s.seg_id)
+                if name is None:
+                    continue
+                total += self._sizes.get(name, 0)
+                lname = self._liv_file.get(name)
+                if lname is not None:
+                    total += self._sizes.get(lname, 0)
+            return total
 
     def commit(self, live_segments) -> int:
-        """Durably publish ``live_segments`` as commit ``gen+1``, then
-        delete segment files that are superseded AND unreferenced by this
-        manifest, plus all older manifests."""
+        """Durably publish ``live_segments`` as commit ``gen+1``: roll a
+        new ``.liv`` generation for every segment whose bitmap grew since
+        the last one (the segment files themselves are never rewritten),
+        two-phase-write the manifest referencing exactly one generation
+        per segment, then delete files that are superseded AND
+        unreferenced by this manifest — dead segments, stale ``.liv``
+        generations, and all older manifests."""
+        live_segments = list(live_segments)
         with self._lock:
             try:
                 names = [self._names[s.seg_id] for s in live_segments]
@@ -229,7 +327,32 @@ class SegmentStore:
                                  f"wrote (seg_id {e.args[0]})") from e
             self.gen += 1
             gen = self.gen
-        write_commit(self.directory, gen, names, self.codec)
+            to_write, liv = [], {}
+            for s, name in zip(live_segments, names):
+                if not s.has_deletes:
+                    continue
+                if self._liv_count.get(name) != s.n_deleted:
+                    to_write.append((name, self._liv_gen.get(name, 0) + 1,
+                                     s.deletes))
+                else:
+                    liv[name] = self._liv_file[name]
+        # like segment files, a .liv is REGISTERED only after its write
+        # completed — a failed write leaves the previous generation
+        # current, and the next commit simply retries
+        for name, g, mask in to_write:
+            fname = liv_name(name, g)
+            n = self.directory.write_file(fname, encode_liveness(mask))
+            with self._lock:
+                old = self._liv_file.get(name)
+                if old is not None:
+                    self._liv_dead.add(old)
+                self._liv_gen[name] = g
+                self._liv_file[name] = fname
+                self._liv_count[name] = int(mask.sum())
+                self._sizes[fname] = n
+                self.bytes_encoded_written += n
+                liv[name] = fname
+        write_commit(self.directory, gen, names, self.codec, liv=liv)
         with self._lock:
             self.n_commits += 1
             live = set(names)
@@ -237,15 +360,30 @@ class SegmentStore:
             for n in dead:
                 self._superseded.discard(n)
                 self._sizes.pop(n, None)
+                # a dead segment's delete generation dies with it
+                lname = self._liv_file.pop(n, None)
+                if lname is not None:
+                    self._liv_dead.add(lname)
+                self._liv_gen.pop(n, None)
+                self._liv_count.pop(n, None)
             gone = set(dead)
             self._names = {sid: n for sid, n in self._names.items()
                            if n not in gone}
+            dead_liv = sorted(self._liv_dead)
+            self._liv_dead.clear()
+            for f in dead_liv:
+                self._sizes.pop(f, None)
         for n in dead:
             for sfx in seg_codec.SEGMENT_SUFFIXES:
                 try:
                     self.directory.delete_file(n + sfx)
                 except FileNotFoundError:
                     pass
+        for f in dead_liv:
+            try:
+                self.directory.delete_file(f)
+            except FileNotFoundError:
+                pass
         for old in list_commits(self.directory):
             if old < gen:
                 try:

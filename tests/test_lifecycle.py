@@ -1,0 +1,390 @@
+"""Document lifecycle end-to-end: tombstoned deletes & updates across the
+write, merge, storage and read paths.
+
+The acceptance invariant (ISSUE 4): after ANY interleaving of index /
+delete / update / flush / merge / commit / recover, ``IndexSearcher``
+results are bit-identical to searching the force-merged compacted index
+built from only the live docs (hypothesis interleaving oracle below), and
+a deleted doc is never returned from any snapshot taken after its delete
+was acknowledged.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_arch
+from repro.core.indexer import DistributedIndexer
+from repro.core.merge import MergeDriver, drop_deleted, merge_segments
+from repro.core.query import bm25_exhaustive
+from repro.core.searcher import ReaderCache, build_block_index
+from repro.data.corpus import TINY, SyntheticCorpus
+from repro.storage import RAMDirectory, open_latest
+from test_merge import ARRAY_FIELDS, assert_bit_identical, make_segment
+
+SMOKE_CFG = get_arch("lucene-envelope").smoke
+
+
+# ---------------------------------------------------------------------------
+# Segment.with_deletes semantics
+# ---------------------------------------------------------------------------
+
+def test_with_deletes_copy_on_write():
+    rng = np.random.default_rng(0)
+    s = make_segment(rng, 100, n_docs=8)
+    assert s.with_deletes([]) is s
+    assert s.with_deletes([99999]) is s          # id not in this segment
+    s2 = s.with_deletes([101, 104])
+    assert s2 is not s and s2.seg_id != s.seg_id
+    assert s2.base_id == s.base_id               # same postings core
+    assert s.deletes is None                     # original untouched
+    assert s2.live_doc_count == 6 and s2.n_deleted == 2
+    assert (s2.live_doc_ids() == [100, 102, 103, 105, 106, 107]).all()
+    for f in ARRAY_FIELDS:
+        assert getattr(s2, f) is getattr(s, f)   # zero-copy postings
+    # idempotent re-application returns the same object (cache-friendly)
+    assert s2.with_deletes([101]) is s2
+    assert s2.with_deletes([101, 99999]) is s2
+    # union with new ids makes a third generation
+    s3 = s2.with_deletes([101, 107])
+    assert s3.n_deleted == 3 and s2.n_deleted == 2
+    # byte accounting carries over (the postings core is unchanged)
+    assert s3.total_bytes() == s.total_bytes()
+
+
+def test_drop_deleted_is_identity_without_deletes():
+    rng = np.random.default_rng(1)
+    s = make_segment(rng, 0, n_docs=5)
+    assert drop_deleted(s) is s
+
+
+def test_drop_deleted_filters_all_streams():
+    rng = np.random.default_rng(2)
+    s = make_segment(rng, 0, n_docs=6, vocab=20, max_terms=8)
+    dead = s.doc_ids[::2]
+    d = drop_deleted(s.with_deletes(dead))
+    assert not d.has_deletes
+    assert (d.doc_ids == s.doc_ids[1::2]).all()
+    assert not np.isin(d.docs, dead).any()
+    # every surviving (term, doc) position run is verbatim
+    runs = {}
+    for ti, t in enumerate(s.terms):
+        for j in range(s.term_start[ti], s.term_start[ti + 1]):
+            runs[(int(t), int(s.docs[j]))] = \
+                s.positions[s.pos_start[j]:s.pos_start[j + 1]].tolist()
+    for ti, t in enumerate(d.terms):
+        assert d.term_start[ti + 1] > d.term_start[ti]  # no empty terms
+        for j in range(d.term_start[ti], d.term_start[ti + 1]):
+            got = d.positions[d.pos_start[j]:d.pos_start[j + 1]].tolist()
+            assert got == runs[(int(t), int(d.docs[j]))]
+
+
+# ---------------------------------------------------------------------------
+# MergeDriver: deletes routed everywhere, including in-flight claims
+# ---------------------------------------------------------------------------
+
+def test_apply_deletes_reaches_tiers_and_inflight():
+    """No delete may be lost mid-merge: ids applied while a batch is
+    claimed must be visible in every snapshot AND folded into the merge
+    output at install, even though the worker read the old inputs."""
+    rng = np.random.default_rng(3)
+    a = make_segment(rng, 0, n_docs=6)
+    b = make_segment(rng, 100, n_docs=6)
+    c = make_segment(rng, 200, n_docs=6)
+    drv = MergeDriver(fanout=2)
+    drv.tiers = {0: [a, b], 1: [c]}
+    work = drv.pop_merge_work()          # claims [a, b]
+    assert {s.doc_ids[0] for s in work.batch} == {0, 100}
+    changed = drv.apply_deletes([0, 1, 100, 200, 999])
+    assert changed == 3                  # a, b (in flight) and c (tier)
+    live = drv.live_segments()           # snapshot during the merge
+    live_ids = np.concatenate([s.live_doc_ids() for s in live])
+    assert not np.isin([0, 1, 100, 200], live_ids).any()
+    merged = drv.run_merge(work)         # deferred ids fold into output
+    assert not np.isin([0, 1, 100], merged.live_doc_ids()).any()
+    final = drv.finalize()
+    assert not final.has_deletes
+    want = np.sort(np.concatenate([s.doc_ids for s in (a, b, c)]))
+    want = want[~np.isin(want, [0, 1, 100, 200])]
+    assert (final.doc_ids == want).all()
+
+
+def test_finalize_compacts_a_lone_deleted_segment():
+    rng = np.random.default_rng(4)
+    s = make_segment(rng, 0, n_docs=6)
+    drv = MergeDriver(fanout=10)
+    drv.add_flush(s)
+    drv.apply_deletes(s.doc_ids[:2])
+    final = drv.finalize()
+    assert not final.has_deletes
+    assert (final.doc_ids == s.doc_ids[2:]).all()
+    assert final.generation == s.generation + 1
+
+
+# ---------------------------------------------------------------------------
+# the interleaving oracle (the PR's acceptance invariant)
+# ---------------------------------------------------------------------------
+
+def _check_snapshot(searcher, docs_tokens: dict, deleted: set, rng, k=10):
+    """``searcher`` must behave exactly like the force-merged compacted
+    index over the live docs: same top-k scores as a from-scratch BM25
+    oracle, every returned id live and carrying its true global score."""
+    live_ids = np.array(sorted(set(docs_tokens) - deleted), np.int64)
+    assert searcher.n_docs == live_ids.size
+    if live_ids.size == 0:
+        return
+    tokens = np.stack([docs_tokens[i] for i in live_ids])
+    vocab = np.unique(tokens[tokens > 0])
+    if vocab.size == 0:
+        return
+    from test_searcher import bm25_oracle
+    for _ in range(3):
+        q = rng.choice(vocab, size=min(3, vocab.size),
+                       replace=False).astype(np.int32)
+        kk = min(k, live_ids.size)
+        v, ids = searcher.search(q, kk)
+        v, ids = np.asarray(v), np.asarray(ids)
+        returned = ids[ids >= 0]
+        assert np.isin(returned, live_ids).all(), \
+            "a deleted doc surfaced after its delete was acknowledged"
+        oracle = bm25_oracle(tokens, q)          # rows follow live_ids
+        np.testing.assert_allclose(v, np.sort(oracle)[::-1][:kk],
+                                   rtol=1e-4, atol=1e-5)
+        # tie-robust: each returned doc carries its true global score
+        row = np.searchsorted(live_ids, returned)
+        np.testing.assert_allclose(oracle[row], v[:returned.size],
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 100000))
+def test_lifecycle_interleaving_oracle(seed):
+    """Random interleavings of index/delete/update/flush/refresh/commit/
+    recover: every snapshot equals the compacted from-scratch index and
+    never returns a deleted doc; recovery reproduces the committed
+    lifecycle state exactly."""
+    rng = np.random.default_rng(seed)
+    cfg = SMOKE_CFG
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    directory = RAMDirectory()
+    ix = DistributedIndexer(cfg=cfg, target_dir=directory)
+    docs_tokens, deleted = {}, set()
+    committed = None                      # (docs_tokens, deleted) at commit
+    batch_i = 0
+    for _ in range(12):
+        op = rng.choice(["index", "delete", "update", "check",
+                         "commit", "recover"],
+                        p=[0.35, 0.2, 0.15, 0.15, 0.1, 0.05])
+        if op == "index":
+            n = int(rng.integers(1, 6))
+            toks = corpus.batch(batch_i, 32)[:n]
+            batch_i += 1
+            base = ix._next_doc + ix._flush_policy.pending_docs
+            ix.index_batch(toks)
+            for j in range(n):
+                docs_tokens[base + j] = toks[j]
+        elif op == "delete" and docs_tokens:
+            pool = np.array(sorted(docs_tokens), np.int64)
+            m = int(rng.integers(1, min(4, pool.size) + 1))
+            ids = rng.choice(pool, size=m, replace=False)
+            ix.delete(ids)
+            deleted.update(int(i) for i in ids)
+        elif op == "update" and docs_tokens:
+            live = sorted(set(docs_tokens) - deleted)
+            if not live:
+                continue
+            victim = int(rng.choice(live))
+            toks = corpus.batch(batch_i, 32)[0]
+            batch_i += 1
+            new_id = ix._next_doc + ix._flush_policy.pending_docs
+            ix.update(victim, toks)
+            deleted.add(victim)
+            docs_tokens[new_id] = toks
+        elif op == "check":
+            _check_snapshot(ix.refresh(), docs_tokens, deleted, rng)
+        elif op == "commit":
+            ix.commit()
+            committed = (dict(docs_tokens), set(deleted))
+        elif op == "recover" and committed is not None:
+            _, segs = open_latest(directory)
+            s = ReaderCache().refresh(segs)
+            _check_snapshot(s, committed[0], committed[1], rng)
+    # end state: snapshot, the force-merged compacted index, and a final
+    # recovery must all agree
+    _check_snapshot(ix.refresh(), docs_tokens, deleted, rng)
+    if set(docs_tokens) - deleted:
+        final = ix.finalize()
+        assert not final.has_deletes
+        live_ids = np.array(sorted(set(docs_tokens) - deleted))
+        assert (final.doc_ids == live_ids).all()
+        _check_snapshot(ix.refresh(flush=False), docs_tokens, deleted, rng)
+        _, segs = open_latest(directory)
+        s = ReaderCache().refresh(segs)
+        _check_snapshot(s, docs_tokens, deleted, rng)
+
+
+def test_multisegment_with_deletes_equals_compacted_merge():
+    """Direct statement of the bit-identity half of the invariant: the
+    live multi-segment searcher's scores equal exhaustive BM25 over the
+    single compacted merge of the same segments."""
+    rng = np.random.default_rng(7)
+    import jax.numpy as jnp
+    segs = []
+    for i in range(4):
+        s = make_segment(rng, i * 1000, n_docs=int(rng.integers(2, 9)),
+                         vocab=40)
+        if rng.random() < 0.8:
+            n_del = int(rng.integers(1, s.n_docs))
+            s = s.with_deletes(rng.choice(s.doc_ids, size=n_del,
+                                          replace=False))
+        segs.append(s)
+    searcher = ReaderCache().refresh(segs)
+    merged = merge_segments(list(segs))
+    assert searcher.n_docs == merged.n_docs
+    midx = build_block_index(merged)
+    vocab = np.unique(np.concatenate([s.terms for s in segs]))
+    for _ in range(6):
+        q = rng.choice(vocab, size=3, replace=False).astype(np.int32)
+        kk = min(8, merged.n_docs)
+        v_m, _, _ = bm25_exhaustive(midx, jnp.asarray(q), kk)
+        v_s, i_s = searcher.search(q, kk)
+        np.testing.assert_allclose(np.asarray(v_s), np.asarray(v_m),
+                                   rtol=1e-5, atol=1e-6)
+        dead = np.concatenate([s.doc_ids[s.deletes] for s in segs
+                               if s.has_deletes])
+        ids = np.asarray(i_s)
+        assert not np.isin(ids[ids >= 0], dead).any()
+
+
+# ---------------------------------------------------------------------------
+# write-path semantics
+# ---------------------------------------------------------------------------
+
+def test_delete_of_still_buffered_doc_survives_to_flush():
+    """A delete acknowledged while its target doc is still in the RAM
+    buffer must not be dropped by an intervening refresh: the buffer only
+    drains at flush, where the delete finally lands on the new segment."""
+    import dataclasses
+    cfg = dataclasses.replace(SMOKE_CFG, flush_budget_mb=64)  # no autoflush
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg)
+    ix.index_batch(corpus.batch(0, 8))   # docs 0..7 buffered, not flushed
+    ix.delete([3])
+    s = ix.refresh(flush=False)          # applies deletes, target unflushed
+    assert s.n_docs == 0
+    s = ix.refresh(flush=True)           # buffer flushes, delete lands
+    assert s.n_docs == 7
+    _, ids = s.search(np.unique(corpus.batch(0, 8))[1:3].astype(np.int32),
+                      8)
+    ids = np.asarray(ids)
+    assert 3 not in ids[ids >= 0]
+    assert ix._buffered_deletes.size == 0  # drained with the flush
+
+
+def test_update_replaces_content_under_new_id():
+    cfg = SMOKE_CFG
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg)
+    b0 = corpus.batch(0, 16)
+    ix.index_batch(b0)
+    new_doc = corpus.batch(5, 16)[0]
+    ix.update(2, new_doc)
+    s = ix.refresh()
+    assert s.n_docs == 16                # one out, one in
+    q = np.unique(new_doc[new_doc > 0])[:2].astype(np.int32)
+    v, ids = s.search(q, 16)
+    hit = np.asarray(ids)[np.asarray(v) > 0]
+    assert 16 in hit                     # replacement got the fresh id 16
+    assert 2 not in hit
+    assert ix.stats.updates == 1
+
+
+def test_deletes_survive_synchronous_merge_cascade():
+    """fanout segments + deletes + the cascade that merges them: the
+    merge output must physically drop the tombstoned docs."""
+    cfg = SMOKE_CFG                       # merge_fanout=4, flush per batch
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg)
+    for i in range(3):
+        ix.index_batch(corpus.batch(i, 8))
+    ix.delete([0, 9, 17])
+    ix.refresh()
+    ix.index_batch(corpus.batch(3, 8))   # 4th flush -> cascade merges all
+    assert ix.merger.n_merges == 1
+    merged = ix.merger.live_segments()[0]
+    assert merged.n_docs == 29 and not merged.has_deletes
+    assert not np.isin([0, 9, 17], merged.doc_ids).any()
+
+
+# ---------------------------------------------------------------------------
+# NRT refresh daemon under concurrent deletes (satellite)
+# ---------------------------------------------------------------------------
+
+def test_refresh_daemon_swaps_searcher_and_joins():
+    cfg = SMOKE_CFG
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg, refresh_every=0.02)
+    assert ix._refresh_thread is not None and ix._refresh_thread.is_alive()
+    ix.index_batch(corpus.batch(0, 16))
+    deadline = time.time() + 10
+    while (ix.searcher is None or ix.searcher.n_docs < 16) \
+            and time.time() < deadline:
+        time.sleep(0.01)
+    assert ix.searcher is not None and ix.searcher.n_docs == 16
+    thread = ix._refresh_thread
+    ix.close()
+    assert not thread.is_alive() and ix._refresh_thread is None
+    assert ix.stats.refreshes > 0
+
+
+def test_refresh_daemon_stress_with_concurrent_deletes():
+    """Ingest + deletes from the main thread race the refresh daemon and
+    a reader thread: every published snapshot must exclude every delete
+    acknowledged before that snapshot was taken (checked via a monotonic
+    high-water mark of acknowledged deletions), with no exceptions and a
+    clean stop/join."""
+    cfg = SMOKE_CFG
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg, merge_threads=2, refresh_every=0.005)
+    errors, stop = [], threading.Event()
+    acked = []                            # ids acked, in ack order
+
+    def reader():
+        try:
+            while not stop.is_set():
+                n_acked = len(acked)      # BEFORE taking the snapshot
+                s = ix.searcher
+                if s is None:
+                    continue
+                # any delete acked before this loop iteration started is
+                # covered iff the snapshot postdates its refresh; assert
+                # the weaker, still-sharp property on a fresh snapshot:
+                s2 = ix.refresh(flush=False)
+                banned = np.array(acked[:n_acked], np.int64)
+                if banned.size and s2.n_docs:
+                    q = np.unique(corpus.batch(0, 16))[1:4].astype(np.int32)
+                    _, ids = s2.search(q, min(20, s2.n_docs))
+                    ids = np.asarray(ids)
+                    assert not np.isin(ids[ids >= 0], banned).any()
+        except Exception as e:
+            errors.append(e)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for i in range(12):
+            ix.index_batch(corpus.batch(i, 16))
+            if i % 2:
+                ids = [i * 16 - 3, i * 16 - 7]
+                ix.delete(ids)
+                acked.extend(ids)
+    finally:
+        stop.set()
+        t.join(timeout=60)
+    assert not t.is_alive() and not errors, errors
+    ix.close()
+    final = ix.finalize()
+    assert final.n_docs == 12 * 16 - len(acked)
+    assert not np.isin(np.array(acked), final.doc_ids).any()

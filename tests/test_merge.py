@@ -90,6 +90,37 @@ def test_streaming_merge_bit_identical(seed, n_segs):
     assert_bit_identical(merge_segments(segs), merge_segments_sorted(segs))
 
 
+def tombstoned_seg_set(seed, n_segs):
+    """A random segment set with random tombstones applied (possibly all
+    or none of a segment's docs)."""
+    rng = np.random.default_rng(seed + 7)
+    segs = []
+    for s in random_seg_set(seed, n_segs):
+        if s.n_docs and rng.random() < 0.75:
+            n_del = int(rng.integers(0, s.n_docs + 1))
+            if n_del:
+                s = s.with_deletes(rng.choice(s.doc_ids, size=n_del,
+                                              replace=False))
+        segs.append(s)
+    return segs
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 100000), st.integers(1, 6))
+def test_merge_compacts_tombstones_bit_identical(seed, n_segs):
+    """The tentpole parity oracle: the O(P) scatter with the live mask
+    folded into its index math must equal the naive fold (boolean-filter
+    every input via drop_deleted, then the lexsort merge) bit for bit —
+    including emptied segments, emptied terms, and 1-way merges."""
+    segs = tombstoned_seg_set(seed, n_segs)
+    m = merge_segments(list(segs))
+    assert_bit_identical(m, merge_segments_sorted(list(segs)))
+    assert not m.has_deletes  # merge outputs never carry tombstones
+    dead = [s.doc_ids[s.deletes] for s in segs if s.has_deletes]
+    if dead:
+        assert not np.isin(np.concatenate(dead), m.doc_ids).any()
+
+
 def test_merge_all_one_term():
     rng = np.random.default_rng(5)
     segs = [make_segment(rng, 100 * i, n_docs=6, one_term=True)

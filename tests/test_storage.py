@@ -496,6 +496,184 @@ def test_measured_isolation_beats_shared_media(tmp_path):
     assert iso["bytes_read_measured"] == sh["bytes_read_measured"] > 0
 
 
+# ---------------------------------------------------------------------------
+# document lifecycle: .liv delete generations + sync barrier
+# ---------------------------------------------------------------------------
+
+def test_liveness_roundtrip_and_validation():
+    rng = np.random.default_rng(20)
+    for n in (0, 1, 7, 8, 9, 200):
+        mask = rng.random(n) < 0.3
+        data = codec_mod.encode_liveness(mask)
+        got = codec_mod.decode_liveness(data, n)
+        assert got.dtype == bool and (got == mask).all()
+    data = codec_mod.encode_liveness(np.array([True, False, True]))
+    with pytest.raises(CorruptSegment, match="covers"):
+        codec_mod.decode_liveness(data, 4)   # wrong segment
+    buf = bytearray(data)
+    buf[len(buf) // 2] ^= 0x10
+    with pytest.raises(CorruptSegment):
+        codec_mod.decode_liveness(bytes(buf), 3)
+    with pytest.raises(CorruptSegment):
+        codec_mod.decode_liveness(data[:-6], 3)
+
+
+def test_directory_sync_barrier(directory):
+    directory.write_file("a", b"xx")
+    directory.write_file("b", b"yyy")
+    directory.sync(["a", "b"])           # no-op on RAM, fsync batch on FS
+    assert directory.syncs == 2
+    assert directory.sync_wall_s >= 0.0
+    with pytest.raises(FileNotFoundError):
+        directory.sync(["nope"])
+    with pytest.raises(ValueError):
+        directory.sync(["a/b"])
+
+
+def test_throttled_sync_charges_latency_only():
+    prof = MediaProfile("toy", read_bw=100.0, write_bw=100.0,
+                        write_latency_s=0.25)
+    th = DeviceThrottle(prof)
+    d = ThrottledDirectory(RAMDirectory(), th)
+    d.write_file("f", b"x" * 100)
+    before = th.busy_write_s
+    d.sync(["f"])
+    # one write-latency round trip, no bandwidth term
+    assert th.busy_write_s == pytest.approx(before + 0.25)
+    assert d.syncs == 1 and d.inner.syncs == 1
+
+
+def test_commit_writes_and_supersedes_liv_generations(directory):
+    """A growing bitmap rolls .liv generations forward WITHOUT rewriting
+    the segment; each commit references exactly one generation and
+    deletes the stale one; recovery re-attaches the committed bitmap."""
+    rng = np.random.default_rng(21)
+    store, _ = SegmentStore.open(directory)
+    seg = make_segment(rng, 0, n_docs=8)
+    store.write(seg)
+    store.commit([seg])
+    core_files = {f for f in directory.list_files()
+                  if not f.startswith("segments")}
+
+    d1 = seg.with_deletes(seg.doc_ids[:2])
+    store.relabel(seg, d1)
+    store.commit([d1])
+    livs = [f for f in directory.list_files() if f.endswith(".liv")]
+    assert livs == [f"{store._names[seg.seg_id]}_1.liv"]
+    assert {f for f in directory.list_files()
+            if not f.startswith("segments")} == core_files | set(livs)
+
+    d2 = d1.with_deletes(seg.doc_ids[4:5])
+    store.relabel(d1, d2)
+    store.commit([d2])
+    livs = [f for f in directory.list_files() if f.endswith(".liv")]
+    assert livs == [f"{store._names[seg.seg_id]}_2.liv"]  # gen 1 deleted
+
+    # an UNCHANGED bitmap does not roll a new generation
+    store.commit([d2])
+    assert [f for f in directory.list_files()
+            if f.endswith(".liv")] == livs
+
+    gen, segs = open_latest(directory)
+    assert len(segs) == 1 and segs[0].n_deleted == 3
+    assert (segs[0].live_doc_ids() == seg.doc_ids[[2, 3, 5, 6, 7]]).all()
+    # the recovered store registers the liv generation and keeps rolling
+    store2, rec = SegmentStore.open(directory)
+    assert rec[0].n_deleted == 3
+    d3 = rec[0].with_deletes(seg.doc_ids[6:7])
+    store2.relabel(rec[0], d3)
+    store2.commit([d3])
+    livs = [f for f in directory.list_files() if f.endswith(".liv")]
+    assert livs == [f"{store2._names[rec[0].seg_id]}_3.liv"]
+
+
+def test_kill9_between_liv_write_and_commit_recovers_previous(directory):
+    """The torn-commit matrix extended to delete generations: a crash
+    after writing a newer .liv (or a manifest referencing a torn/missing
+    one) must recover the PREVIOUS delete generation, every committed doc
+    searchable exactly once."""
+    rng = np.random.default_rng(22)
+    store, _ = SegmentStore.open(directory)
+    seg = make_segment(rng, 0, n_docs=8)
+    store.write(seg)
+    d1 = seg.with_deletes(seg.doc_ids[:2])
+    store.relabel(seg, d1)
+    gen1 = store.commit([d1])
+    base = store._names[seg.seg_id]
+
+    # crash flavor 1: newer .liv written, manifest never appeared
+    directory.write_file(f"{base}_2.liv",
+                         codec_mod.encode_liveness(
+                             np.isin(seg.doc_ids, seg.doc_ids[:5])))
+    gen, segs = open_latest(directory)
+    assert gen == gen1 and segs[0].n_deleted == 2  # previous generation
+    assert (np.sort(segs[0].doc_ids) == seg.doc_ids).all()
+
+    # crash flavor 2: manifest references a TORN .liv
+    data = directory.read_file(f"{base}_2.liv")
+    directory.write_file(f"{base}_2.liv", data[:len(data) // 2])
+    write_commit(directory, gen1 + 1, [base],
+                 liv={base: f"{base}_2.liv"})
+    gen, segs = open_latest(directory)
+    assert gen == gen1 and segs[0].n_deleted == 2
+
+    # crash flavor 3: manifest landed but its .liv evaporated (lost write)
+    directory.write_file(f"{base}_2.liv", data)   # valid again, briefly
+    write_commit(directory, gen1 + 2, [base],
+                 liv={base: f"{base}_2.liv"})
+    directory.delete_file(f"{base}_2.liv")
+    gen, segs = open_latest(directory)
+    assert gen == gen1 and segs[0].n_deleted == 2
+    live = segs[0].live_doc_ids()
+    assert live.size == 6 and np.unique(live).size == 6  # exactly once
+
+    # recovery cleanup drops the orphan manifests; committed state intact
+    store2, rec = SegmentStore.open(directory)
+    assert store2.gen == gen1 and rec[0].n_deleted == 2
+    assert list_commits(directory) == [gen1]
+
+
+def test_kill9_mid_lifecycle_full_stack(tmp_path):
+    """Index + delete + commit, then more deletes + a .liv written but
+    torn before its manifest: a fresh indexer recovers the committed
+    lifecycle state (deletes included) and resumes doc-id allocation."""
+    cfg = SMOKE_CFG
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    path = tmp_path / "idx"
+    ix = DistributedIndexer(cfg=cfg, target_dir=FSDirectory(path))
+    for i in range(3):
+        ix.index_batch(corpus.batch(i, 16))
+    ix.delete([1, 2, 3])
+    gen = ix.commit()
+    committed = set(FSDirectory(path).list_files())
+
+    ix.delete([10, 11])                   # acked, never committed
+    ix.refresh()
+    # "kill -9" before the next commit, with the newer .liv torn on disk
+    d = FSDirectory(path)
+    for f in sorted(set(d.list_files()) - committed):
+        d.write_file(f, d.read_file(f)[:8])
+
+    gen2, searcher = open_searcher(FSDirectory(path))
+    assert gen2 == gen
+    assert searcher.n_docs == 45          # 48 committed docs - 3 deletes
+    q = np.unique(corpus.batch(0, 16))[1:4].astype(np.int32)
+    _, ids = searcher.search(q, 45)
+    ids = np.asarray(ids)
+    assert not np.isin(ids[ids >= 0], [1, 2, 3]).any()
+    # the torn (never-committed) deletes of 10/11 must NOT have applied:
+    # k covers every live doc, so both must come back
+    assert np.isin(ids[ids >= 0], [10, 11]).sum() == 2
+
+    ix2 = DistributedIndexer(cfg=cfg, target_dir=FSDirectory(path))
+    assert ix2._next_doc == 48
+    assert ix2.refresh(flush=False).n_docs == 45
+    ix2.delete([10, 11])                  # re-issue the lost deletes
+    final = ix2.finalize()
+    assert final.n_docs == 43 and not final.has_deletes
+    assert not np.isin([1, 2, 3, 10, 11], final.doc_ids).any()
+
+
 def test_calibrate_accepts_measured_runs():
     """calibrate(measured=...) folds this repo's own ThrottledDirectory
     measurements into the fit next to the paper's Table 1."""
