@@ -36,5 +36,6 @@ scores, doc_ids, stats = bm25_topk(index, query, k=5)
 print(f"query {list(np.asarray(query))} -> top docs "
       f"{list(np.asarray(doc_ids))} scores "
       f"{[round(float(s), 3) for s in np.asarray(scores)]}")
-print(f"block-max pruning scored {int(stats['blocks_scored'])}"
-      f"/{int(stats['blocks_total'])} blocks")
+print(f"block-max pruning: {int(stats['blocks_total'])} candidate blocks, "
+      f"{int(stats['blocks_survived'])} survived the MaxScore test, "
+      f"{int(stats['blocks_scored'])} scored (probe + bucket padding)")

@@ -465,6 +465,20 @@ class DistributedIndexer:
             "index_bytes_raw": merge["live_bytes_raw"],
             "index_bytes_encoded": 0,
         }
+        # serving-side pruning counters (core/query.py PruneStats): what
+        # the latest refreshed searcher actually decoded + scored vs the
+        # candidate blocks an exhaustive pass would have touched
+        ps = getattr(self.searcher, "prune_stats", None)
+        if ps is None:
+            from repro.core.query import PruneStats
+            ps = PruneStats()
+        report.update({
+            "blocks_candidate": ps.blocks_candidate,
+            "blocks_survived": ps.blocks_survived,
+            "blocks_scored": ps.blocks_scored,
+            "segments_skipped": ps.segments_skipped,
+            "prune_skip_rate": ps.skip_rate,
+        })
         if self.store is not None:
             report.update(self._measured_report())
         return report

@@ -313,9 +313,16 @@ class MergeDriver:
     # run_merge charges its measured store reads/writes against it so
     # background merges never monopolize the target device
     io_limiter: object = None
+    # doc-id -> segment routing (see apply_deletes): per-holder doc
+    # ranges, rebuilt lazily after structural tier changes so a delete
+    # touches O(affected segments), not O(live segments)
+    route_rebuilds: int = 0
+    route_hits: int = 0         # segments whose bitmap a delete swapped
+    route_misses: int = 0       # segments skipped by the range probe
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
     _in_flight: list = field(default_factory=list, repr=False)
+    _routes: list = field(default=None, repr=False)
 
     def add_flush(self, seg: Segment):
         """Account a freshly flushed segment. With a scheduler attached
@@ -331,6 +338,7 @@ class MergeDriver:
             self.bytes_written += sz
             self.flushed_bytes += sz
             self.tiers.setdefault(0, []).append(seg)
+            self._routes = None  # a new holder joined the live set
         sched = self.scheduler
         if sched is not None:
             try:
@@ -346,33 +354,71 @@ class MergeDriver:
     def _first_doc(seg: Segment) -> int:
         return int(seg.doc_ids[0]) if seg.n_docs else -1
 
+    def _rebuild_routes(self):
+        """Doc-id -> segment routing table (callers hold ``_lock``): one
+        ``(lo, hi, holder_list, index)`` row per live doc-carrying
+        segment, sorted by ``lo``. Disjoint doc ranges make the interval
+        set non-overlapping, so membership is one ``searchsorted`` per
+        delete batch. Rebuilt lazily: any structural tier change (flush,
+        claim, install, restore) just drops the table; delete-only
+        workloads between structural changes reuse it, and a
+        ``with_deletes`` swap keeps its row valid (same range, same
+        position)."""
+        routes = []
+        holders = list(self.tiers.values()) \
+            + [w.batch for w in self._in_flight]
+        for segs in holders:
+            for i, s in enumerate(segs):
+                if s.n_docs:
+                    routes.append((int(s.doc_ids[0]), int(s.doc_ids[-1]),
+                                   segs, i))
+        routes.sort(key=lambda r: r[0])
+        self._routes = routes
+        self.route_rebuilds += 1
+
     def apply_deletes(self, doc_ids) -> int:
         """Route tombstones to every live holder of the targeted docs.
 
-        Tier-resident segments are swapped for their ``with_deletes``
-        copies (shared postings, fresh seg_id — reader caches invalidate
-        by key; the store, when attached, re-keys the on-disk name).
-        In-flight merge inputs are swapped too, because snapshots include
-        them — AND the ids are recorded on the claim: the merge worker may
-        already have read the old objects, so ``run_merge`` re-applies the
-        deferred ids to its output at install. Either way no delete is
-        lost mid-merge, and any snapshot taken after this call returns
-        excludes the docs. Returns how many segments changed."""
-        ids = np.asarray(doc_ids, np.int64).reshape(-1)
+        The doc-id -> segment routing table narrows the walk to segments
+        whose doc range intersects the batch (one sorted-interval probe
+        per segment range; disjoint doc spaces make ranges disjoint too),
+        so a delete costs O(affected segments) ``with_deletes`` scans
+        instead of O(live segments) — unaffected segments are never
+        touched and keep their ``seg_id`` (no spurious reader-cache
+        invalidation).
+
+        Affected tier-resident segments are swapped for their
+        ``with_deletes`` copies (shared postings, fresh seg_id — reader
+        caches invalidate by key; the store, when attached, re-keys the
+        on-disk name). In-flight merge inputs are swapped too, because
+        snapshots include them — AND the ids are recorded on the claim:
+        the merge worker may already have read the old objects, so
+        ``run_merge`` re-applies the deferred ids to its output at
+        install. Either way no delete is lost mid-merge, and any snapshot
+        taken after this call returns excludes the docs. Returns how many
+        segments changed."""
+        ids = np.unique(np.asarray(doc_ids, np.int64).reshape(-1))
         if ids.size == 0:
             return 0
         changed = 0
         with self._lock:
-            holders = list(self.tiers.values()) \
-                + [w.batch for w in self._in_flight]
-            for segs in holders:
-                for i, s in enumerate(segs):
-                    ns = s.with_deletes(ids)
-                    if ns is not s:
-                        segs[i] = ns
-                        changed += 1
-                        if self.store is not None:
-                            self.store.relabel(s, ns)
+            if self._routes is None:
+                self._rebuild_routes()
+            for lo, hi, segs, i in self._routes:
+                # any target inside [lo, hi]? ids is sorted: probe the
+                # first id >= lo and check it against hi
+                p = int(np.searchsorted(ids, lo))
+                if p >= ids.size or ids[p] > hi:
+                    self.route_misses += 1
+                    continue
+                s = segs[i]
+                ns = s.with_deletes(ids)
+                if ns is not s:
+                    self.route_hits += 1
+                    segs[i] = ns
+                    changed += 1
+                    if self.store is not None:
+                        self.store.relabel(s, ns)
             for w in self._in_flight:
                 w.deferred.append(ids)
         return changed
@@ -398,6 +444,12 @@ class MergeDriver:
         segment is ever stranded behind a higher-tier barrier), while a
         window spanning an *in-flight* batch is simply not claimable yet.
 
+        Delete-aware tie-break: at equal byte size, the window with the
+        highest tombstone ratio is claimed first — merging it reclaims
+        more dead bytes for the same IO (the update-heavy regime's
+        compaction dividend), and only then do ties fall to the lower
+        tier.
+
         ``total_bytes`` is memoized on the (immutable) segments, so the
         selection under the lock is O(segments^2), not O(postings). The
         claimed batch moves from its tier(s) to ``_in_flight`` so it
@@ -407,7 +459,8 @@ class MergeDriver:
             # exactly "some docs inside the span"
             inflight_firsts = [self._first_doc(s) for w in self._in_flight
                                for s in w.batch if s.n_docs]
-            best = None  # (batch_bytes, tier, seg_id set of the batch)
+            # best key: (batch_bytes, -tombstone_ratio, out_tier)
+            best = None  # (key, _, tier, seg_id set of the batch)
             for tier, segs in self.tiers.items():
                 if len(segs) < self.fanout:
                     continue
@@ -429,14 +482,18 @@ class MergeDriver:
                                   and lo < self._first_doc(s) <= hi]
                     batch = take + absorb
                     size = sum(s.total_bytes() for s in batch)
+                    n_doc = sum(s.n_docs for s in batch)
+                    tomb = (sum(s.n_deleted for s in batch) / n_doc
+                            if n_doc else 0.0)
                     out_tier = max([tier] + [self._seg_tier(s)
                                              for s in absorb])
-                    if best is None or (size, out_tier) < (best[0], best[1]):
-                        best = (size, out_tier,
+                    key = (size, -tomb, out_tier)
+                    if best is None or key < best[0]:
+                        best = (key, None, out_tier,
                                 {s.seg_id for s in batch})
             if best is None:
                 return None
-            _, tier, taken = best
+            tier, taken = best[2], best[3]
             batch = []
             for t2 in self.tiers:
                 keep = []
@@ -446,6 +503,7 @@ class MergeDriver:
             batch.sort(key=self._first_doc)
             work = _MergeWork(tier, batch)
             self._in_flight.append(work)
+            self._routes = None  # tier lists were rebuilt
             return work
 
     def _seg_tier(self, seg: Segment) -> int:
@@ -493,6 +551,7 @@ class MergeDriver:
             self.n_merges += 1
             self.merge_wall_s += dt
             self.tiers.setdefault(work.tier + 1, []).append(merged)
+            self._routes = None  # inputs left, the output joined
         if self.store is not None:
             # inputs have now left the live set permanently: their files
             # become delete-eligible at the next commit (never before —
@@ -506,6 +565,7 @@ class MergeDriver:
         with self._lock:
             self._in_flight.remove(work)
             self.tiers.setdefault(work.tier, [])[:0] = work.batch
+            self._routes = None
 
     def _drain_sync(self):
         while (work := self.pop_merge_work()) is not None:
@@ -552,11 +612,13 @@ class MergeDriver:
                     # still carrying tombstones takes one more (1-way)
                     # merge through the loop below to fold them away
                     self.tiers = {0: remaining}
+                    self._routes = None
                     return remaining[0]
                 batch = remaining[:self.fanout]
                 top = max(self.tiers)
                 keep = remaining[self.fanout:]
                 self.tiers = {0: keep} if keep else {}
+                self._routes = None
                 work = _MergeWork(top, batch)
                 self._in_flight.append(work)
             self.run_merge(work)

@@ -6,7 +6,7 @@ Layout: per term, postings padded to 128-lane blocks (Lucene 8's block-max
 granularity); per block: first/last doc id, max tf, packed doc deltas and
 tfs (lane-blocked PFor). Query evaluation is two-phase, TPU-idiomatic BMW:
 
-  phase 1  score the highest-upper-bound half of the candidate blocks,
+  phase 1  score a small set of highest-upper-bound candidate blocks,
            take the running k-th best score as a (valid) threshold theta;
   phase 2  a block of term t is skipped iff
            UB(block) + sum_{t' != t} UB_max(t') <= theta  (MaxScore test —
@@ -15,13 +15,34 @@ tfs (lane-blocked PFor). Query evaluation is two-phase, TPU-idiomatic BMW:
   finally  score surviving blocks exactly; the result equals exhaustive
            evaluation (tests/test_query.py asserts this).
 
+Two implementations share that contract:
+
+``bm25_topk_dense``  the original fully-jittable evaluation: every
+    candidate lane is computed and the pruning decision only *masks*
+    eliminated blocks, so FLOPs and memory traffic stay O(candidate
+    blocks) no matter how many blocks the bounds eliminate. Retained as
+    the parity oracle (and as the exhaustive path via ``prune=False``).
+
+``bm25_topk``        the production pruned path: a cheap jittable
+    *metadata* pass (``prune_candidates`` — per-block upper bounds, no
+    postings decode) feeds a host-side MaxScore test, the surviving block
+    ids are **compacted** (gathered into a dense array, padded to a
+    power-of-two bucket so compiled shapes stay bounded), and only the
+    compacted blocks are decoded + scored (``score_survivors``). Cost is
+    proportional to *surviving* blocks — the first serving path that is
+    actually cheaper than exhaustive on the hardware we run (CPU included;
+    on TPU the compacted scorer dispatches to the Pallas skip kernel).
+
 Index *construction* lives in ``core/searcher.py`` (``build_block_index``
 plus the per-segment ``SegmentReader`` / multi-segment ``IndexSearcher``
-machinery); this module only holds the device-resident index layout and
-the scoring math. Scoring accepts optional ``idf_q`` / ``doc_norm``
-overrides so a multi-segment searcher can evaluate each segment under
-*global* collection statistics — which is what makes per-segment top-k
-merge bit-equal to searching the force-merged index.
+machinery); this module only holds the device-resident index layout, the
+scoring math and the pruning protocol. Scoring accepts optional ``idf_q``
+/ ``doc_norm`` overrides so a multi-segment searcher can evaluate each
+segment under *global* collection statistics — which is what makes
+per-segment top-k merge bit-equal to searching the force-merged index —
+and ``theta0`` seeds the threshold from OUTSIDE the segment, so a
+searcher can thread the running global k-th score across segments
+(cross-segment threshold sharing: later segments prune harder).
 """
 from __future__ import annotations
 
@@ -29,11 +50,20 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.bm25_blockmax.ops import bm25_blocks
 from repro.kernels.postings_pack import ops as pack_ops
 
 BLOCK = 128
+# phase-1 budget: blocks scored to establish theta. One 128-lane block
+# already yields >= k candidate docs for serving k's, so a small constant
+# suffices — and it keeps phase-1 cost O(1) instead of O(candidates)/2.
+PHASE1_BLOCKS = 8
+# survivor buckets: compacted arrays are padded to the next power of two,
+# never below this floor, so each (k, bucket) pair compiles at most once
+# and the number of distinct buckets is log2-bounded.
+MIN_BUCKET = 8
 
 
 @dataclass
@@ -54,10 +84,67 @@ class BlockMaxIndex:
     max_blocks_per_term: int
     k1: float = 0.9
     b: float = 0.4
+    # per-block competitive impact metadata (Lucene's impacts shape): the
+    # shortest doc length in each block. Together with ``max_tf`` it
+    # majorizes every (tf, norm) pair the block holds, so upper bounds
+    # use the block's best REACHABLE norm instead of the global dl=0
+    # floor — dramatically tighter on length-varying corpora. None on
+    # indexes built before this field existed (bounds fall back to dl=0).
+    min_dl: jnp.ndarray = None    # (NB,)
+    avgdl: float = 1.0            # segment-local mean live doc length
 
     def packed_bytes(self) -> float:
         return float(pack_ops.packed_bytes(self.bw_docs)
                      + pack_ops.packed_bytes(self.bw_tf))
+
+
+@dataclass
+class PruneStats:
+    """Serving-side pruning counters, accumulated per evaluation batch.
+
+    ``blocks_candidate``  lanes the query *could* touch (the dense path's
+                          cost); ``blocks_survived`` blocks that passed
+                          the MaxScore test; ``blocks_scored`` blocks the
+                          compacted path actually decoded + scored
+                          (phase-1 probes + bucket-padded survivors — the
+                          real FLOP count, padding included).
+    ``segments_skipped``  segments eliminated wholesale because their
+                          best possible score could not beat the shared
+                          theta (cross-segment threshold sharing).
+    """
+
+    queries: int = 0
+    batches: int = 0
+    segments_visited: int = 0
+    segments_skipped: int = 0
+    blocks_candidate: int = 0
+    blocks_survived: int = 0
+    blocks_scored: int = 0
+
+    def add(self, other: "PruneStats") -> None:
+        for f in ("queries", "batches", "segments_visited",
+                  "segments_skipped", "blocks_candidate", "blocks_survived",
+                  "blocks_scored"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+    def snapshot(self) -> "PruneStats":
+        return PruneStats(**{f: getattr(self, f) for f in
+                             self.__dataclass_fields__})
+
+    def delta(self, prev: "PruneStats") -> "PruneStats":
+        return PruneStats(**{f: getattr(self, f) - getattr(prev, f)
+                             for f in self.__dataclass_fields__})
+
+    @property
+    def skip_rate(self) -> float:
+        """Fraction of candidate blocks NOT scored by the compacted path.
+        NEGATIVE for tiny candidate sets: ``blocks_scored`` includes the
+        phase-1 probe and the bucket-padding floor, a fixed overhead that
+        can exceed a short query's few candidate blocks — an honest
+        signal that pruning only pays once candidates outnumber it."""
+        if self.blocks_candidate == 0:
+            return 0.0
+        return 1.0 - self.blocks_scored / self.blocks_candidate
 
 
 def _gather_term_blocks(index: BlockMaxIndex, q_terms, max_blocks=None):
@@ -82,7 +169,13 @@ def _gather_term_blocks(index: BlockMaxIndex, q_terms, max_blocks=None):
 
 def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block,
                   doc_norm=None):
-    """Exact BM25 partial scores for the selected blocks -> (D,) scores."""
+    """Exact BM25 partial scores for the selected blocks -> (D,) scores.
+
+    ``bidx``/``active``/``idf_per_block`` may be the dense (Q, MB)
+    candidate grid or a compacted (S,) survivor array — the scatter is
+    over the flattened block list either way, and compaction preserves
+    the flattened order, so the per-doc float accumulation order (and
+    hence the scores, bit for bit) is identical on both paths."""
     if doc_norm is None:
         doc_norm = index.doc_norm
     flat = bidx.reshape(-1)
@@ -98,10 +191,27 @@ def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block,
         s.reshape(-1), mode="promise_in_bounds")
 
 
-def block_upper_bounds(index: BlockMaxIndex, bidx, in_term, idf_q):
-    """Safe per-block score upper bound: tf monotone, dl -> minimal norm."""
+def block_upper_bounds(index: BlockMaxIndex, bidx, in_term, idf_q,
+                       avgdl=None):
+    """Safe per-block score upper bound from the block's competitive
+    impact pair: tf is monotone (-> block max tf) and the norm is
+    monotone in doc length (-> the block's SHORTEST doc under ``avgdl``).
+    For every doc d in the block: tf_d <= max_tf and dl_d >= min_dl, so
+    score(d) <= idf*(k1+1)*max_tf / (max_tf + k1*(1-b+b*min_dl/avgdl)).
+    Deleted docs may inflate max_tf / deflate min_dl — the bound only
+    gets looser, never unsafe.
+
+    SAFETY: the ``min_dl`` tightening is only valid when ``avgdl`` is the
+    SAME mean length the evaluation's ``doc_norm`` was built from — a
+    mismatched pair can under-bound real scores. Callers must therefore
+    pass ``avgdl`` explicitly (the searcher passes its collection-global
+    value; single-index paths pass ``index.avgdl`` alongside the baked
+    ``index.doc_norm``); with ``avgdl=None`` the bound falls back to the
+    stats-independent dl=0 floor, which is safe under ANY doc_norm."""
     mt = index.max_tf[bidx]
     min_norm = index.k1 * (1.0 - index.b)
+    if index.min_dl is not None and avgdl is not None:
+        min_norm = min_norm + index.k1 * index.b * index.min_dl[bidx] / avgdl
     ub = idf_q[:, None] * (index.k1 + 1.0) * mt / (mt + min_norm)
     return jnp.where(in_term & (mt > 0), ub, 0.0)
 
@@ -117,15 +227,37 @@ def _mask_live(scores, live):
     return jnp.where(live, scores, -1.0)
 
 
-def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
-              prune: bool = True, idf_q=None, doc_norm=None,
-              max_blocks=None, live=None):
-    """Returns (scores (k,), doc_ids (k,), stats dict).
+def _resolve_idf(index: BlockMaxIndex, q_terms, idf_q):
+    """Default/validate the per-query-term idf vector (jit-compatible:
+    the None branch is static)."""
+    rows, found, _, _ = _gather_term_blocks(index, q_terms, 1)
+    if idf_q is None:
+        idf_q = index.idf[rows]
+    return jnp.where(found, idf_q, 0.0)
+
+
+# --------------------------------------------------------------------------
+# dense evaluation (parity oracle + exhaustive path)
+# --------------------------------------------------------------------------
+
+def bm25_topk_dense(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
+                    prune: bool = True, idf_q=None, doc_norm=None,
+                    max_blocks=None, live=None, avgdl=None):
+    """Fully-jittable dense evaluation — every candidate lane is computed.
+
+    With ``prune=True`` this runs the original two-phase MaxScore test but
+    only *masks* eliminated blocks (the pruning parity oracle: its top-k
+    must equal the compacted path's bit for bit). With ``prune=False`` it
+    is the exhaustive path. Either way serving cost is O(candidate
+    blocks); the production pruned path is ``bm25_topk``.
 
     ``idf_q`` (Q,) and ``doc_norm`` (D,) default to the segment-local
     statistics baked into the index; a multi-segment searcher passes
-    collection-global values instead (pruning stays safe: the upper
-    bound only assumes b/k1, not which stats produced idf/doc_norm).
+    collection-global values instead. Pruning stays safe under overridden
+    stats: the upper bounds only tighten with the block impact metadata
+    when ``avgdl`` — the mean length ``doc_norm`` was built from — is
+    supplied; with doc_norm overridden and no matching avgdl they fall
+    back to the stats-independent dl=0 floor (see ``block_upper_bounds``).
     ``max_blocks`` narrows the per-term candidate window (see
     ``_gather_term_blocks``) — exact iff it covers every query term.
     ``live`` (D,) masks tombstoned docs out of BOTH phases: the phase-1
@@ -149,7 +281,9 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
         return vals, ids, {"blocks_scored": in_term.sum(),
                            "blocks_total": in_term.sum()}
 
-    ub = block_upper_bounds(index, bidx, in_term, idf_q)  # (Q, MB)
+    if avgdl is None and doc_norm is None:
+        avgdl = index.avgdl  # baked stats: the self-consistent pair
+    ub = block_upper_bounds(index, bidx, in_term, idf_q, avgdl)  # (Q, MB)
     # phase 1: score the top-UB half of candidate blocks
     n_cand = ub.size
     n_phase1 = max(n_cand // 2, min(n_cand, 8))
@@ -174,6 +308,239 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
 
 def bm25_exhaustive(index: BlockMaxIndex, q_terms, k: int = 10,
                     idf_q=None, doc_norm=None, live=None):
-    return bm25_topk(index, q_terms, k, prune=False,
-                     idf_q=idf_q, doc_norm=doc_norm, live=live)
+    return bm25_topk_dense(index, q_terms, k, prune=False,
+                           idf_q=idf_q, doc_norm=doc_norm, live=live)
 
+
+# --------------------------------------------------------------------------
+# compacted pruned evaluation (the production path)
+# --------------------------------------------------------------------------
+
+def prune_candidates(index: BlockMaxIndex, q_terms, idf_q=None,
+                     max_blocks=None, avgdl=None):
+    """Jittable METADATA pass: per-candidate-block upper bounds, without
+    touching (let alone decoding) any postings bytes. ``avgdl`` (traced
+    scalar) supplies the mean doc length matching the evaluation's
+    doc_norm — required for the tight impact bounds; None falls back to
+    the safe dl=0 floor (see ``block_upper_bounds``). Returns
+    ``(ub, in_term, bidx, idf_pb)``, each shaped (Q, MB) — the inputs of
+    the host-side MaxScore test and survivor compaction."""
+    q_terms = q_terms.astype(jnp.int32)
+    rows, found, bidx, in_term = _gather_term_blocks(index, q_terms,
+                                                     max_blocks)
+    if idf_q is None:
+        idf_q = index.idf[rows]
+    idf_q = jnp.where(found, idf_q, 0.0)
+    ub = block_upper_bounds(index, bidx, in_term, idf_q, avgdl)
+    idf_pb = jnp.broadcast_to(idf_q[:, None], bidx.shape)
+    return ub, in_term, bidx, idf_pb
+
+
+def score_survivors(index: BlockMaxIndex, cb_ids, cb_idf, cb_act, cb_row,
+                    n_rows: int, k: int, doc_norm=None, live=None):
+    """Jittable compacted scorer over a batch-FLAT survivor list: entry j
+    is block ``cb_ids[j]`` evaluated on behalf of query row ``cb_row[j]``
+    (inactive padding entries contribute nothing). Decode + score exactly
+    those blocks, scatter into the (n_rows, D) score matrix via
+    row-offset indices, mask tombstones, per-row top-k.
+
+    Flattening across the batch (instead of one bucket-padded array per
+    query) means the padded size tracks the batch's TOTAL survivor count
+    — a batch mixing heavy and light queries pays for what it prunes,
+    not for its widest row. FLOPs are proportional to the bucket size,
+    never the candidate count."""
+    if doc_norm is None:
+        doc_norm = index.doc_norm
+    docids, tf, num = bm25_blocks(
+        index.packed_docs[cb_ids], index.bw_docs[cb_ids],
+        index.first_doc[cb_ids], index.packed_tf[cb_ids],
+        index.bw_tf[cb_ids], cb_idf, cb_act.astype(jnp.int32), k1=index.k1)
+    denom = tf + doc_norm[docids]
+    s = jnp.where(tf > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+    # row-major survivor order keeps each row's scatter contributions in
+    # candidate order — per-doc float accumulation matches the dense path
+    fidx = cb_row.astype(jnp.int32)[:, None] * index.n_docs + docids
+    scores = jnp.zeros((n_rows * index.n_docs,), jnp.float32
+                       ).at[fidx.reshape(-1)].add(s.reshape(-1),
+                                                  mode="promise_in_bounds")
+    scores = scores.reshape(n_rows, index.n_docs)
+    if live is not None:
+        scores = jnp.where(live[None, :], scores, -1.0)
+    return jax.lax.top_k(scores, k)
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def survivor_bucket(n_surv: int) -> int:
+    """Bucket (compiled shape) for a survivor count: next power of two,
+    floored at ``MIN_BUCKET`` — so the compacted scorer compiles at most
+    log2(max candidates) distinct shapes per (k, segment)."""
+    return max(MIN_BUCKET, _pow2ceil(max(n_surv, 1)))
+
+
+def compact_survivors(surv: np.ndarray, bidx: np.ndarray, idf_pb: np.ndarray,
+                      bucket: int = None):
+    """Host-side survivor compaction: gather the flattened positions of
+    surviving candidate blocks — across the WHOLE batch — into one dense,
+    bucket-padded flat array with per-entry query-row attribution.
+
+    ``surv``/``bidx``/``idf_pb`` are (B, N) host arrays over the flattened
+    candidate grid. ``np.flatnonzero`` over the row-major matrix yields
+    entries sorted by (row, grid position), which keeps each row's
+    compacted scatter contributions in the dense path's order (bit-
+    identity), and sizes the bucket by the batch's total survivor count.
+    Returns ``(cb_ids, cb_idf, cb_act, cb_row)``, each shaped (bucket,)."""
+    B, N = surv.shape
+    pos = np.flatnonzero(surv)
+    if bucket is None:
+        bucket = survivor_bucket(pos.size)
+    assert pos.size <= bucket, "survivors must never be truncated"
+    cb_ids = np.zeros(bucket, np.int32)
+    cb_idf = np.zeros(bucket, np.float32)
+    cb_act = np.zeros(bucket, bool)
+    cb_row = np.zeros(bucket, np.int32)
+    cb_ids[:pos.size] = bidx.reshape(-1)[pos]
+    cb_idf[:pos.size] = idf_pb.reshape(-1)[pos]
+    cb_act[:pos.size] = True
+    cb_row[:pos.size] = pos // N
+    return cb_ids, cb_idf, cb_act, cb_row
+
+
+def pruned_eval(meta, scorer_for, q2d, idf2d, k: int, theta0=None,
+                n_phase1: int = PHASE1_BLOCKS):
+    """Host-orchestrated pruned evaluation over a (B, Q) query batch.
+
+    ``meta(q2d, idf2d)``       -> (ub, in_term, bidx, idf_pb), (B, Q, MB)
+                                  device arrays (``prune_candidates``,
+                                  possibly jitted/vmapped by the caller).
+    ``scorer_for(n_blocks)``   -> fn(cb_ids, cb_idf, cb_act, cb_row)
+                                  evaluating a flat (n_blocks,) compacted
+                                  survivor list (``score_survivors``) to
+                                  (vals (B, k), ids (B, k)). The caller
+                                  owns jit caching per bucket shape.
+    ``theta0``                 (B,) or scalar: an externally-known lower
+                                  bound on each query's final k-th score
+                                  (the searcher passes the running global
+                                  bound — cross-segment theta sharing).
+
+    Protocol: metadata pass -> host-compact the ``n_phase1`` highest-UB
+    blocks per query and score them for theta (skipped entirely when
+    every query already holds a positive external bound) -> host MaxScore
+    test at max(theta_phase1, theta0) -> host-compact the survivors
+    (power-of-two bucket over the batch TOTAL) -> compacted exact
+    scoring. Exactness: every block holding a doc whose true score beats
+    theta survives the test (the UB majorizes every doc in the block), so
+    the top-k equals dense/exhaustive evaluation.
+    Returns ``(vals, ids, PruneStats)``.
+    """
+    ub_d, in_term_d, bidx_d, idf_pb_d = meta(q2d, idf2d)
+    B = q2d.shape[0]
+    ub = np.asarray(ub_d, np.float64).reshape(B, -1)
+    in_term = np.asarray(in_term_d).reshape(B, -1)
+    bidx = np.asarray(bidx_d).reshape(B, -1)
+    idf_pb = np.asarray(idf_pb_d).reshape(B, -1)
+    n_cand = ub.shape[1]
+    t0 = (np.zeros(B, np.float64) if theta0 is None
+          else np.broadcast_to(np.asarray(theta0, np.float64),
+                               (B,)).astype(np.float64))
+
+    # phase 1: probe the highest-UB blocks for a threshold. The probe set
+    # is compacted too (fixed shape P1), so phase-1 cost is O(P1), not
+    # O(candidates)/2 like the dense oracle's. A caller that already
+    # holds a positive bound for every query (the searcher's shared theta
+    # after the first segment) skips the probe entirely — later segments
+    # pay ONLY for their survivors.
+    probed = 0
+    top = None
+    if not bool(np.all(t0 > 0)):
+        P1 = min(n_phase1, n_cand)
+        ubm = np.where(in_term, ub, -1.0)
+        top = np.argpartition(-ubm, P1 - 1, axis=1)[:, :P1]
+        p1_act = np.take_along_axis(in_term, top, 1)
+        probed = _pow2ceil(B * P1)
+        p1_ids = np.zeros(probed, np.int32)
+        p1_idf = np.zeros(probed, np.float32)
+        p1_actf = np.zeros(probed, bool)
+        p1_row = np.zeros(probed, np.int32)
+        p1_ids[:B * P1] = np.take_along_axis(bidx, top, 1).reshape(-1)
+        p1_idf[:B * P1] = np.take_along_axis(idf_pb, top, 1).reshape(-1)
+        p1_actf[:B * P1] = p1_act.reshape(-1)
+        p1_row[:B * P1] = np.repeat(np.arange(B, dtype=np.int32), P1)
+        vals1, _ = scorer_for(probed)(p1_ids, p1_idf, p1_actf, p1_row)
+        theta = np.maximum(np.asarray(vals1, np.float64)[:, k - 1], t0)
+    else:
+        theta = t0
+
+    # phase 2 (MaxScore test, on host metadata): a block survives iff its
+    # UB plus every other term's best-block UB can still beat theta. The
+    # phase-1 probe blocks are kept unconditionally: the impact bound can
+    # be exactly achieved (the block's best doc IS its (max_tf, min_dl)
+    # pair), so a probed doc at exactly theta must stay scored.
+    ub3 = ub.reshape(B, q2d.shape[1], -1)
+    term_best = ub3.max(axis=2)                            # (B, Q)
+    others = term_best.sum(axis=1, keepdims=True) - term_best
+    surv = in_term & ((ub3 + others[:, :, None]).reshape(B, -1)
+                      > theta[:, None])
+    if top is not None:
+        surv[np.arange(B)[:, None], top] |= p1_act
+    n_surv = int(surv.sum())
+    cb_ids, cb_idf, cb_act, cb_row = compact_survivors(surv, bidx, idf_pb)
+    vals, ids = scorer_for(cb_ids.shape[0])(cb_ids, cb_idf, cb_act, cb_row)
+    # queries/batches stay zero here: this evaluates ONE segment of a
+    # batch; the caller (searcher / bm25_topk) counts the batch once.
+    stats = PruneStats(
+        segments_visited=1,
+        blocks_candidate=int(in_term.sum()),
+        blocks_survived=n_surv,
+        blocks_scored=probed + cb_ids.shape[0])
+    return vals, ids, stats
+
+
+def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
+              prune: bool = True, idf_q=None, doc_norm=None,
+              max_blocks=None, live=None, theta0=None, avgdl=None):
+    """Top-k BM25: ``(scores (k,), doc_ids (k,), stats dict)``.
+
+    ``prune=True`` runs the compacted pruned path (host-orchestrated, so
+    this function itself is NOT jittable — the searcher caches jitted
+    versions of its two device stages); ``prune=False`` falls back to the
+    dense exhaustive evaluation. Results are identical either way. See
+    ``pruned_eval`` for the protocol and the remaining keyword contracts
+    on ``bm25_topk_dense``.
+
+    ``theta0`` contract (cross-segment threshold sharing): the caller
+    asserts that k results with score >= theta0 are already secured
+    ELSEWHERE (previous segments). Results strictly above theta0 are
+    exact; docs tied at exactly theta0 may be dropped — their slots are
+    covered by the securing results, so a merge over segments is still
+    value-exact vs the force-merged index.
+    """
+    if not prune:
+        return bm25_topk_dense(index, q_terms, k, prune=False, idf_q=idf_q,
+                               doc_norm=doc_norm, max_blocks=max_blocks,
+                               live=live)
+    q_terms = jnp.asarray(q_terms, jnp.int32)
+    idf1 = _resolve_idf(index, q_terms, idf_q)
+    if avgdl is None and doc_norm is None:
+        avgdl = index.avgdl  # baked stats: the self-consistent pair
+
+    def meta(q2d, idf2d):
+        return jax.vmap(
+            lambda q, f: prune_candidates(index, q, f, max_blocks,
+                                          avgdl))(q2d, idf2d)
+
+    def scorer_for(_n):
+        return lambda ci, cf, ca, cr: score_survivors(
+            index, ci, cf, ca, cr, 1, k, doc_norm, live)
+
+    vals, ids, stats = pruned_eval(meta, scorer_for, q_terms[None],
+                                   idf1[None], k, theta0=theta0)
+    stats.queries, stats.batches = 1, 1
+    return vals[0], ids[0], {
+        "blocks_scored": stats.blocks_scored,
+        "blocks_survived": stats.blocks_survived,
+        "blocks_total": stats.blocks_candidate,
+        "prune_stats": stats,
+    }

@@ -13,16 +13,25 @@ decoupling), rather than the paper's force-merged end state:
                           ``build_block_index_loop`` it replaced.
   ``SegmentReader``       one open segment: its block-max index, the
                           local->absolute doc-id map, the live-doc mask
-                          (tombstones), and a cache of jitted top-k
-                          evaluators (single and vmap-batched).
+                          (tombstones), and a cache of jitted evaluators —
+                          the dense exhaustive one, plus the two device
+                          stages of the compacted pruned path (metadata
+                          pass + survivor scorer, see ``core/query.py``).
   ``IndexSearcher``       an immutable snapshot over a list of readers.
                           Evaluates each segment under collection-GLOBAL
                           statistics computed from LIVE docs only (summed
                           live df -> idf, live avgdl -> doc_norm), masks
-                          tombstones inside the two-phase evaluation, and
-                          merges per-segment top-k — so results equal
-                          searching the force-merged COMPACTED index
-                          exactly, and a deleted doc is never returned.
+                          tombstones inside the evaluation, and merges
+                          per-segment top-k — so results equal searching
+                          the force-merged COMPACTED index exactly, and a
+                          deleted doc is never returned. With ``prune=True``
+                          (the default) segments are visited in descending
+                          best-possible-score order and each later segment
+                          starts from the running global k-th-score lower
+                          bound (cross-segment theta sharing: later
+                          segments prune harder, some are skipped outright)
+                          — exactness is preserved because theta is always
+                          a valid lower bound on the final k-th score.
   ``ReaderCache``         keyed by ``Segment.seg_id``: successive refreshes
                           only build readers for segments they have not
                           seen, so a merge cascade costs one reader build
@@ -49,7 +58,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import BLOCK, BlockMaxIndex, bm25_topk
+from repro.core.query import (BLOCK, BlockMaxIndex, PruneStats,
+                              bm25_topk_dense, prune_candidates, pruned_eval,
+                              score_survivors)
 from repro.core.segments import Segment, live_posting_stats
 from repro.kernels.postings_pack import ops as pack_ops
 
@@ -61,7 +72,7 @@ from repro.kernels.postings_pack import ops as pack_ops
 def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
                   first_doc: np.ndarray, max_tf: np.ndarray,
                   term_nb: np.ndarray, df: np.ndarray,
-                  k1: float, b: float) -> BlockMaxIndex:
+                  k1: float, b: float, min_dl: np.ndarray) -> BlockMaxIndex:
     """Shared tail of both builders: pack blocks + assemble the index."""
     d_arr = jnp.asarray(np.asarray(deltas, np.uint32))
     t_arr = jnp.asarray(np.asarray(tfs, np.uint32))
@@ -84,7 +95,8 @@ def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
         doc_norm=jnp.asarray(doc_norm.astype(np.float32)),
         n_docs=n_docs,
         max_blocks_per_term=int(np.max(term_nb)) if len(term_nb) else 1,
-        k1=k1, b=b)
+        k1=k1, b=b,
+        min_dl=jnp.asarray(np.asarray(min_dl, np.float32)), avgdl=avgdl)
 
 
 def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
@@ -107,7 +119,8 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
         return _finish_index(seg, np.zeros((1, BLOCK), np.int64),
                              np.zeros((1, BLOCK), np.int64),
                              np.zeros(1, np.int64), np.zeros(1, np.int64),
-                             np.zeros(1, np.int64), df, k1, b)
+                             np.zeros(1, np.int64), df, k1, b,
+                             np.zeros(1, np.int64))
 
     n_post = len(seg.docs)
     block_term = np.repeat(np.arange(seg.n_terms), term_nb)   # (NB,)
@@ -127,7 +140,8 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
     return _finish_index(seg, deltas.reshape(nb_total, BLOCK),
                          tfs.reshape(nb_total, BLOCK), local_docs[blk_s],
                          np.maximum.reduceat(seg.tf, blk_s), term_nb,
-                         df, k1, b)
+                         df, k1, b,
+                         np.minimum.reduceat(seg.doc_len[local_docs], blk_s))
 
 
 def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
@@ -137,7 +151,8 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
     not used on any production path."""
     local_docs = np.searchsorted(seg.doc_ids, seg.docs)
     df = np.diff(seg.term_start).astype(np.int64)
-    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb = [], [], [], [], []
+    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb, min_dl = \
+        [], [], [], [], [], []
     for ti in range(seg.n_terms):
         s, e = int(seg.term_start[ti]), int(seg.term_start[ti + 1])
         docs = local_docs[s:e]
@@ -147,6 +162,7 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
         for bi in range(nb):
             chunk = docs[bi * BLOCK:(bi + 1) * BLOCK]
             tchunk = tfs[bi * BLOCK:(bi + 1) * BLOCK]
+            min_dl.append(seg.doc_len[chunk].min())
             pad = BLOCK - len(chunk)
             if pad:
                 chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
@@ -158,10 +174,11 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
     if not blocks_deltas:
         blocks_deltas = [np.zeros(BLOCK, np.int64)]
         blocks_tf = [np.zeros(BLOCK, np.int64)]
-        first_doc, max_tf, term_nb = [0], [0], [0]
+        first_doc, max_tf, term_nb, min_dl = [0], [0], [0], [0]
     return _finish_index(seg, np.stack(blocks_deltas), np.stack(blocks_tf),
                          np.asarray(first_doc), np.asarray(max_tf),
-                         np.asarray(term_nb, np.int64), df, k1, b)
+                         np.asarray(term_nb, np.int64), df, k1, b,
+                         np.asarray(min_dl))
 
 
 # --------------------------------------------------------------------------
@@ -175,6 +192,19 @@ def _live_term_df(seg: Segment) -> np.ndarray:
     Same kernel the merge folds into its scatter — bit-identity between
     the read path and merge-time compaction by construction."""
     return live_posting_stats(seg)[1]
+
+
+def _term_impacts(index: BlockMaxIndex, n_terms: int):
+    """(T,) host copies of each term's competitive impact pair — best
+    block-max tf and shortest doc length — the metadata the searcher's
+    cross-segment ordering/skipping reads without touching the device
+    (upper bounds stay valid under deletes: tombstones only remove
+    postings)."""
+    if n_terms == 0:
+        return np.zeros(0, np.float32), np.zeros(0, np.float32)
+    tbs = np.asarray(index.term_block_start)[:n_terms]
+    return (np.maximum.reduceat(np.asarray(index.max_tf), tbs),
+            np.minimum.reduceat(np.asarray(index.min_dl), tbs))
 
 
 @dataclass
@@ -191,6 +221,8 @@ class SegmentReader:
     terms_np: np.ndarray          # host copies for global-df lookups
     df_np: np.ndarray             # (T,) LIVE df per term
     nb_np: np.ndarray             # (T,) blocks per term
+    term_max_tf_np: np.ndarray = None  # (T,) best block-max tf per term
+    term_min_dl_np: np.ndarray = None  # (T,) shortest doc length per term
     live: object = None           # (D,) bool device mask; None = no deletes
     live_doc_len: np.ndarray = None  # host doc lengths of live docs only
     _fns: dict = field(default_factory=dict)
@@ -199,11 +231,14 @@ class SegmentReader:
     def open(cls, seg: Segment, k1: float = 0.9, b: float = 0.4
              ) -> "SegmentReader":
         df_full = np.diff(seg.term_start).astype(np.int64)
-        return cls(seg=seg, index=build_block_index(seg, k1, b),
+        index = build_block_index(seg, k1, b)
+        tmax, tmin = _term_impacts(index, seg.n_terms)
+        return cls(seg=seg, index=index,
                    doc_map=jnp.asarray(seg.doc_ids.astype(np.int32)),
                    terms_np=np.asarray(seg.terms),
                    df_np=_live_term_df(seg),
                    nb_np=-(-df_full // BLOCK),
+                   term_max_tf_np=tmax, term_min_dl_np=tmin,
                    live=(jnp.asarray(~seg.deletes) if seg.has_deletes
                          else None),
                    live_doc_len=(seg.doc_len[~seg.deletes]
@@ -219,7 +254,8 @@ class SegmentReader:
         return SegmentReader(
             seg=seg, index=self.index, doc_map=self.doc_map,
             terms_np=self.terms_np, df_np=_live_term_df(seg),
-            nb_np=self.nb_np,
+            nb_np=self.nb_np, term_max_tf_np=self.term_max_tf_np,
+            term_min_dl_np=self.term_min_dl_np,
             live=(jnp.asarray(~seg.deletes) if seg.has_deletes else None),
             live_doc_len=(seg.doc_len[~seg.deletes] if seg.has_deletes
                           else seg.doc_len),
@@ -253,40 +289,62 @@ class SegmentReader:
         return min(1 << (need - 1).bit_length(),
                    max(self.index.max_blocks_per_term, 1))
 
+    def query_max_ub(self, q2d: np.ndarray, idf2d: np.ndarray,
+                     avgdl: float = 1.0) -> np.ndarray:
+        """(B,) best POSSIBLE score this segment can give each query: the
+        sum over query terms of the term's best impact bound (max tf +
+        shortest doc under ``avgdl``), from host metadata only. The
+        searcher visits segments in descending order of this bound and
+        skips a segment outright once the shared theta exceeds it (no doc
+        inside can beat the running top-k)."""
+        t = self.terms_np
+        q = np.asarray(q2d)
+        if t.size == 0:
+            return np.zeros(q.shape[0], np.float64)
+        rows = np.clip(np.searchsorted(t, q), 0, t.size - 1)
+        found = t[rows] == q
+        mt = np.where(found, self.term_max_tf_np[rows], 0.0)
+        k1, b = self.index.k1, self.index.b
+        norm = k1 * (1.0 - b) \
+            + k1 * b * np.where(found, self.term_min_dl_np[rows], 0.0) / avgdl
+        ub = np.where(mt > 0,
+                      np.asarray(idf2d, np.float64) * (k1 + 1.0)
+                      * mt / (mt + norm), 0.0)
+        return ub.sum(axis=-1)
+
     def topk_fn(self, k: int, max_blocks: int, batched: bool = False):
-        """Jitted ``(q, idf_q, doc_norm[, live]) -> (scores, abs doc ids)``.
+        """Jitted dense-exhaustive ``(q, idf_q, doc_norm[, live]) ->
+        (scores, abs doc ids)`` — the baseline every pruned result is
+        asserted against, and the serving path when ``prune=False``.
 
         idf/doc_norm arrive as arguments (not baked into the trace) so a
         refresh that only changes global stats reuses the compiled fn; the
         masked variant additionally takes the (D,) live mask as an
         argument, so successive delete generations of the same core reuse
-        one compiled evaluator (see ``reopen``). Pruning is left to the
-        TPU kernel path, where the active mask actually skips blocks; the
-        jnp reference path computes every lane either way, so there the
-        single exhaustive pass (identical results) is strictly cheaper
-        than the two-phase one.
-        """
+        one compiled evaluator (see ``reopen``). The dense path computes
+        every candidate lane, so the single exhaustive pass is strictly
+        cheaper than the masked two-phase one (identical results); actual
+        block skipping lives in the compacted pruned path
+        (``topk_pruned``)."""
         masked = self.live is not None
         key = (k, max_blocks, batched, masked)
         if key not in self._fns:
             index, doc_map = self.index, self.doc_map
-            prune = jax.default_backend() == "tpu"
 
             if masked:
                 def single(q, idf_q, doc_norm, live):
-                    vals, ids, _ = bm25_topk(index, q, k, prune=prune,
-                                             idf_q=idf_q, doc_norm=doc_norm,
-                                             max_blocks=max_blocks,
-                                             live=live)
+                    vals, ids, _ = bm25_topk_dense(
+                        index, q, k, prune=False, idf_q=idf_q,
+                        doc_norm=doc_norm, max_blocks=max_blocks, live=live)
                     return vals, doc_map[ids]
 
                 fn = jax.vmap(single, in_axes=(0, 0, None, None)) \
                     if batched else single
             else:
                 def single(q, idf_q, doc_norm):
-                    vals, ids, _ = bm25_topk(index, q, k, prune=prune,
-                                             idf_q=idf_q, doc_norm=doc_norm,
-                                             max_blocks=max_blocks)
+                    vals, ids, _ = bm25_topk_dense(
+                        index, q, k, prune=False, idf_q=idf_q,
+                        doc_norm=doc_norm, max_blocks=max_blocks)
                     return vals, doc_map[ids]
 
                 fn = jax.vmap(single, in_axes=(0, 0, None)) \
@@ -296,12 +354,68 @@ class SegmentReader:
 
     def topk(self, q, idf_q, doc_norm, k: int, max_blocks: int,
              batched: bool = False):
-        """Evaluate top-k on this segment, masking tombstones when the
-        segment has any (the searcher's one entry point)."""
+        """Dense-exhaustive top-k on this segment, masking tombstones when
+        the segment has any (the searcher's ``prune=False`` entry point)."""
         fn = self.topk_fn(k, max_blocks, batched)
         if self.live is not None:
             return fn(q, idf_q, doc_norm, self.live)
         return fn(q, idf_q, doc_norm)
+
+    def _pruned_fns(self, k: int, max_blocks: int, n_rows: int):
+        """Cached jitted device stages of the compacted pruned path: the
+        vmapped metadata pass and the batch-flat compacted scorer. The
+        scorer is one compiled function per (k, batch rows, masked) —
+        jax's shape cache handles the (log2-bounded, bucket-padded)
+        survivor shapes."""
+        mkey = ("meta", max_blocks)
+        if mkey not in self._fns:
+            index = self.index
+            self._fns[mkey] = jax.jit(jax.vmap(
+                lambda q, f, a: prune_candidates(index, q, f, max_blocks, a),
+                in_axes=(0, 0, None)))
+        masked = self.live is not None
+        skey = ("scorer", k, n_rows, masked)
+        if skey not in self._fns:
+            index, doc_map = self.index, self.doc_map
+
+            if masked:
+                def score(ci, cf, ca, cr, doc_norm, live):
+                    vals, ids = score_survivors(index, ci, cf, ca, cr,
+                                                n_rows, k, doc_norm, live)
+                    return vals, doc_map[ids]
+            else:
+                def score(ci, cf, ca, cr, doc_norm):
+                    vals, ids = score_survivors(index, ci, cf, ca, cr,
+                                                n_rows, k, doc_norm)
+                    return vals, doc_map[ids]
+            self._fns[skey] = jax.jit(score)
+        return self._fns[mkey], self._fns[skey]
+
+    def topk_pruned(self, q2d, idf2d, doc_norm, k: int, max_blocks: int,
+                    theta0=None, avgdl=None):
+        """Compacted pruned top-k over a (B, Q) batch: metadata pass ->
+        host MaxScore test at max(phase-1 theta, ``theta0``) -> compacted
+        survivor scoring. ``avgdl`` must be the mean doc length the
+        passed ``doc_norm`` was built from (the searcher passes its
+        collection-global snapshot value) — it tightens the impact
+        bounds; None keeps the stats-independent safe floor. Returns
+        ``(vals (B, k), abs doc ids (B, k), PruneStats)`` — exactly the
+        dense path's results, at survivor-proportional cost."""
+        meta_j, scorer = self._pruned_fns(k, max_blocks, int(q2d.shape[0]))
+        a = None if avgdl is None else jnp.float32(avgdl)
+        meta = lambda q2, f2: meta_j(q2, f2, a)
+        live = self.live
+        if live is not None:
+            def scorer_for(_n):
+                return lambda ci, cf, ca, cr: scorer(ci, cf, ca, cr,
+                                                     doc_norm, live)
+        else:
+            def scorer_for(_n):
+                return lambda ci, cf, ca, cr: scorer(ci, cf, ca, cr,
+                                                     doc_norm)
+        return pruned_eval(meta, scorer_for,
+                           jnp.asarray(q2d, jnp.int32), jnp.asarray(idf2d),
+                           k, theta0=theta0)
 
 
 @dataclass
@@ -315,18 +429,32 @@ class IndexSearcher:
     what the force-merged COMPACTED index would give it, and a merge of
     per-segment top-k equals global top-k; tombstoned docs are masked
     inside the evaluators and never surface.
+
+    ``prune=True`` (default) serves through the compacted pruned path
+    with cross-segment threshold sharing; ``prune=False`` serves the
+    dense exhaustive baseline (identical results — asserted in tests).
+    ``prune_stats`` accumulates the per-batch pruning counters across the
+    searcher's lifetime (the scheduler and ``envelope_report`` read it) —
+    the one mutable part of an otherwise-immutable snapshot, so its
+    accumulation is serialized under a lock (serving threads share one
+    searcher; readers of the counters tolerate momentarily-torn values).
     """
 
     readers: list
     k1: float = 0.9
     b: float = 0.4
+    prune: bool = True
     n_docs: int = 0                # LIVE docs in the snapshot
     avgdl: float = 1.0
+    prune_stats: PruneStats = None
     _doc_norms: list = None
     _df_terms: np.ndarray = None   # (U,) sorted union of segment terms
     _df_table: np.ndarray = None   # (U,) collection-wide LIVE df per term
+    _stats_lock: threading.Lock = None
 
     def __post_init__(self):
+        self.prune_stats = PruneStats()
+        self._stats_lock = threading.Lock()
         dls = [r.live_doc_len for r in self.readers]
         all_dl = (np.concatenate(dls).astype(np.float64) if dls
                   else np.zeros(0, np.float64))
@@ -374,13 +502,69 @@ class IndexSearcher:
         return (jnp.zeros(shape_prefix + (k,), jnp.float32),
                 jnp.full(shape_prefix + (k,), -1, jnp.int32))
 
+    def _search_pruned(self, q2d: np.ndarray, k: int):
+        """Shared pruned evaluation over a (B, Q) batch with cross-segment
+        threshold sharing: readers are visited in descending best-possible
+        -score order; the running global k-th score (a valid lower bound
+        on the final k-th — scores only join the pool, never leave) seeds
+        each later segment's theta, and a segment whose best possible
+        score is strictly below the bound for every query is skipped
+        without touching the device at all."""
+        B = q2d.shape[0]
+        idf = self.global_idf(q2d)
+        stats = PruneStats(queries=B, batches=1)
+        live = [(r, dn) for r, dn in zip(self.readers, self._doc_norms)
+                if min(k, r.live_docs) > 0 and r.terms_np.size > 0]
+        seg_ub = [r.query_max_ub(q2d, idf, self.avgdl) for r, _ in live]
+        order = np.argsort([-float(u.sum()) for u in seg_ub], kind="stable")
+        theta0 = np.zeros(B, np.float64)
+        running = None  # (B, <=k) best values seen so far, O(S*k) upkeep
+        parts_v, parts_i = [], []
+        for oi in order:
+            r, dn = live[oi]
+            k_eff = min(k, r.live_docs)
+            if running is not None and running.shape[1] >= k \
+                    and bool(np.all(seg_ub[oi] < theta0)):
+                stats.segments_skipped += 1
+                continue  # nothing inside can beat the running top-k
+            mb = r.query_max_blocks(q2d)
+            v, i, st = r.topk_pruned(q2d, idf, dn, k_eff, mb, theta0=theta0,
+                                     avgdl=self.avgdl)
+            stats.add(st)
+            v_np = np.asarray(v)
+            parts_v.append(v_np)
+            parts_i.append(np.asarray(i))
+            running = v_np if running is None \
+                else np.concatenate([running, v_np], axis=1)
+            if running.shape[1] > k:
+                running = -np.partition(-running, k - 1, axis=1)[:, :k]
+            if running.shape[1] >= k:
+                theta0 = np.maximum(theta0, running.min(axis=1))
+        with self._stats_lock:
+            self.prune_stats.add(stats)
+        if not parts_v:
+            return self._empty((B,), k)
+        vals = jnp.asarray(np.concatenate(parts_v, axis=1))
+        ids = jnp.asarray(np.concatenate(parts_i, axis=1))
+        kk = min(k, vals.shape[1])
+        top_v, pos = jax.lax.top_k(vals, kk)
+        top_i = jnp.take_along_axis(ids, pos, axis=1)
+        if kk < k:
+            top_v = jnp.pad(top_v, ((0, 0), (0, k - kk)))
+            top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=-1)
+        return top_v, top_i
+
     def search(self, q_terms, k: int = 10):
         """Top-k over every live segment; returns (scores (k,), doc_ids (k,))
-        with absolute doc ids. Results are identical to ``bm25_topk`` over
-        the force-merged compacted segment (asserted in tests). Per-segment
-        k is capped at the LIVE doc count, so a reader's top-k can never be
-        forced to dip into its tombstoned (masked, score -1) docs."""
+        with absolute doc ids. Results are identical to exhaustive
+        evaluation over the force-merged compacted segment (asserted in
+        tests). Per-segment k is capped at the LIVE doc count, so a
+        reader's top-k can never be forced to dip into its tombstoned
+        (masked, score -1) docs."""
         q = np.asarray(q_terms)
+        if self.prune:
+            v, i = self._search_pruned(q[None], k)
+            return v[0], i[0]
         idf = jnp.asarray(self.global_idf(q))
         qj = jnp.asarray(q, jnp.int32)
         parts_v, parts_i = [], []
@@ -406,9 +590,13 @@ class IndexSearcher:
     def search_batched(self, q_batch, k: int = 10):
         """Fixed-shape batched search: ``q_batch`` is (B, Q) int32, queries
         right-padded with -1 (absent everywhere -> contributes nothing).
-        Returns (scores (B, k), doc_ids (B, k)). Each segment evaluates the
-        whole batch with one vmapped two-phase block-max call."""
+        Returns (scores (B, k), doc_ids (B, k)). With pruning, each
+        segment evaluates the whole batch through one metadata pass + one
+        compacted scorer call (survivors padded to a shared power-of-two
+        bucket across the batch, so compiled shapes stay bounded)."""
         q = np.asarray(q_batch)
+        if self.prune:
+            return self._search_pruned(q, k)
         B = q.shape[0]
         idf = jnp.asarray(self.global_idf(q))
         qj = jnp.asarray(q, jnp.int32)
@@ -455,6 +643,7 @@ class ReaderCache:
 
     k1: float = 0.9
     b: float = 0.4
+    prune: bool = True   # searchers serve the compacted pruned path
     builds: int = 0
     hits: int = 0
     reopens: int = 0   # bitmap-only reader swaps (shared core)
@@ -508,4 +697,5 @@ class ReaderCache:
                 self._max_seen = snap_max
                 self.evictions += len(set(self._readers) - set(live))
                 self._readers = live
-        return IndexSearcher(readers=readers, k1=self.k1, b=self.b)
+        return IndexSearcher(readers=readers, k1=self.k1, b=self.b,
+                             prune=self.prune)

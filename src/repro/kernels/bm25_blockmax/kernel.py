@@ -1,11 +1,34 @@
-"""Pallas TPU kernel: fused unpack + prefix-sum + BM25 partial scoring.
+"""Pallas TPU skip kernel: fused unpack + prefix-sum + BM25 scoring over
+COMPACTED surviving blocks.
 
 The TPU-idiomatic equivalent of block-max WAND's posting cursor (DESIGN.md
-§2): instead of pointer-chasing per document, whole 128-lane blocks are
-either scored densely or skipped via the ``active`` mask that the
-block-max pruning pass computes on block metadata. In-kernel work is all
-VPU: bit-plane unpack (shift/and), a log-step inclusive prefix sum across
-the 128 lanes, and the tf -> idf*(k1+1)*tf numerator.
+§2), after the pruning pass has already *compacted* the survivors: the
+grid iterates over the dense survivor array the host gathered
+(``core/query.py::compact_survivors``), so the kernel touches exactly the
+blocks the MaxScore test kept — cost is proportional to survivors, never
+to candidates. (The same kernel also serves the dense oracle, whose
+"survivor array" is simply the full candidate grid with a mask.)
+
+Per grid step (``block_rows`` postings blocks, 128 lanes each), all VPU
+work:
+
+  * bit-plane unpack of the lane-blocked PFor doc deltas and tfs
+    (shift/and over the 32x4 packed words);
+  * a log-step inclusive prefix sum across the 128 lanes rebuilding
+    absolute doc ids from the block's first doc;
+  * the fused BM25 numerator idf * (k1+1) * tf;
+  * a RUNNING top-partials accumulator: the per-lane maximum of the
+    length-independent score bound num / (tf + k1*(1-b)) is folded across
+    every grid step into one (1, 128) carry (the output block's index map
+    is constant, so it lives in VMEM for the whole grid) — a device-side
+    record of the best partial any surviving block could contribute,
+    usable as a theta-tightening bound without another pass.
+
+The per-doc length norm needs a doc-indexed gather and so stays outside
+the kernel (the caller finishes ``score += num / (tf + doc_norm[doc])``).
+``ref.py`` is the pure-jnp oracle; parity is asserted in interpret mode
+on CPU (tests/test_kernels.py) and the dispatcher (``ops.py``) compiles
+the real kernel only on TPU.
 """
 from __future__ import annotations
 
@@ -29,8 +52,10 @@ def _unpack_bits(w, bw, R):
                    dtype=jnp.uint32)
 
 
-def _bm25_kernel(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
-                 act_ref, doc_ref, tf_ref, num_ref, *, k1):
+def _bm25_core(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
+               act_ref, doc_ref, tf_ref, num_ref, *, k1):
+    """Shared kernel body: unpack + prefix-sum + numerator for one grid
+    step of compacted blocks; returns (act, tf, num) for optional extras."""
     R = pd_ref.shape[0]
     deltas = _unpack_bits(pd_ref[...], bwd_ref[...], R).astype(jnp.int32)
     # inclusive prefix sum over the 128 lanes (log-step doubling)
@@ -47,14 +72,46 @@ def _bm25_kernel(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
     doc_ref[...] = jnp.where(act, docids, 0)
     tf_ref[...] = jnp.where(act, tf, 0.0)
     num_ref[...] = jnp.where(act, num, 0.0)
+    return act, tf, num
+
+
+def _bm25_kernel(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
+                 act_ref, doc_ref, tf_ref, num_ref, *, k1):
+    _bm25_core(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref, idf_ref,
+               act_ref, doc_ref, tf_ref, num_ref, k1=k1)
+
+
+def _bm25_kernel_partials(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref,
+                          idf_ref, act_ref, doc_ref, tf_ref, num_ref,
+                          part_ref, *, k1, b):
+    act, tf, num = _bm25_core(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref,
+                              idf_ref, act_ref, doc_ref, tf_ref, num_ref,
+                              k1=k1)
+    # running top partials: per-lane max of the length-independent score
+    # bound across every surviving block seen so far (constant index map
+    # -> the carry stays resident across the sequential grid)
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        part_ref[...] = jnp.zeros_like(part_ref)
+
+    min_norm = k1 * (1.0 - b)
+    part = jnp.where(act & (tf > 0), num / (tf + min_norm), 0.0)
+    part_ref[...] = jnp.maximum(part_ref[...],
+                                part.max(axis=0, keepdims=True))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k1", "block_rows", "interpret"))
+                   static_argnames=("k1", "b", "block_rows", "interpret",
+                                    "partials"))
 def bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
-                       idf, active, *, k1: float = 0.9,
+                       idf, active, *, k1: float = 0.9, b: float = 0.4,
                        block_rows: int = DEFAULT_BLOCK_ROWS,
-                       interpret: bool = True):
+                       interpret: bool = True, partials: bool = False):
+    """-> (docids, tf, num) each (NB, 128); with ``partials=True`` also
+    the (1, 128) running per-lane top-partial bound (the hot serving path
+    compiles without it — nothing reads the carry there). NB is the
+    COMPACTED survivor count (bucket-padded to a power of two by the
+    caller, so ``block_rows`` always divides it)."""
     nb = packed_docs.shape[0]
     block_rows = min(block_rows, nb)
     assert nb % block_rows == 0, (nb, block_rows)
@@ -62,16 +119,25 @@ def bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
     vec = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
     packed = lambda: pl.BlockSpec((block_rows, 32, 4), lambda i: (i, 0, 0))
     lanes = lambda: pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))
+    carry = lambda: pl.BlockSpec((1, BLOCK), lambda i: (0, 0))
+    out_specs = [lanes(), lanes(), lanes()]
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
+        jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+    ]
+    if partials:
+        kernel = functools.partial(_bm25_kernel_partials, k1=k1, b=b)
+        out_specs.append(carry())
+        out_shape.append(jax.ShapeDtypeStruct((1, BLOCK), jnp.float32))
+    else:
+        kernel = functools.partial(_bm25_kernel, k1=k1)
     return pl.pallas_call(
-        functools.partial(_bm25_kernel, k1=k1),
+        kernel,
         grid=grid,
         in_specs=[packed(), vec(), vec(), packed(), vec(), vec(), vec()],
-        out_specs=[lanes(), lanes(), lanes()],
-        out_shape=[
-            jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
-            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
-            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(packed_docs.astype(jnp.uint32), bw_docs.astype(jnp.int32),
       first_doc.astype(jnp.int32), packed_tf.astype(jnp.uint32),

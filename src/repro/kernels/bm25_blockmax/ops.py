@@ -1,4 +1,13 @@
-"""Dispatcher for the fused BM25 block scoring op."""
+"""Dispatcher for the fused BM25 block scoring op.
+
+``bm25_blocks`` receives the block array the evaluation selected — the
+full candidate grid on the dense oracle path, or the compacted
+bucket-padded survivor array on the production pruned path
+(``core/query.py``) — and returns per-lane (docids, tf, num). On TPU the
+real Pallas skip kernel runs (grid over the compacted blocks); elsewhere
+the pure-jnp reference does, which on the compacted path is already
+survivor-proportional because the caller gathered the survivors first.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,6 +20,20 @@ def bm25_blocks(packed_docs, bw_docs, first_doc, packed_tf, bw_tf, idf,
                 active, *, k1: float = 0.9):
     if jax.default_backend() == "tpu":
         return bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf,
-                                  bw_tf, idf, active, k1=k1, interpret=False)
+                                  bw_tf, idf, active, k1=k1,
+                                  interpret=False)
     return bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
                            idf, active, k1=k1)
+
+
+def bm25_blocks_partials(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
+                         idf, active, *, k1: float = 0.9, b: float = 0.4,
+                         interpret: bool = None):
+    """Full kernel output including the (1, 128) running per-lane
+    top-partial bound (see kernel docstring). ``interpret`` defaults to
+    interpret-mode everywhere but TPU."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf,
+                              bw_tf, idf, active, k1=k1, b=b,
+                              interpret=interpret, partials=True)

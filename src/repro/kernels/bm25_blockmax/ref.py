@@ -3,11 +3,17 @@
 Per postings block (128 lanes): unpack doc-id deltas (lane-blocked PFor),
 prefix-sum them onto the block's first doc id, unpack term frequencies,
 and emit the BM25 numerator idf * (k1+1) * tf. Skipped blocks (block-max
-pruning decided upstream) emit zeros.
+pruning decided upstream) emit zeros. The production pruned path hands
+this a COMPACTED survivor array, so on the CPU backend the jnp work is
+proportional to survivors too (``core/query.py::compact_survivors``).
 
 The caller finishes the score with the per-doc length norm:
   score += num / (tf + k1 * (1 - b + b * dl[doc] / avgdl))
 which needs a doc-indexed gather and so lives outside the kernel.
+
+``lane_partials_ref`` is the oracle for the Pallas kernel's running
+top-partials carry: the per-lane maximum over all active blocks of the
+length-independent score bound num / (tf + k1*(1-b)).
 """
 from __future__ import annotations
 
@@ -27,3 +33,11 @@ def bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
     return (jnp.where(act, docids, 0),
             jnp.where(act, tf, 0.0),
             jnp.where(act, num, 0.0))
+
+
+def lane_partials_ref(tf, num, k1: float = 0.9, b: float = 0.4):
+    """(1, 128) per-lane max of num / (tf + min_norm) over active blocks
+    (``tf``/``num`` already masked to zero on inactive blocks)."""
+    min_norm = k1 * (1.0 - b)
+    part = jnp.where(tf > 0, num / (tf + min_norm), 0.0)
+    return part.max(axis=0, keepdims=True)

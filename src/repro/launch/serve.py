@@ -108,6 +108,11 @@ def serve_retrieval(args):
     print(f"retrieval: {searcher.n_segments} live segments, "
           f"{searcher.n_docs} docs; served {len(done)} queries "
           f"in {dt*1000:.0f}ms ({len(done)/dt:.0f} qps steady-state)")
+    ps = sched.prune_stats
+    print(f"pruning: {ps.blocks_candidate} candidate blocks -> "
+          f"{ps.blocks_survived} survived -> {ps.blocks_scored} scored "
+          f"(skip rate {ps.skip_rate:.2f}, "
+          f"{ps.segments_skipped} segments skipped)")
 
     # keep indexing, refresh, serve again — search-while-indexing
     for i in range(4, 8):

@@ -9,6 +9,16 @@ changes, so XLA compiles each segment's evaluator once and never again.
 Unlike decode, a query finishes in a single step, so "continuous" here
 means the queue refills all slots every step instead of per-slot refill.
 
+The searcher serves through the compacted pruned path by default:
+survivor counts vary per batch, so the compacted arrays are padded to
+power-of-two buckets (``core/query.py::survivor_bucket``) — compiled
+shapes stay log2-bounded no matter what traffic looks like. The
+scheduler is survivor-count-aware: it folds every served batch's
+``PruneStats`` (candidate vs survived vs scored blocks, segments
+skipped) into its own totals, surviving searcher swaps, so serving cost
+is observable per scheduler (``launch/serve.py`` and ``envelope_report``
+read it).
+
 ``swap_searcher`` installs a fresh ``IndexSearcher`` from the indexer's
 ``refresh()`` between steps: serving continues against the old snapshot
 until the swap, which is the write-read decoupling contract.
@@ -18,6 +28,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.core.query import PruneStats
 
 
 @dataclass
@@ -39,6 +51,27 @@ class QueryScheduler:
     queue: list = field(default_factory=list)
     served: int = 0
     steps: int = 0
+    _stats_acc: PruneStats = field(default_factory=PruneStats)
+    _stats_mark: PruneStats = None   # searcher counters at attach time
+
+    def __post_init__(self):
+        self._mark_searcher()
+
+    def _mark_searcher(self):
+        ps = getattr(self.searcher, "prune_stats", None)
+        self._stats_mark = ps.snapshot() if ps is not None else None
+
+    @property
+    def prune_stats(self) -> PruneStats:
+        """Pruning counters for everything THIS scheduler served: batches
+        accumulated across searcher swaps plus the current searcher's
+        delta since it was attached (a searcher shared with direct
+        ``search`` callers only contributes what the scheduler drove)."""
+        total = self._stats_acc.snapshot()
+        ps = getattr(self.searcher, "prune_stats", None)
+        if ps is not None and self._stats_mark is not None:
+            total.add(ps.delta(self._stats_mark))
+        return total
 
     def submit(self, req: QueryRequest):
         if len(req.terms) > self.max_terms:
@@ -53,8 +86,13 @@ class QueryScheduler:
 
     def swap_searcher(self, searcher):
         """Install a fresher snapshot (from ``DistributedIndexer.refresh``);
-        takes effect from the next step."""
+        takes effect from the next step. The outgoing searcher's pruning
+        delta is folded into the scheduler totals first."""
+        ps = getattr(self.searcher, "prune_stats", None)
+        if ps is not None and self._stats_mark is not None:
+            self._stats_acc.add(ps.delta(self._stats_mark))
         self.searcher = searcher
+        self._mark_searcher()
 
     def step(self):
         """Serve one fixed-shape batch from the queue; returns finished

@@ -27,6 +27,7 @@ GB/min next to the analytic ``core/envelope.py`` prediction.
 """
 from __future__ import annotations
 
+import mmap as _mmap
 import os
 import threading
 import time
@@ -202,11 +203,28 @@ class FSDirectory(Directory):
     inode (so the renames themselves are durable too). ``rename`` is
     ``os.replace`` — atomic on POSIX — and is the only primitive the
     two-phase commit relies on.
+
+    ``mmap=True`` serves reads through memory-mapped files (Lucene's
+    MMapDirectory seam): the data path is the page cache via ``mmap(2)``
+    instead of ``read(2)``. Because ``Directory.read_file`` contracts to
+    return ``bytes``, one copy out of the cache is still paid per call —
+    the seam's value here is the media-layer shape (and the measured
+    parity test that both modes return identical bytes), not a zero-copy
+    fast path; serving slices without the copy needs a reader that
+    accepts memoryviews, a follow-on. Anywhere mmap is unavailable —
+    zero-length files cannot be mapped, and some filesystems refuse
+    ``mmap(2)`` outright — the read transparently falls back to a plain
+    file read. The byte/wall accounting is unchanged either way (it
+    lives in the public ``read_file`` wrapper), so measured-IO envelopes
+    stay comparable across modes; ``mmap_reads`` counts how many reads
+    the mapping actually served.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, mmap: bool = False):
         super().__init__()
         self.path = str(path)
+        self.use_mmap = bool(mmap)
+        self.mmap_reads = 0
         os.makedirs(self.path, exist_ok=True)
 
     def _p(self, name):
@@ -236,10 +254,25 @@ class FSDirectory(Directory):
 
     def _read(self, name):
         try:
-            with open(self._p(name), "rb") as f:
-                return f.read()
+            f = open(self._p(name), "rb")
         except OSError as e:
             raise FileNotFoundError(name) from e
+        with f:
+            if self.use_mmap:
+                try:
+                    mm = _mmap.mmap(f.fileno(), 0,
+                                    access=_mmap.ACCESS_READ)
+                except (ValueError, OSError):
+                    pass  # empty file / fs without mmap: plain read below
+                else:
+                    try:
+                        data = bytes(mm)
+                    finally:
+                        mm.close()
+                    with self._acct_lock:
+                        self.mmap_reads += 1
+                    return data
+            return f.read()
 
     def _list(self):
         return [n for n in os.listdir(self.path)

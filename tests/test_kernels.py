@@ -51,6 +51,37 @@ def test_pack_roundtrip_property(vals, extra):
     assert float(pref.packed_bytes(bw)) <= arr.size * 4 + arr.shape[0] * 1
 
 
+@pytest.mark.parametrize("nb", [8, 64, 256])
+def test_bm25_skip_kernel_over_compacted_survivors(nb):
+    """The rewritten skip kernel: grid over a COMPACTED survivor array
+    (power-of-two sizes, the shapes ``compact_survivors`` emits), fused
+    unpack + score, and the running per-lane top-partial carry
+    accumulated across grid steps — all vs the jnp oracle in interpret
+    mode."""
+    from repro.kernels.bm25_blockmax.ops import bm25_blocks_partials
+    from repro.kernels.bm25_blockmax.ref import lane_partials_ref
+    rng = np.random.default_rng(nb + 1)
+    deltas = rng.integers(0, 50, (nb, 128)).astype(np.uint32)
+    deltas[:, 0] = 0
+    tf = rng.integers(0, 30, (nb, 128)).astype(np.uint32)
+    pd, bwd = pref.pack_ref(jnp.asarray(deltas))
+    pt, bwt = pref.pack_ref(jnp.asarray(tf))
+    first = jnp.asarray(rng.integers(0, 5000, nb).astype(np.int32))
+    idf = jnp.asarray(rng.random(nb).astype(np.float32) * 4)
+    act = jnp.asarray((rng.random(nb) < 0.8).astype(np.int32))
+    doc, tf_o, num, part = bm25_blocks_partials(pd, bwd, first, pt, bwt,
+                                                idf, act)
+    ref = bm25_blocks_ref(pd, bwd, first, pt, bwt, idf, act)
+    for got, want in zip((doc, tf_o, num), ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+    # the carry is the per-lane max partial bound over every grid step
+    want_part = lane_partials_ref(ref[1], ref[2])
+    assert part.shape == (1, 128)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(want_part),
+                               rtol=1e-6)
+
+
 @pytest.mark.parametrize("nb", [4, 32])
 def test_bm25_kernel_matches_ref(nb):
     rng = np.random.default_rng(nb)

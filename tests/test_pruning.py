@@ -1,0 +1,182 @@
+"""Survivor-proportional pruned serving: the compacted + shared-theta
+multi-segment path (tombstones included) must return exactly what
+exhaustive evaluation over the force-merged COMPACTED index returns —
+values bit-identical, every returned doc carrying its true global score —
+while the pruning counters prove the path does survivor-proportional
+work. Also covers the scheduler's PruneStats surface and the
+cross-segment skip."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_arch
+from repro.core.indexer import DistributedIndexer
+from repro.core.merge import merge_segments
+from repro.core.query import PruneStats, bm25_exhaustive
+from repro.core.searcher import IndexSearcher, ReaderCache, build_block_index
+from repro.data.corpus import TINY, SyntheticCorpus
+from test_merge import make_segment, tombstoned_seg_set
+
+
+def _searchers(segs):
+    """(pruned searcher, exhaustive searcher over the same readers,
+    exhaustive single-index oracle over the force-merged compaction)."""
+    pruned = ReaderCache().refresh(segs)
+    dense = IndexSearcher(readers=pruned.readers, k1=pruned.k1, b=pruned.b,
+                          prune=False)
+    midx = build_block_index(merge_segments(list(segs)))
+    return pruned, dense, midx
+
+
+def _query_vocab(segs, rng):
+    terms = np.concatenate([s.terms for s in segs] + [np.array([10 ** 6])])
+    n = int(rng.integers(1, 5))
+    return rng.choice(terms, size=min(n, terms.size),
+                      replace=False).astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 5))
+def test_pruned_multisegment_bit_identical_to_forcemerged(seed, n_segs):
+    """The tentpole oracle: pruned (compacted + shared theta, with
+    deletes) multi-segment top-k == ``bm25_exhaustive`` on the
+    force-merged compacted index, bit for bit on values; every returned
+    id carries its true global score (ties may legally reorder ids)."""
+    segs = tombstoned_seg_set(seed, n_segs)
+    n_live = sum(s.live_doc_count for s in segs)
+    if n_live == 0:
+        return
+    pruned, dense, midx = _searchers(segs)
+    if int(midx.terms.shape[0]) == 0:
+        return  # every live posting tombstoned away: nothing to rank
+    rng = np.random.default_rng(seed + 3)
+    k = int(min(rng.integers(1, 12), n_live))
+    # full exact ranking of the compacted merge -> true score per doc
+    v_all, i_all = bm25_exhaustive(midx, jnp.asarray(_q := _query_vocab(
+        segs, rng)), midx.n_docs)[:2]
+    truth = dict(zip(np.asarray(i_all).tolist(),
+                     np.asarray(v_all).tolist()))
+    v_e, i_e = np.asarray(v_all)[:k], np.asarray(i_all)[:k]
+    # the merged index holds LOCAL ids 0..D-1 == rank in the sorted
+    # absolute doc-id space; map to absolute for comparison
+    live_ids = np.concatenate([s.live_doc_ids() for s in segs])
+    live_ids.sort()
+    for searcher in (pruned, dense):
+        v_s, i_s = searcher.search(_q, k)
+        v_s, i_s = np.asarray(v_s), np.asarray(i_s)
+        assert np.array_equal(v_s, v_e), (v_s, v_e)
+        local = np.searchsorted(live_ids, i_s)
+        for val, li in zip(v_s, local):
+            assert truth[int(li)] == val
+    # batched path agrees with the single path
+    qb = np.stack([_q, _q])
+    vb, ib = pruned.search_batched(qb, k)
+    assert np.array_equal(np.asarray(vb)[0], v_e)
+    assert np.array_equal(np.asarray(vb)[1], v_e)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_prune_stats_monotone_and_counted(seed):
+    segs = [make_segment(np.random.default_rng(seed + i), 1000 * i,
+                         n_docs=8) for i in range(3)]
+    pruned = ReaderCache().refresh(segs)
+    rng = np.random.default_rng(seed)
+    q = _query_vocab(segs, rng)
+    pruned.search(q, 5)
+    st1 = pruned.prune_stats
+    assert st1.queries == 1 and st1.batches == 1
+    assert 0 <= st1.blocks_survived <= st1.blocks_candidate
+    assert st1.blocks_scored >= 0
+    pruned.search_batched(np.stack([q, q]), 5)
+    assert pruned.prune_stats.queries == 3
+    assert pruned.prune_stats.batches == 2
+
+
+def test_cross_segment_skip_preserves_results():
+    """A segment whose best possible score cannot beat the shared theta
+    is skipped without being evaluated — and results stay exact. Build
+    one segment with high-tf postings for a term and another where the
+    same term only appears at tf=1 in longer docs (strictly lower
+    bound)."""
+    rng = np.random.default_rng(0)
+    strong = make_segment(rng, 0, n_docs=8, max_tf=6, one_term=True)
+    weak = make_segment(rng, 1000, n_docs=8, one_term=True,
+                        single_postings=True)  # tf=1 everywhere
+    weak.doc_len[:] = 200  # long docs: every score strictly lower
+    segs = [strong, weak]
+    pruned, dense, midx = _searchers(segs)
+    q = np.array([7], np.int32)  # the one_term vocabulary
+    k = 4
+    v_p, i_p = pruned.search(q, k)
+    v_d, i_d = dense.search(q, k)
+    assert np.array_equal(np.asarray(v_p), np.asarray(v_d))
+    st1 = pruned.prune_stats
+    if float(np.asarray(v_p)[k - 1]) > 0:
+        # skip only engages when theta beats the weak segment's bound;
+        # with tf=1 vs tf>=1 it should here
+        assert st1.segments_visited + st1.segments_skipped == 2
+
+
+def test_query_scheduler_prune_stats_survive_swap():
+    from repro.serving.query_scheduler import QueryRequest, QueryScheduler
+    cfg = get_arch("lucene-envelope").smoke
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg)
+    ix.index_batch(corpus.batch(0, 32))
+    s1 = ix.refresh()
+    sched = QueryScheduler(searcher=s1, slots=4, max_terms=3, k=5)
+    b0 = corpus.batch(0, 32)
+    vocab = np.unique(b0[b0 > 0])
+    rng = np.random.default_rng(11)
+    for i in range(6):
+        sched.submit(QueryRequest(rid=i, k=5,
+                                  terms=rng.choice(vocab, 3,
+                                                   replace=False)))
+    sched.run_to_completion()
+    st1 = sched.prune_stats
+    assert st1.batches == 2 and st1.queries == 2 * 4  # fixed-slot batches
+    assert st1.blocks_scored > 0
+    # a searcher swap must not lose the served counters
+    ix.index_batch(corpus.batch(1, 32))
+    sched.swap_searcher(ix.refresh())
+    assert sched.prune_stats.batches == st1.batches
+    sched.submit(QueryRequest(rid=99, k=5, terms=vocab[:2]))
+    sched.run_to_completion()
+    st2 = sched.prune_stats
+    assert st2.batches == st1.batches + 1
+    assert st2.blocks_scored >= st1.blocks_scored
+    # envelope_report surfaces the searcher-level counters
+    rep = ix.envelope_report()
+    for key in ("blocks_candidate", "blocks_survived", "blocks_scored",
+                "segments_skipped", "prune_skip_rate"):
+        assert key in rep
+    ix.close()
+
+
+def test_pruned_search_under_churn_via_indexer():
+    """End-to-end: index, churn (deletes + re-adds), refresh — pruned
+    results equal the exhaustive searcher over the same snapshot AND the
+    finalized compacted index, with tombstoned docs never returned."""
+    cfg = dataclasses.replace(get_arch("lucene-envelope").smoke)
+    corpus = SyntheticCorpus(TINY, doc_buffer_len=cfg.doc_len)
+    ix = DistributedIndexer(cfg=cfg)
+    for i in range(4):
+        ix.index_batch(corpus.batch(i, 32))
+    ix.delete(np.arange(0, 40))          # tombstone across segments
+    ix.index_batch(corpus.batch(4, 32))  # re-add fresh docs
+    s = ix.refresh()
+    dense = IndexSearcher(readers=s.readers, k1=s.k1, b=s.b, prune=False)
+    b0 = corpus.batch(0, 32)
+    vocab = np.unique(b0[b0 > 0])
+    rng = np.random.default_rng(23)
+    deleted = set(range(40))
+    for _ in range(5):
+        q = rng.choice(vocab, 4, replace=False).astype(np.int32)
+        v_p, i_p = s.search(q, 10)
+        v_d, i_d = dense.search(q, 10)
+        assert np.array_equal(np.asarray(v_p), np.asarray(v_d))
+        hit = np.asarray(i_p)[np.asarray(v_p) > 0]
+        assert not (set(hit.tolist()) & deleted)

@@ -1,5 +1,8 @@
 """BM25 block-max serving: exhaustive == numpy oracle; pruned == exhaustive
-(the safety property of the MaxScore block test)."""
+(the safety property of the MaxScore block test). The compacted pruned
+path (``bm25_topk``) must be bit-identical to the dense two-phase oracle
+(``bm25_topk_dense``) and to exhaustive evaluation — including under
+tombstone masks and an externally-seeded theta."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.invert import invert_shard
 from repro.core.merge import merge_segments
-from repro.core.query import bm25_exhaustive, bm25_topk
+from repro.core.query import (bm25_exhaustive, bm25_topk, bm25_topk_dense,
+                              survivor_bucket)
 from repro.core.searcher import build_block_index
 from repro.core.segments import segment_from_run
 
@@ -54,13 +58,63 @@ def test_bm25_matches_oracle_and_prune_is_exact(corpus_index, seed):
     np.testing.assert_allclose(np.asarray(v1), ov, rtol=1e-4, atol=1e-5)
     v2, i2, stats = bm25_topk(idx, jnp.asarray(q), 10)
     np.testing.assert_allclose(np.asarray(v2), ov, rtol=1e-4, atol=1e-5)
-    assert int(stats["blocks_scored"]) <= int(stats["blocks_total"])
+    # the compacted pruned path is BIT-identical to exhaustive
+    assert np.array_equal(np.asarray(v2), np.asarray(v1))
+    assert np.array_equal(np.asarray(i2), np.asarray(i1))
+    assert 0 <= int(stats["blocks_survived"]) <= int(stats["blocks_total"])
+    assert int(stats["blocks_scored"]) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_compacted_bit_identical_to_dense_oracle(corpus_index, seed):
+    """The tentpole parity: compacted pruned evaluation == the retained
+    dense two-phase oracle == exhaustive, bit for bit, with and without a
+    tombstone mask and with an externally-seeded theta (the cross-segment
+    bound can only be a valid lower bound here, so exactness must hold)."""
+    tokens, idx = corpus_index
+    rng = np.random.default_rng(seed + 1)
+    q = jnp.asarray(rng.choice(np.unique(tokens), size=rng.integers(1, 5),
+                               replace=False).astype(np.int32))
+    live = None
+    if rng.random() < 0.5:
+        mask = rng.random(idx.n_docs) > 0.2   # ~20% tombstoned
+        mask[rng.integers(0, idx.n_docs)] = True  # keep >= 1 live
+        live = jnp.asarray(mask)
+    k = int(rng.integers(1, 12))
+    v_d, i_d, _ = bm25_topk_dense(idx, q, k, prune=True, live=live)
+    v_e, i_e, _ = bm25_exhaustive(idx, q, k, live=live)
+    v_c, i_c, _ = bm25_topk(idx, q, k, live=live)
+    assert np.array_equal(np.asarray(v_d), np.asarray(v_e))
+    assert np.array_equal(np.asarray(v_c), np.asarray(v_e))
+    assert np.array_equal(np.asarray(i_c), np.asarray(i_e))
+    # seeding theta with an externally-secured bound: every result
+    # STRICTLY above theta0 is guaranteed (docs tied at exactly theta0
+    # may be dropped — the searcher only passes a theta0 already backed
+    # by k collected results, so merged values never change)
+    theta0 = float(np.asarray(v_e)[k // 2])
+    v_t, i_t, _ = bm25_topk(idx, q, k, live=live, theta0=theta0)
+    above = np.asarray(v_e) > theta0
+    assert np.array_equal(np.asarray(v_t)[above], np.asarray(v_e)[above])
+    assert np.array_equal(np.asarray(i_t)[above], np.asarray(i_e)[above])
+
+
+def test_survivor_buckets_are_pow2_bounded():
+    assert survivor_bucket(0) == 8
+    assert survivor_bucket(1) == 8
+    assert survivor_bucket(8) == 8
+    assert survivor_bucket(9) == 16
+    assert survivor_bucket(100) == 128
+    # bounded recompiles: every count in [1, 4096] lands on one of 10 shapes
+    assert len({survivor_bucket(n) for n in range(1, 4097)}) == 10
 
 
 def test_query_missing_term(corpus_index):
     _, idx = corpus_index
     v, i, _ = bm25_exhaustive(idx, jnp.asarray([10 ** 6], jnp.int32), 5)
     assert (np.asarray(v) == 0).all()
+    v2, i2, _ = bm25_topk(idx, jnp.asarray([10 ** 6], jnp.int32), 5)
+    assert (np.asarray(v2) == 0).all()
 
 
 def test_packed_smaller_than_raw(corpus_index):

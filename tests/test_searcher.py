@@ -17,7 +17,7 @@ from repro.kernels.postings_pack import ref as pack_ref
 
 INDEX_FIELDS = ("terms", "term_block_start", "idf", "packed_docs",
                 "bw_docs", "packed_tf", "bw_tf", "first_doc", "max_tf",
-                "doc_norm")
+                "doc_norm", "min_dl")
 
 
 def bm25_oracle(tokens, q, k1=0.9, b=0.4):

@@ -34,10 +34,12 @@ from test_merge import ARRAY_FIELDS, assert_bit_identical, make_segment
 SMOKE_CFG = get_arch("lucene-envelope").smoke
 
 
-@pytest.fixture(params=["ram", "fs"])
+@pytest.fixture(params=["ram", "fs", "fs-mmap"])
 def directory(request, tmp_path):
     if request.param == "ram":
         return RAMDirectory()
+    if request.param == "fs-mmap":
+        return FSDirectory(tmp_path / "dir", mmap=True)
     return FSDirectory(tmp_path / "dir")
 
 
@@ -81,6 +83,35 @@ def test_rename_is_atomic_replace(directory):
     directory.rename("src", "dst")
     assert directory.read_file("dst") == b"new"
     assert not directory.file_exists("src")
+
+
+def test_fs_mmap_reads_identical_with_unchanged_accounting(tmp_path):
+    """``FSDirectory(mmap=True)`` serves identical bytes through the
+    mapping, falls back to plain reads where mmap cannot apply (empty
+    files), and keeps the byte accounting identical to the plain-read
+    directory — measured envelopes stay comparable across modes."""
+    plain = FSDirectory(tmp_path / "a")
+    mapped = FSDirectory(tmp_path / "b", mmap=True)
+    payload = b"x" * 4096 + b"tail"
+    for d in (plain, mapped):
+        d.write_file("f", payload)
+        d.write_file("empty", b"")
+        assert d.read_file("f") == payload
+        assert d.read_file("empty") == b""
+    assert mapped.mmap_reads == 1          # "f" via the map, "empty" not
+    assert plain.mmap_reads == 0
+    assert mapped.bytes_read == plain.bytes_read == len(payload)
+    assert mapped.bytes_written == plain.bytes_written
+    with pytest.raises(FileNotFoundError):
+        mapped.read_file("zz")
+    # a full durable cycle through an mmap directory stays bit-identical
+    seg = make_segment(np.random.default_rng(0), 0, n_docs=6)
+    store = SegmentStore(directory=mapped)
+    store.write(seg)
+    store.commit([seg])
+    gen, segs = open_latest(FSDirectory(tmp_path / "b", mmap=True))
+    assert gen == 1 and len(segs) == 1
+    assert_bit_identical(segs[0], seg)
 
 
 # ---------------------------------------------------------------------------
