@@ -22,7 +22,12 @@ trajectory.
                     deletes + re-adds), plus merge-time compaction ratio
   search_pruned     survivor-proportional serving: compacted pruned path
                     vs exhaustive at k in {10, 100} under 10%/50% churn —
-                    batched latency + candidate/survived/scored blocks
+                    batched latency + candidate/survived/scored blocks,
+                    plus blocks_scored on a BP-reordered vs natural merge
+  compression       codec frontier: bytes/doc + encode/decode MB/s per
+                    codec (raw/pfor/adaptive/pef) over one merged
+                    segment, and block-max pruning on a BP-reordered vs
+                    natural-order index of a clustered corpus
 
 ``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
 runs a single bench.
@@ -378,6 +383,7 @@ def envelope_measured(smoke=False):
             v, ids = searcher.search(q, 5)
             assert int(np.asarray(ids)[0]) >= 0
             reports[(sp, tp)] = rep
+            last_segs = segs
             emit(f"envelope_measured.{sp}->{tp}",
                  rep["gb_per_min_measured"],
                  f"modeled={rep['gb_per_min_modeled']:.2f}GB/min "
@@ -399,6 +405,17 @@ def envelope_measured(smoke=False):
     _, p, _ = env.calibrate(measured=mruns, measured_weight=0.1)
     emit("envelope_measured.alpha_recalibrated", p.alpha,
          f"calibrate() incl. {len(mruns)} measured runs", ".3f")
+    # bytes-on-media per codec for the committed doc set just recovered:
+    # at least one of the new codecs must land strictly below the
+    # bit-plane (pfor) baseline
+    from repro.storage import codec as sc
+    enc = {c: sum(sum(len(b) for b in sc.encode_segment(s, c).values())
+                  for s in last_segs) for c in sc.CODECS}
+    for c in sc.CODECS:
+        emit(f"envelope_measured.codec_bytes.{c}", enc[c],
+             f"ratio_vs_pfor={enc[c]/enc['pfor']:.3f}")
+    assert min(enc["adaptive"], enc["pef"]) < enc["pfor"], \
+        (f"no codec beat the bit-plane baseline: {enc}")
 
 
 def update_heavy(smoke=False):
@@ -552,12 +569,129 @@ def search_pruned(smoke=False):
                     (f"pruned batched latency must not exceed exhaustive "
                      f"at k=10 ({us_pr:.0f}us > {us_ex:.0f}us)")
         ix.close()
+    # same serving path, one more lever: BP doc-id reassignment at merge
+    # time cuts blocks_scored at equal k and bit-identical scores
+    _bp_reorder_contrast("search_pruned", smoke)
+
+
+def _bp_reorder_contrast(prefix, smoke=False):
+    """Merge-time doc-id reassignment (BP) on a clustered corpus, served.
+    Topic-mixture corpus (the clustered regime real crawls sit in):
+    natural order interleaves topics so every block holds one short
+    high-impact doc and block upper bounds saturate; BP groups each
+    topic's docs, making blocks impact-homogeneous and skippable. Emits
+    ``{prefix}.reorder.*`` rows; asserts bit-identical scores and a
+    strict blocks_scored cut at equal k."""
+    import dataclasses
+    from repro.core.invert import invert_shard
+    from repro.core.merge import merge_segments
+    from repro.core.searcher import ReaderCache
+    from repro.core.segments import segment_from_run
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+
+    spec = dataclasses.replace(CW09B_SMALL, n_topics=8, doc_len_sigma=0.3)
+    per, nb, dl = (1024 if smoke else 2048), 8, 128
+    corpus = SyntheticCorpus(spec, doc_buffer_len=dl)
+    segs = []
+    for i in range(nb):
+        run = invert_shard(jnp.asarray(corpus.batch(i, per)), i * per)
+        segs.append(segment_from_run(
+            {k: np.asarray(getattr(run, k)) for k in run._fields},
+            np.arange(i * per, (i + 1) * per), np.asarray(run.doc_len)))
+    m_nat = merge_segments(segs)
+    t0 = time.perf_counter()
+    m_re = merge_segments(segs, reorder=True)
+    t_bp = time.perf_counter() - t0
+    # heavy single-term queries whose postings span many blocks — the
+    # query shape where block skipping (and hence doc order) matters
+    tok = corpus.batch(0, 1024)
+    vals, counts = np.unique(tok[tok > 0], return_counts=True)
+    heavy = vals[np.argsort(-counts)[:16]]
+    rng = np.random.default_rng(7)
+    B = 8
+    q = np.full((B, 2), -1, np.int32)
+    q[:, 0] = rng.choice(heavy, B, replace=False)
+
+    def serve(seg):
+        s = ReaderCache(prune=True).refresh([seg])
+        v, _ = s.search_batched(q, 10)
+        return np.asarray(v), s.prune_stats
+
+    v_nat, st_nat = serve(m_nat)
+    v_re, st_re = serve(m_re)
+    assert np.array_equal(v_nat, v_re), \
+        "BP-reordered scores diverged from the natural-order index"
+    assert st_re.blocks_scored < st_nat.blocks_scored, \
+        (f"reordering must cut scored blocks "
+         f"({st_re.blocks_scored} >= {st_nat.blocks_scored})")
+    emit(f"{prefix}.reorder.blocks_scored_natural", st_nat.blocks_scored,
+         f"candidate={st_nat.blocks_candidate} "
+         f"survived={st_nat.blocks_survived}")
+    emit(f"{prefix}.reorder.blocks_scored_bp", st_re.blocks_scored,
+         f"survived={st_re.blocks_survived} "
+         f"scored_ratio={st_re.blocks_scored/st_nat.blocks_scored:.2f} "
+         f"bp_wall_s={t_bp:.1f} postings={m_nat.n_postings} "
+         f"bit_identical=True")
+
+
+def compression(smoke=False):
+    """The compression frontier, measured: every registered codec
+    encodes + decodes one merged CW09B-shaped segment (bytes/doc, MB/s,
+    bit-identical round-trip asserted), with the doc-id-gap stream
+    broken out — partitioned Elias-Fano must beat the raw baseline
+    there. Then merge-time doc-id reassignment (BP) on a clustered
+    (topic-mixture) corpus: the same batched queries served off the
+    natural-order and the BP-reordered merge must return bit-identical
+    scores while the reordered index scores strictly fewer blocks."""
+    import dataclasses
+    from repro.core.invert import invert_shard
+    from repro.core.merge import merge_segments
+    from repro.core.searcher import ReaderCache
+    from repro.core.segments import segment_from_run
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+    from repro.storage import codec as sc
+
+    # --- per-codec bytes on media + encode/decode throughput ---------
+    seg = _cw09b_segment(n_docs=1024 if smoke else 2048, doc_len=128)
+    stream_bytes = 8.0 * (2 * seg.n_terms + 2 * seg.n_postings
+                          + len(seg.positions) + 2 * seg.n_docs)
+    df = np.diff(seg.term_start).astype(np.int64)
+    doc_delta = sc._rebase_encode(seg.docs, seg.term_start[:-1], df)
+    sizes, doc_bytes = {}, {}
+    for codec in sc.CODECS:
+        t0 = time.perf_counter()
+        files = sc.encode_segment(seg, codec)
+        t_enc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dec = sc.decode_segment(files)
+        t_dec = time.perf_counter() - t0
+        for f in ("terms", "term_start", "docs", "tf", "positions",
+                  "pos_start", "doc_ids", "doc_len"):
+            assert np.array_equal(getattr(dec, f), getattr(seg, f)), \
+                f"codec {codec!r} round-trip diverged on {f}"
+        sizes[codec] = sum(len(b) for b in files.values())
+        doc_bytes[codec] = len(sc._enc_stream(doc_delta, codec))
+        emit(f"compression.{codec}.bytes_per_doc",
+             sizes[codec] / seg.n_docs,
+             f"docid_gap_bytes={doc_bytes[codec]} "
+             f"enc={stream_bytes/t_enc/1e6:.0f}MB/s "
+             f"dec={stream_bytes/t_dec/1e6:.0f}MB/s", ".1f")
+    assert doc_bytes["pef"] < doc_bytes["raw"], \
+        (f"PEF doc-id gaps must beat the raw baseline "
+         f"({doc_bytes['pef']} >= {doc_bytes['raw']})")
+    emit("compression.pef_docid_ratio_vs_raw",
+         doc_bytes["pef"] / doc_bytes["raw"],
+         f"pfor={doc_bytes['pfor']/doc_bytes['raw']:.3f} "
+         f"adaptive={doc_bytes['adaptive']/doc_bytes['raw']:.3f}", ".3f")
+
+    # --- BP doc-id reassignment on a clustered corpus ----------------
+    _bp_reorder_contrast("compression", smoke)
 
 
 BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
            invert_kernel, build_reader, search_batched, searcher_refresh,
            merge_throughput, index_gb_per_min, envelope_measured,
-           update_heavy, search_pruned]
+           update_heavy, search_pruned, compression]
 SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
                  invert_kernel, merge_throughput, index_gb_per_min]
 

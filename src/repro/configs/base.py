@@ -207,10 +207,18 @@ class EnvelopeConfig:
     # envelope.PROFILE_TO_MEDIA maps them onto the paper's Table-1 media
     source_media: str = "nas"
     target_media: str = "ssd"
-    # segment codec for the on-disk format: "pfor" (delta + lane-blocked
-    # bit-planes, the compressed default) or "raw" (int64 streams, the
-    # incompressible baseline the envelope benchmarks compare against)
+    # segment codec for the on-disk format (storage.codec.CODECS):
+    # "pfor" (delta + lane-blocked bit-planes, the compressed default),
+    # "raw" (int64 streams, the incompressible baseline the envelope
+    # benchmarks compare against), "adaptive" (per-32-value-sub-block
+    # adaptive bit widths), or "pef" (partitioned Elias-Fano over doc-id
+    # gap lists — the sparse-postings frontier)
     codec: str = "pfor"
+    # run recursive graph bisection (BP) over each merge output and fold
+    # the resulting doc-id permutation into the merged segment's block
+    # layout: scores and results are bit-identical, but blocks become
+    # impact-homogeneous so block-max pruning skips more of them
+    reorder_on_merge: bool = False
     # "raw": 3x int32 per entry over the wire; "packed2": (local_doc|pos,
     # term) = 2 words, doc rebased from the source-device row after the
     # all_to_all (EXPERIMENTS.md §Perf — the paper's compression insight

@@ -176,7 +176,9 @@ class DistributedIndexer:
         from repro.core.flush import FlushPolicy
         self.media = self.media or env.MEDIA
         self.params = self.params or env.EnvelopeParams()
-        self.merger = MergeDriver(fanout=self.cfg.merge_fanout)
+        self.merger = MergeDriver(
+            fanout=self.cfg.merge_fanout,
+            reorder_on_merge=getattr(self.cfg, "reorder_on_merge", False))
         if self.target_dir is not None:
             from repro.storage.commit import SegmentStore
             self.store, recovered = SegmentStore.open(
@@ -513,6 +515,8 @@ class DistributedIndexer:
             "bytes_written_measured": tgt_dir.bytes_written,
             "bytes_read_merge_measured": self.store.bytes_encoded_read,
             "index_bytes_encoded": self.store.encoded_bytes_live(live),
+            "codec": self.store.codec,
+            "index_bytes_by_file": self.store.encoded_bytes_by_suffix(live),
             "t_source_busy_s": t_src,
             "t_target_busy_s": t_tgt,
             "t_io_measured_s": t_io,

@@ -122,7 +122,100 @@ def merge_segments_sorted(segs: list[Segment]) -> Segment:
                    generation=max(s.generation for s in segs) + 1)
 
 
-def merge_segments(segs: list[Segment]) -> Segment:
+def _tcost(deg: np.ndarray, n: int) -> np.ndarray:
+    """Per-term log-gap cost model of the BP objective: a term with
+    ``deg`` of its postings inside a partition of ``n`` docs costs
+    ``deg * log2(n / (deg + 1))`` bits of expected doc gaps."""
+    deg = np.maximum(deg, 0).astype(np.float64)
+    return deg * np.log2(max(n, 1) / (deg + 1.0))
+
+
+def reassign_doc_ids(seg: Segment, max_iters: int = 8,
+                     min_partition: int = 128) -> np.ndarray | None:
+    """Recursive graph bisection (BP: Dhulipala et al., carried into the
+    Pibiri & Venturini compression survey) over the segment's term-doc
+    matrix: cluster docs that share terms so per-term posting runs get
+    smaller local-id gaps AND skewed per-block impact bounds (similar
+    docs land in the same 128-block, so MaxScore prunes the others).
+
+    The adjacency keeps only DISCRIMINATING terms — df >= 2 (singletons
+    carry no co-occurrence signal) and df <= n_docs/2 (ubiquitous terms
+    split nothing and dominate the posting count) — the standard BP
+    degree filter; the permutation still reassigns every doc. Refinement
+    passes decay with recursion depth (the top split moves the most
+    cost), and recursion stops at the 128-lane block size: permuting
+    WITHIN a block cannot change any block statistic.
+
+    Returns a (D,) permutation of LOCAL doc slots — ``perm[rank] = old
+    local index`` — or None when the segment is too small to benefit.
+    Deterministic: stable sorts everywhere, no RNG."""
+    D = seg.n_docs
+    if D <= min_partition or seg.n_postings == 0:
+        return None
+    local = np.searchsorted(seg.doc_ids, seg.docs)
+    df = np.diff(seg.term_start)
+    tix = np.repeat(np.arange(seg.n_terms), df).astype(np.int64)
+    keep = ((df >= 2) & (df <= max(D // 2, 2)))[tix]
+    local_k, tix_k = local[keep], tix[keep]
+    if local_k.size == 0:
+        return None
+    by_doc = np.argsort(local_k, kind="stable")
+    adj_t = tix_k[by_doc]                   # doc-major term adjacency
+    counts = np.bincount(local_k, minlength=D).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    T = seg.n_terms
+
+    def doc_terms(docs):
+        """(terms, owner) concatenated adjacency for a doc set."""
+        c = counts[docs]
+        total = int(c.sum())
+        if total == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        pos = np.arange(total) - np.repeat(np.cumsum(c) - c, c)
+        return adj_t[np.repeat(starts[docs], c) + pos], \
+            np.repeat(np.arange(len(docs)), c)
+
+    order = np.arange(D)
+    stack = [(0, D, 0)]
+    while stack:
+        lo, hi, depth = stack.pop()
+        half = (hi - lo) // 2
+        if half == 0:
+            continue
+        left, right = order[lo:lo + half].copy(), order[lo + half:hi].copy()
+        nl, nr = len(left), len(right)
+        for _ in range(max(2, max_iters - depth)):
+            # rebuild the halves' adjacency each pass: swapped docs must
+            # be attributed to their NEW side before the next gain sweep
+            tl, ol = doc_terms(left)
+            tr, orr = doc_terms(right)
+            deg_l = np.bincount(tl, minlength=T).astype(np.int64)
+            deg_r = np.bincount(tr, minlength=T).astype(np.int64)
+            # per-term gain of moving ONE posting across, both directions
+            cost_l, cost_r = _tcost(deg_l, nl), _tcost(deg_r, nr)
+            d_l2r = (cost_l + cost_r) \
+                - (_tcost(deg_l - 1, nl) + _tcost(deg_r + 1, nr))
+            d_r2l = (cost_l + cost_r) \
+                - (_tcost(deg_l + 1, nl) + _tcost(deg_r - 1, nr))
+            gain_l = np.bincount(ol, weights=d_l2r[tl], minlength=nl)
+            gain_r = np.bincount(orr, weights=d_r2l[tr], minlength=nr)
+            il = np.argsort(-gain_l, kind="stable")
+            ir = np.argsort(-gain_r, kind="stable")
+            pair = min(nl, nr)
+            swap = gain_l[il[:pair]] + gain_r[ir[:pair]] > 1e-9
+            n_swap = int(np.cumprod(swap).sum())  # leading True run only
+            if n_swap == 0:
+                break
+            sl, sr = il[:n_swap], ir[:n_swap]
+            left[sl], right[sr] = right[sr].copy(), left[sl].copy()
+        order[lo:lo + half], order[lo + half:hi] = left, right
+        if half > min_partition:
+            stack.append((lo, lo + half, depth + 1))
+            stack.append((lo + half, hi, depth + 1))
+    return order
+
+
+def merge_segments(segs: list[Segment], reorder: bool = False) -> Segment:
     """Streaming O(P) k-way merge: exact union of the inputs' LIVE
     postings, bit-identical to ``merge_segments_sorted`` (which folds
     tombstones naively first) but without the O(P log P) re-sort and
@@ -150,10 +243,20 @@ def merge_segments(segs: list[Segment]) -> Segment:
     ``repeat(dst_start - src_start) + arange`` index per input
     (``repeat(a, l) + repeat(b, l) == repeat(a + b, l)``), masked down to
     the kept runs. The output carries no deletes — merging IS compaction.
+
+    ``reorder=True`` additionally runs recursive graph bisection over the
+    merge output's term-doc matrix (``reassign_doc_ids``) and attaches
+    the resulting LOCAL-slot permutation as metadata: logical arrays —
+    and therefore every parity oracle and external doc id — are
+    bit-identical to the unreordered merge; only block layout downstream
+    (``build_block_index``) consumes the permutation.
     """
     if len(segs) == 1:
         # no scatter to fold the mask into: compact naively, then bump
-        return _bump_single(drop_deleted(segs[0]))
+        merged = _bump_single(drop_deleted(segs[0]))
+        if reorder:
+            merged = replace(merged, reorder=reassign_doc_ids(merged))
+        return merged
     # order inputs by doc range (empty inputs first; they contribute nothing)
     segs = sorted(segs, key=lambda s: int(s.doc_ids[0]) if s.n_docs else -1)
     doc_ids = np.concatenate([s.live_doc_ids() for s in segs])
@@ -230,10 +333,13 @@ def merge_segments(segs: list[Segment]) -> Segment:
             dst = np.repeat(run_dst - s.pos_start[:-1],
                             s.tf) + np.arange(len(s.positions))
             positions[dst[elem_keep]] = s.positions[elem_keep]
-    return Segment(terms=uterms, term_start=term_start, docs=docs, tf=tf,
-                   positions=positions, pos_start=pos_start,
-                   doc_ids=doc_ids, doc_len=doc_len,
-                   generation=max(s.generation for s in segs) + 1)
+    merged = Segment(terms=uterms, term_start=term_start, docs=docs, tf=tf,
+                     positions=positions, pos_start=pos_start,
+                     doc_ids=doc_ids, doc_len=doc_len,
+                     generation=max(s.generation for s in segs) + 1)
+    if reorder:
+        merged = replace(merged, reorder=reassign_doc_ids(merged))
+    return merged
 
 
 @dataclass(eq=False)
@@ -298,6 +404,11 @@ class MergeDriver:
     """
 
     fanout: int = 10
+    # cfg.reorder_on_merge: every merge output additionally gets a BP
+    # doc-id reassignment permutation (reassign_doc_ids) — expensive
+    # write-path work the read path consumes for free (clustered blocks
+    # => harder MaxScore pruning)
+    reorder_on_merge: bool = False
     tiers: dict = field(default_factory=dict)
     bytes_written: int = 0      # every segment write (flush + each merge)
     bytes_read_merge: int = 0   # merge re-reads
@@ -518,7 +629,10 @@ class MergeDriver:
         any thread; the expensive part runs outside the lock)."""
         t0 = time.perf_counter()
         try:
-            merged = merge_segments(work.batch)
+            # keyword only when the knob is on: tests monkeypatch
+            # merge_segments with stubs that take the positional form
+            merged = merge_segments(work.batch, reorder=True) \
+                if self.reorder_on_merge else merge_segments(work.batch)
             dt = time.perf_counter() - t0
             # memoized byte accounting: off the lock and off the timer
             # (merge_wall_s measures the merge itself, not its accounting)
@@ -558,6 +672,37 @@ class MergeDriver:
             # a commit snapshot taken pre-install still references them)
             self.store.mark_superseded(work.batch)
         return merged
+
+    def expunge_deletes(self, min_ratio: float = 0.0) -> Segment | None:
+        """Lucene's ``expungeDeletes`` shape: rewrite the single
+        churn-heaviest live segment — the tier-resident segment with the
+        highest tombstone ratio strictly above ``min_ratio`` — WITHOUT a
+        force-merge. The segment is claimed as a 1-way ``_MergeWork`` at
+        ``tier - 1`` so ``run_merge``'s install-at-``work.tier + 1`` puts
+        the compacted rewrite back on the segment's own tier; the 1-way
+        merge path (``drop_deleted`` + bump) does the compaction, and the
+        normal merge machinery supplies store IO accounting, IO
+        throttling, deferred mid-rewrite deletes and supersede marking
+        for free. Returns the compacted segment, or None when no segment
+        qualifies."""
+        with self._lock:
+            best = None
+            for tier, segs in self.tiers.items():
+                for i, s in enumerate(segs):
+                    if not s.n_docs or not s.n_deleted:
+                        continue
+                    ratio = s.n_deleted / s.n_docs
+                    if ratio > min_ratio and (best is None
+                                              or ratio > best[0]):
+                        best = (ratio, tier, i)
+            if best is None:
+                return None
+            _, tier, i = best
+            seg = self.tiers[tier].pop(i)
+            work = _MergeWork(tier - 1, [seg])
+            self._in_flight.append(work)
+            self._routes = None
+        return self.run_merge(work)
 
     def restore_work(self, work: _MergeWork):
         """Un-claim a merge that could not run: its batch goes back to the

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bm25_blockmax.ops import bm25_blocks
+from repro.kernels.bm25_blockmax.ops import bm25_blocks, bm25_blocks_compact
 from repro.kernels.postings_pack import ops as pack_ops
 
 BLOCK = 128
@@ -92,6 +92,20 @@ class BlockMaxIndex:
     # indexes built before this field existed (bounds fall back to dl=0).
     min_dl: jnp.ndarray = None    # (NB,)
     avgdl: float = 1.0            # segment-local mean live doc length
+    # COMPACT storage layout (fused decompress-and-score): instead of the
+    # fixed-stride (NB, 32, 4) buffers above, keep only the live bit-plane
+    # rows — the exact bytes the storage codec writes — plus per-block row
+    # offsets; selected blocks are expanded inside the scoring computation
+    # (Pallas grid on TPU, jnp gather on CPU). When set, ``packed_docs``/
+    # ``packed_tf`` are None: the decoded form is never device-resident.
+    cplanes_docs: jnp.ndarray = None  # (sum(bw_docs) + 32, 4) uint32
+    coff_docs: jnp.ndarray = None     # (NB,) first row of each block
+    cplanes_tf: jnp.ndarray = None    # (sum(bw_tf) + 32, 4) uint32
+    coff_tf: jnp.ndarray = None       # (NB,)
+
+    @property
+    def compact(self) -> bool:
+        return self.cplanes_docs is not None
 
     def packed_bytes(self) -> float:
         return float(pack_ops.packed_bytes(self.bw_docs)
@@ -167,6 +181,26 @@ def _gather_term_blocks(index: BlockMaxIndex, q_terms, max_blocks=None):
     return rows, found, bidx, in_term
 
 
+def _decode_score_blocks(index: BlockMaxIndex, flat, idf_flat, act_flat):
+    """Decode + score a flat (S,) list of block ids under either storage
+    layout — the one seam both the dense grid and the compacted survivor
+    scorer go through. Fixed-stride indexes gather the pre-expanded
+    (S, 32, 4) buffers; compact indexes hand the compressed rows plus
+    per-block offsets to the fused decompress-and-score op, which
+    expands exactly the selected blocks inside the computation (Pallas
+    grid on TPU, per-survivor jnp gather on CPU). Identical (docids,
+    tf, num) either way — asserted in tests."""
+    if index.compact:
+        return bm25_blocks_compact(
+            index.cplanes_docs, index.coff_docs[flat], index.bw_docs[flat],
+            index.first_doc[flat], index.cplanes_tf, index.coff_tf[flat],
+            index.bw_tf[flat], idf_flat, act_flat, k1=index.k1)
+    return bm25_blocks(
+        index.packed_docs[flat], index.bw_docs[flat], index.first_doc[flat],
+        index.packed_tf[flat], index.bw_tf[flat], idf_flat, act_flat,
+        k1=index.k1)
+
+
 def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block,
                   doc_norm=None):
     """Exact BM25 partial scores for the selected blocks -> (D,) scores.
@@ -179,11 +213,9 @@ def _score_blocks(index: BlockMaxIndex, bidx, active, idf_per_block,
     if doc_norm is None:
         doc_norm = index.doc_norm
     flat = bidx.reshape(-1)
-    docids, tf, num = bm25_blocks(
-        index.packed_docs[flat], index.bw_docs[flat], index.first_doc[flat],
-        index.packed_tf[flat], index.bw_tf[flat],
-        idf_per_block.reshape(-1), active.reshape(-1).astype(jnp.int32),
-        k1=index.k1)
+    docids, tf, num = _decode_score_blocks(
+        index, flat, idf_per_block.reshape(-1),
+        active.reshape(-1).astype(jnp.int32))
     denom = tf + doc_norm[docids]
     s = jnp.where(tf > 0, num / jnp.maximum(denom, 1e-9), 0.0)
     # docids are in-bounds by construction (local ids; inactive blocks -> 0)
@@ -351,10 +383,8 @@ def score_survivors(index: BlockMaxIndex, cb_ids, cb_idf, cb_act, cb_row,
     never the candidate count."""
     if doc_norm is None:
         doc_norm = index.doc_norm
-    docids, tf, num = bm25_blocks(
-        index.packed_docs[cb_ids], index.bw_docs[cb_ids],
-        index.first_doc[cb_ids], index.packed_tf[cb_ids],
-        index.bw_tf[cb_ids], cb_idf, cb_act.astype(jnp.int32), k1=index.k1)
+    docids, tf, num = _decode_score_blocks(index, cb_ids, cb_idf,
+                                           cb_act.astype(jnp.int32))
     denom = tf + doc_norm[docids]
     s = jnp.where(tf > 0, num / jnp.maximum(denom, 1e-9), 0.0)
     # row-major survivor order keeps each row's scatter contributions in

@@ -63,6 +63,7 @@ from repro.core.query import (BLOCK, BlockMaxIndex, PruneStats,
                               score_survivors)
 from repro.core.segments import Segment, live_posting_stats
 from repro.kernels.postings_pack import ops as pack_ops
+from repro.kernels.postings_pack import ref as pack_ref
 
 
 # --------------------------------------------------------------------------
@@ -72,8 +73,17 @@ from repro.kernels.postings_pack import ops as pack_ops
 def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
                   first_doc: np.ndarray, max_tf: np.ndarray,
                   term_nb: np.ndarray, df: np.ndarray,
-                  k1: float, b: float, min_dl: np.ndarray) -> BlockMaxIndex:
-    """Shared tail of both builders: pack blocks + assemble the index."""
+                  k1: float, b: float, min_dl: np.ndarray,
+                  dl: np.ndarray = None,
+                  compact: bool = False) -> BlockMaxIndex:
+    """Shared tail of both builders: pack blocks + assemble the index.
+
+    ``dl`` is the LOCAL-SLOT-ordered doc-length vector (defaults to the
+    segment's natural order; a reordered build passes the permuted one so
+    slot d's norm describes the doc that actually lives in slot d).
+    ``compact=True`` keeps only the live bit-plane rows + per-block row
+    offsets (the fused decompress-and-score layout) instead of the
+    fixed-stride packed buffers."""
     d_arr = jnp.asarray(np.asarray(deltas, np.uint32))
     t_arr = jnp.asarray(np.asarray(tfs, np.uint32))
     pd, bwd = pack_ops.pack(d_arr)
@@ -81,10 +91,28 @@ def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
 
     n_docs = seg.n_docs
     idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
-    dl = seg.doc_len.astype(np.float64)
+    dl = (seg.doc_len if dl is None else dl).astype(np.float64)
     avgdl = max(dl.mean(), 1.0) if dl.size else 1.0
     doc_norm = k1 * (1.0 - b + b * dl / avgdl)
     tbs = np.concatenate([[0], np.cumsum(term_nb)])
+    extra = {}
+    if compact:
+        # keep only what the storage codec writes: compacted plane rows
+        # (tail-padded with 32 zero rows so in-kernel dynamic 32-row
+        # windows stay in bounds) + each block's first-row offset
+        pad = np.zeros((32, pack_ref.WORDS_PER_PLANE), np.uint32)
+        bwd_np = np.asarray(bwd, np.int64)
+        bwt_np = np.asarray(bwt, np.int64)
+        extra = dict(
+            cplanes_docs=jnp.asarray(np.vstack(
+                [pack_ref.compact_planes(np.asarray(pd), bwd_np), pad])),
+            coff_docs=jnp.asarray(
+                (np.cumsum(bwd_np) - bwd_np).astype(np.int32)),
+            cplanes_tf=jnp.asarray(np.vstack(
+                [pack_ref.compact_planes(np.asarray(pt), bwt_np), pad])),
+            coff_tf=jnp.asarray(
+                (np.cumsum(bwt_np) - bwt_np).astype(np.int32)))
+        pd = pt = None
     return BlockMaxIndex(
         terms=jnp.asarray(seg.terms.astype(np.int32)),
         term_block_start=jnp.asarray(tbs.astype(np.int32)),
@@ -96,11 +124,31 @@ def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
         n_docs=n_docs,
         max_blocks_per_term=int(np.max(term_nb)) if len(term_nb) else 1,
         k1=k1, b=b,
-        min_dl=jnp.asarray(np.asarray(min_dl, np.float32)), avgdl=avgdl)
+        min_dl=jnp.asarray(np.asarray(min_dl, np.float32)), avgdl=avgdl,
+        **extra)
 
 
-def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
-                      ) -> BlockMaxIndex:
+def _local_layout(seg: Segment):
+    """Resolve the segment's LOCAL doc-slot layout: ``(local_docs,
+    tf_stream, dl_local)`` with postings re-sorted within each term by
+    slot. Natural order is the identity (zero-copy); a BP-reordered
+    segment (``seg.reorder``) permutes the slot space — slot r holds the
+    doc at original local index ``reorder[r]`` — so the per-term posting
+    runs are re-sorted by slot rank and the doc-length vector follows
+    the slots. The segment's logical arrays are untouched."""
+    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
+    if seg.reorder is None:
+        return local_docs, seg.tf, seg.doc_len
+    rank_of = np.empty(seg.n_docs, np.int64)
+    rank_of[seg.reorder] = np.arange(seg.n_docs)
+    local_r = rank_of[local_docs]
+    tix = np.repeat(np.arange(seg.n_terms), np.diff(seg.term_start))
+    perm = np.lexsort((local_r, tix))   # per-term sort by new slot rank
+    return local_r[perm], seg.tf[perm], seg.doc_len[seg.reorder]
+
+
+def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4,
+                      compact: bool = False) -> BlockMaxIndex:
     """Block-align each term's postings and pack them — vectorized, O(P).
 
     Every term starts a fresh block, so block starts tile the postings
@@ -108,10 +156,17 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
     ``merge.py``) enumerates them, and one scatter places each posting at
     its (block, lane) slot. Pad lanes stay 0 — identical to the scalar
     reference, where padding repeats the last doc id (delta 0) with tf 0.
+
+    A segment carrying a BP ``reorder`` permutation gets its block layout
+    built over the REORDERED local slot space (clustered similar docs →
+    homogeneous per-block (max_tf, min_dl) bounds → harder MaxScore
+    pruning); scores and returned absolute doc ids are unchanged — only
+    which docs share a block moves. ``compact=True`` builds the fused
+    decompress-and-score storage layout (see ``_finish_index``).
     """
     assert np.all(np.diff(seg.doc_ids) > 0), \
         "Segment.doc_ids must be sorted unique (np.searchsorted relies on it)"
-    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
+    local_docs, tf_stream, dl_local = _local_layout(seg)
     df = np.diff(seg.term_start).astype(np.int64)
     term_nb = -(-df // BLOCK)                     # ceil: blocks per term
     nb_total = int(term_nb.sum())
@@ -120,7 +175,8 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
                              np.zeros((1, BLOCK), np.int64),
                              np.zeros(1, np.int64), np.zeros(1, np.int64),
                              np.zeros(1, np.int64), df, k1, b,
-                             np.zeros(1, np.int64))
+                             np.zeros(1, np.int64), dl=dl_local,
+                             compact=compact)
 
     n_post = len(seg.docs)
     block_term = np.repeat(np.arange(seg.n_terms), term_nb)   # (NB,)
@@ -136,33 +192,35 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4
     deltas = np.zeros(nb_total * BLOCK, np.uint32)  # pad lanes stay 0
     deltas[flat_pos] = d
     tfs = np.zeros(nb_total * BLOCK, np.uint32)
-    tfs[flat_pos] = seg.tf
+    tfs[flat_pos] = tf_stream
     return _finish_index(seg, deltas.reshape(nb_total, BLOCK),
                          tfs.reshape(nb_total, BLOCK), local_docs[blk_s],
-                         np.maximum.reduceat(seg.tf, blk_s), term_nb,
+                         np.maximum.reduceat(tf_stream, blk_s), term_nb,
                          df, k1, b,
-                         np.minimum.reduceat(seg.doc_len[local_docs], blk_s))
+                         np.minimum.reduceat(dl_local[local_docs], blk_s),
+                         dl=dl_local, compact=compact)
 
 
 def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
                            ) -> BlockMaxIndex:
     """Scalar reference builder (the original per-term/per-block Python
     loop). Kept as the parity oracle for tests and the build benchmark —
-    not used on any production path."""
-    local_docs = np.searchsorted(seg.doc_ids, seg.docs)
+    not used on any production path. Honors ``seg.reorder`` through the
+    same ``_local_layout`` resolution the vectorized builder uses."""
+    local_docs, tf_stream, dl_local = _local_layout(seg)
     df = np.diff(seg.term_start).astype(np.int64)
     blocks_deltas, blocks_tf, first_doc, max_tf, term_nb, min_dl = \
         [], [], [], [], [], []
     for ti in range(seg.n_terms):
         s, e = int(seg.term_start[ti]), int(seg.term_start[ti + 1])
         docs = local_docs[s:e]
-        tfs = seg.tf[s:e]
+        tfs = tf_stream[s:e]
         nb = -(-len(docs) // BLOCK)
         term_nb.append(nb)
         for bi in range(nb):
             chunk = docs[bi * BLOCK:(bi + 1) * BLOCK]
             tchunk = tfs[bi * BLOCK:(bi + 1) * BLOCK]
-            min_dl.append(seg.doc_len[chunk].min())
+            min_dl.append(dl_local[chunk].min())
             pad = BLOCK - len(chunk)
             if pad:
                 chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
@@ -178,7 +236,7 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
     return _finish_index(seg, np.stack(blocks_deltas), np.stack(blocks_tf),
                          np.asarray(first_doc), np.asarray(max_tf),
                          np.asarray(term_nb, np.int64), df, k1, b,
-                         np.asarray(min_dl))
+                         np.asarray(min_dl), dl=dl_local)
 
 
 # --------------------------------------------------------------------------
@@ -225,24 +283,34 @@ class SegmentReader:
     term_min_dl_np: np.ndarray = None  # (T,) shortest doc length per term
     live: object = None           # (D,) bool device mask; None = no deletes
     live_doc_len: np.ndarray = None  # host doc lengths of live docs only
+    doc_len_local: np.ndarray = None  # (D,) doc lengths in LOCAL slot order
     _fns: dict = field(default_factory=dict)
 
     @classmethod
-    def open(cls, seg: Segment, k1: float = 0.9, b: float = 0.4
-             ) -> "SegmentReader":
+    def open(cls, seg: Segment, k1: float = 0.9, b: float = 0.4,
+             compact: bool = False) -> "SegmentReader":
         df_full = np.diff(seg.term_start).astype(np.int64)
-        index = build_block_index(seg, k1, b)
+        index = build_block_index(seg, k1, b, compact=compact)
         tmax, tmin = _term_impacts(index, seg.n_terms)
+        # everything indexed by LOCAL doc slot follows the BP permutation
+        # when the segment carries one; the logical arrays stay natural
+        r = seg.reorder
+        doc_ids_local = seg.doc_ids if r is None else seg.doc_ids[r]
+        live_local = None
+        if seg.has_deletes:
+            live_np = ~seg.deletes
+            live_local = jnp.asarray(live_np if r is None else live_np[r])
         return cls(seg=seg, index=index,
-                   doc_map=jnp.asarray(seg.doc_ids.astype(np.int32)),
+                   doc_map=jnp.asarray(doc_ids_local.astype(np.int32)),
                    terms_np=np.asarray(seg.terms),
                    df_np=_live_term_df(seg),
                    nb_np=-(-df_full // BLOCK),
                    term_max_tf_np=tmax, term_min_dl_np=tmin,
-                   live=(jnp.asarray(~seg.deletes) if seg.has_deletes
-                         else None),
+                   live=live_local,
                    live_doc_len=(seg.doc_len[~seg.deletes]
-                                 if seg.has_deletes else seg.doc_len))
+                                 if seg.has_deletes else seg.doc_len),
+                   doc_len_local=(seg.doc_len if r is None
+                                  else seg.doc_len[r]))
 
     def reopen(self, seg: Segment) -> "SegmentReader":
         """Same postings core (``seg.base_id == self.seg.base_id``), new
@@ -251,14 +319,20 @@ class SegmentReader:
         masked evaluators, not baked into their traces) — a delete costs
         one O(P) host pass for live stats instead of an index rebuild."""
         assert seg.base_id == self.seg.base_id, "reopen needs the same core"
+        live_local = None
+        if seg.has_deletes:
+            live_np = ~seg.deletes
+            live_local = jnp.asarray(live_np if seg.reorder is None
+                                     else live_np[seg.reorder])
         return SegmentReader(
             seg=seg, index=self.index, doc_map=self.doc_map,
             terms_np=self.terms_np, df_np=_live_term_df(seg),
             nb_np=self.nb_np, term_max_tf_np=self.term_max_tf_np,
             term_min_dl_np=self.term_min_dl_np,
-            live=(jnp.asarray(~seg.deletes) if seg.has_deletes else None),
+            live=live_local,
             live_doc_len=(seg.doc_len[~seg.deletes] if seg.has_deletes
                           else seg.doc_len),
+            doc_len_local=self.doc_len_local,
             _fns=self._fns)
 
     @property
@@ -460,9 +534,13 @@ class IndexSearcher:
                   else np.zeros(0, np.float64))
         self.n_docs = int(all_dl.size)
         self.avgdl = max(all_dl.mean(), 1.0) if all_dl.size else 1.0
+        # norms are indexed by LOCAL doc slot at scoring time, so a
+        # BP-reordered segment needs the permuted doc-length vector
         self._doc_norms = [
             jnp.asarray((self.k1 * (1.0 - self.b + self.b *
-                         r.seg.doc_len.astype(np.float64) / self.avgdl)
+                         (r.doc_len_local if r.doc_len_local is not None
+                          else r.seg.doc_len).astype(np.float64)
+                         / self.avgdl)
                          ).astype(np.float32))
             for r in self.readers]
         # merged (term, df) table, built once per snapshot: doc spaces are
@@ -644,6 +722,7 @@ class ReaderCache:
     k1: float = 0.9
     b: float = 0.4
     prune: bool = True   # searchers serve the compacted pruned path
+    compact: bool = False  # fused decompress-and-score index layout
     builds: int = 0
     hits: int = 0
     reopens: int = 0   # bitmap-only reader swaps (shared core)
@@ -672,7 +751,8 @@ class ReaderCache:
                 fresh[seg.seg_id] = core.reopen(seg)
                 n_reopened += 1
             else:
-                fresh[seg.seg_id] = SegmentReader.open(seg, self.k1, self.b)
+                fresh[seg.seg_id] = SegmentReader.open(
+                    seg, self.k1, self.b, compact=self.compact)
         with self._lock:
             self.builds += len(fresh) - n_reopened
             self.reopens += n_reopened

@@ -63,6 +63,14 @@ class Segment:
     # doc_ids (True = deleted). Never mutated in place — ``with_deletes``
     # is the only writer and it copies.
     deletes: np.ndarray = None
+    # merge-time doc-id reassignment (recursive graph bisection): None =
+    # natural order; else a (D,) permutation of LOCAL doc slots,
+    # ``reorder[rank] = original local index``. The logical arrays above
+    # stay in natural (absolute doc id) order — consumers that lay out
+    # blocks (build_block_index) permute the local id space instead, so
+    # external doc ids, delete routing and the disjoint-range invariant
+    # are untouched.
+    reorder: np.ndarray = None
     # process-unique identity: segments are immutable, so readers built from
     # a segment can be cached under this key across refreshes (id() would be
     # reusable after GC and is not safe as a cache key).

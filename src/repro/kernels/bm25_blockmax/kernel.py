@@ -29,6 +29,18 @@ the kernel (the caller finishes ``score += num / (tf + doc_norm[doc])``).
 ``ref.py`` is the pure-jnp oracle; parity is asserted in interpret mode
 on CPU (tests/test_kernels.py) and the dispatcher (``ops.py``) compiles
 the real kernel only on TPU.
+
+``bm25_blocks_compact_pallas`` is the fused DECOMPRESS-and-score
+variant: the index keeps only the compacted bit-plane rows (``sum(bw)``
+rows of 4 words — byte-identical to what the storage codec writes, see
+``postings_pack.ref.compact_planes``), and each grid step expands its
+blocks' planes from those rows INSIDE the kernel via per-block dynamic
+32-row window loads. The fixed-stride (NB, 32, 4) decoded form never
+materializes in HBM — compressed rows in, scores out. The rows array
+rides a constant index map (resident once for the whole grid) and is
+tail-padded with 32 zero rows so the dynamic windows of the last block
+stay in bounds; planes past a block's width load the NEXT block's rows,
+which ``_unpack_bits``'s width mask zeroes before they contribute.
 """
 from __future__ import annotations
 
@@ -98,6 +110,83 @@ def _bm25_kernel_partials(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref,
     part = jnp.where(act & (tf > 0), num / (tf + min_norm), 0.0)
     part_ref[...] = jnp.maximum(part_ref[...],
                                 part.max(axis=0, keepdims=True))
+
+
+def _expand_rows(cpl_ref, off, R):
+    """In-kernel expansion of compacted bit-plane rows: R dynamic
+    (32, 4)-row window loads from the resident rows array. Garbage
+    planes (rows past a narrow block's width belong to the next block)
+    are NOT masked here — ``_unpack_bits``'s ``plane < bw`` mask already
+    zeroes them before they contribute."""
+    def body(i, acc):
+        rows = pl.load(cpl_ref, (pl.ds(off[i], 32), slice(None)))
+        return jax.lax.dynamic_update_slice(acc, rows[None], (i, 0, 0))
+    return jax.lax.fori_loop(
+        0, R, body, jnp.zeros((R, 32, BLOCK // 32), jnp.uint32))
+
+
+def _bm25_compact_kernel(cpld_ref, cplt_ref, coffd_ref, bwd_ref, first_ref,
+                         cofft_ref, bwt_ref, idf_ref, act_ref,
+                         doc_ref, tf_ref, num_ref, *, k1):
+    """Fused decompress-and-score grid step: expand this step's blocks
+    from the compressed rows, then the shared unpack/prefix-sum/score
+    body. Mirrors ``_bm25_core`` with the expansion fused in front."""
+    R = coffd_ref.shape[0]
+    pd = _expand_rows(cpld_ref, coffd_ref[...], R)
+    pt = _expand_rows(cplt_ref, cofft_ref[...], R)
+    deltas = _unpack_bits(pd, bwd_ref[...], R).astype(jnp.int32)
+    acc = deltas
+    shift = 1
+    while shift < BLOCK:
+        shifted = jnp.pad(acc, ((0, 0), (shift, 0)))[:, :BLOCK]
+        acc = acc + shifted
+        shift *= 2
+    docids = first_ref[...][:, None] + acc
+    tf = _unpack_bits(pt, bwt_ref[...], R).astype(jnp.float32)
+    num = idf_ref[...][:, None] * (k1 + 1.0) * tf
+    act = (act_ref[...] > 0)[:, None]
+    doc_ref[...] = jnp.where(act, docids, 0)
+    tf_ref[...] = jnp.where(act, tf, 0.0)
+    num_ref[...] = jnp.where(act, num, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k1", "block_rows", "interpret"))
+def bm25_blocks_compact_pallas(cplanes_docs, coff_docs, bw_docs, first_doc,
+                               cplanes_tf, coff_tf, bw_tf, idf, active, *,
+                               k1: float = 0.9,
+                               block_rows: int = DEFAULT_BLOCK_ROWS,
+                               interpret: bool = True):
+    """-> (docids, tf, num) each (S, 128), S the compacted survivor
+    count, decoding the selected blocks from the COMPACT rows arrays
+    inside the grid. ``cplanes_docs``/``cplanes_tf`` are the whole
+    index's (P, 4) compressed plane rows (tail-padded with 32 zero rows
+    by the builder); ``coff_*``/``bw_*``/``first_doc``/``idf``/
+    ``active`` are (S,) per-selected-block vectors."""
+    nb = coff_docs.shape[0]
+    block_rows = min(block_rows, nb)
+    assert nb % block_rows == 0, (nb, block_rows)
+    grid = (nb // block_rows,)
+    vec = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
+    lanes = lambda: pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))
+    rows = lambda n: pl.BlockSpec((n, BLOCK // 32), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_bm25_compact_kernel, k1=k1),
+        grid=grid,
+        in_specs=[rows(cplanes_docs.shape[0]), rows(cplanes_tf.shape[0]),
+                  vec(), vec(), vec(), vec(), vec(), vec(), vec()],
+        out_specs=[lanes(), lanes(), lanes()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cplanes_docs.astype(jnp.uint32), cplanes_tf.astype(jnp.uint32),
+      coff_docs.astype(jnp.int32), bw_docs.astype(jnp.int32),
+      first_doc.astype(jnp.int32), coff_tf.astype(jnp.int32),
+      bw_tf.astype(jnp.int32), idf.astype(jnp.float32),
+      active.astype(jnp.int32))
 
 
 @functools.partial(jax.jit,

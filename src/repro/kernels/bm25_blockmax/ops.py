@@ -12,8 +12,10 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.bm25_blockmax.kernel import bm25_blocks_pallas
-from repro.kernels.bm25_blockmax.ref import bm25_blocks_ref
+from repro.kernels.bm25_blockmax.kernel import (bm25_blocks_compact_pallas,
+                                                bm25_blocks_pallas)
+from repro.kernels.bm25_blockmax.ref import (bm25_blocks_compact_ref,
+                                             bm25_blocks_ref)
 
 
 def bm25_blocks(packed_docs, bw_docs, first_doc, packed_tf, bw_tf, idf,
@@ -24,6 +26,26 @@ def bm25_blocks(packed_docs, bw_docs, first_doc, packed_tf, bw_tf, idf,
                                   interpret=False)
     return bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
                            idf, active, k1=k1)
+
+
+def bm25_blocks_compact(cplanes_docs, coff_docs, bw_docs, first_doc,
+                        cplanes_tf, coff_tf, bw_tf, idf, active, *,
+                        k1: float = 0.9):
+    """Fused decompress-and-score over the COMPACT index layout: the
+    selected blocks are decoded straight from the compressed bit-plane
+    rows. On TPU the Pallas grid expands each block's rows in-kernel
+    (the decoded fixed-stride form never round-trips through HBM);
+    elsewhere the jnp reference gathers + expands per selected block
+    inside the same jitted computation — survivor-proportional on the
+    compacted pruned path because the caller compacted first."""
+    if jax.default_backend() == "tpu":
+        return bm25_blocks_compact_pallas(cplanes_docs, coff_docs, bw_docs,
+                                          first_doc, cplanes_tf, coff_tf,
+                                          bw_tf, idf, active, k1=k1,
+                                          interpret=False)
+    return bm25_blocks_compact_ref(cplanes_docs, coff_docs, bw_docs,
+                                   first_doc, cplanes_tf, coff_tf, bw_tf,
+                                   idf, active, k1=k1)
 
 
 def bm25_blocks_partials(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,

@@ -14,6 +14,17 @@ which needs a doc-indexed gather and so lives outside the kernel.
 ``lane_partials_ref`` is the oracle for the Pallas kernel's running
 top-partials carry: the per-lane maximum over all active blocks of the
 length-independent score bound num / (tf + k1*(1-b)).
+
+``bm25_blocks_compact_ref`` is the fused decompress-and-score oracle
+over the COMPACT storage layout: instead of the fixed-stride
+(NB, 32, 4) buffer, the index holds only the live bit-plane rows
+(``sum(bw)`` rows of 4 words — the exact bytes the storage codec
+writes) plus per-block row offsets. Each selected block's planes are
+gathered straight out of the compressed rows and expanded inside the
+(jitted) computation — on CPU this is the jnp-over-compacted fallback
+that decodes per survivor block; on TPU the Pallas variant does the
+same expansion inside the kernel grid, so the fixed-stride decoded
+form never exists in HBM.
 """
 from __future__ import annotations
 
@@ -33,6 +44,36 @@ def bm25_blocks_ref(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
     return (jnp.where(act, docids, 0),
             jnp.where(act, tf, 0.0),
             jnp.where(act, num, 0.0))
+
+
+def expand_rows_ref(cplanes, coff, bw):
+    """Gather-expand compacted bit-plane rows into the fixed-stride form.
+
+    ``cplanes`` (P, 4) uint32 holds every block's live planes
+    back-to-back (block-major, plane-major — ``compact_planes``' output,
+    padded with 32 zero rows at the tail so dynamic 32-row windows never
+    read out of bounds); ``coff`` (S,) is each selected block's first
+    row; ``bw`` (S,) its plane count. Returns (S, 32, 4) uint32 with
+    dead planes (>= bw) zeroed, exactly what ``unpack_fast`` consumes.
+    """
+    j = jnp.arange(32)
+    valid = j[None, :] < bw[:, None]
+    rows = jnp.where(valid, coff[:, None] + j[None, :], 0)
+    w = cplanes[rows]                                   # (S, 32, 4)
+    return jnp.where(valid[:, :, None], w, jnp.uint32(0))
+
+
+def bm25_blocks_compact_ref(cplanes_docs, coff_docs, bw_docs, first_doc,
+                            cplanes_tf, coff_tf, bw_tf, idf, active,
+                            k1: float = 0.9):
+    """Fused decompress-and-score over compact storage: expand the
+    selected blocks' planes from the compressed rows, then the standard
+    block scoring — same (docids, tf, num) contract as
+    ``bm25_blocks_ref``, asserted bit-identical in tests."""
+    pd = expand_rows_ref(cplanes_docs, coff_docs, bw_docs)
+    pt = expand_rows_ref(cplanes_tf, coff_tf, bw_tf)
+    return bm25_blocks_ref(pd, bw_docs, first_doc, pt, bw_tf, idf, active,
+                           k1=k1)
 
 
 def lane_partials_ref(tf, num, k1: float = 0.9, b: float = 0.4):

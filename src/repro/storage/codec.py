@@ -1,11 +1,25 @@
-"""Versioned on-disk segment codec: delta + lane-blocked-PFor bit-packing.
+"""Versioned on-disk segment codec: delta streams behind a codec registry.
 
 Pibiri & Venturini's survey point carried into practice: the codec decides
-how many bytes actually cross the device, so the storage layer encodes the
-same way the device kernels pack — delta streams grouped into 128-lane
-blocks, each block bit-packed at its max bit width via the
-``kernels/postings_pack`` bit-plane transpose (``pack_fast``), compacted
-host-side to ``sum(bw) * 16`` bytes (``compact_planes``).
+how many bytes actually cross the device, so the storage layer offers the
+survey's menu behind one ``codec=`` seam (the stream codec id is stored
+per stream, so readers need no out-of-band knob):
+
+  ``raw``       plain int64 — the incompressible baseline
+  ``pfor``      128-lane blocks bit-packed at each block's max width via
+                the ``kernels/postings_pack`` bit-plane transpose
+                (``pack_fast``), compacted host-side to ``sum(bw) * 16``
+                bytes (``compact_planes``) — the device-kernel layout
+  ``adaptive``  per-sub-block adaptive bit widths: 32-value sub-blocks,
+                each packed horizontally at its own max width (finer-
+                grained than ``pfor``'s 128-lane width, so one outlier
+                inflates 32 values instead of 128)
+  ``pef``       partitioned Elias-Fano over the stream's prefix sums,
+                128-value chunks, per-chunk universe — the sparse-list
+                frontier; no uint32 ceiling
+
+Every codec decodes bit-identically and has a naive pure-python decode
+oracle (``decode_stream_naive``) asserted against in tests.
 
 One segment = four files, each independently framed and checksummed:
 
@@ -26,14 +40,19 @@ generations are deleted after commit.
 
 Frame format (every storage file, including ``segments_N`` manifests):
 
-  magic "RSEG" | u32 version | u8 kind | payload | u32 crc32(prefix)
+  magic "RSEG" | u32 version | u8 kind | u64 payload_len | payload
+  | u32 crc32(prefix)
 
-A torn, truncated, or bit-flipped file fails ``unframe`` with
-``CorruptSegment`` instead of decoding garbage — recovery depends on it.
-Decoding is bit-identical to the encoded ``Segment`` (hypothesis oracle in
-tests/test_storage.py). ``codec="raw"`` stores streams as plain int64
-(the incompressible baseline the envelope benchmarks compare against);
-the codec id is stored per stream, so readers need no out-of-band knob.
+The declared payload length is AUTHORITATIVE: validation covers exactly
+the declared frame and ignores trailing bytes, so a plain read and an
+``mmap`` read that maps only the declared frame agree bit-for-bit on
+every file — valid, torn, or trailing-garbage alike
+(``frame_declared_length`` is the mmap-side helper). A torn, truncated,
+or bit-flipped file fails ``unframe`` with ``CorruptSegment`` instead of
+decoding garbage — recovery depends on it. Decoding is bit-identical to
+the encoded ``Segment`` (hypothesis oracle in tests/test_storage.py),
+including the optional merge-time doc-id ``reorder`` permutation carried
+by the ``.doc`` table.
 """
 from __future__ import annotations
 
@@ -47,7 +66,10 @@ from repro.core.segments import Segment
 from repro.kernels.postings_pack import ref as pack_ref
 
 MAGIC = b"RSEG"
-VERSION = 1
+VERSION = 2
+# magic + u32 version + u8 kind + u64 payload length | ... | u32 crc32
+_HEADER_LEN = 17
+_FRAME_OVERHEAD = _HEADER_LEN + 4
 
 # frame kinds
 KIND_DICT, KIND_PST, KIND_POS, KIND_DOC = 1, 2, 3, 4
@@ -59,8 +81,11 @@ _SUFFIX_KIND = {".dict": KIND_DICT, ".pst": KIND_PST,
                 ".pos": KIND_POS, ".doc": KIND_DOC}
 
 # stream codec ids
-_RAW, _PFOR = 0, 1
-CODECS = ("raw", "pfor")
+_RAW, _PFOR, _ADW, _PEF = 0, 1, 2, 3
+CODECS = ("raw", "pfor", "adaptive", "pef")
+
+_ADW_SUB = 32      # adaptive codec sub-block size (values per width)
+_PEF_CHUNK = 128   # partitioned Elias-Fano chunk size (values per universe)
 
 
 class CorruptSegment(Exception):
@@ -72,42 +97,58 @@ class CorruptSegment(Exception):
 # ---------------------------------------------------------------------------
 
 def frame(kind: int, payload: bytes) -> bytes:
-    body = MAGIC + struct.pack("<IB", VERSION, kind) + payload
+    body = (MAGIC + struct.pack("<IBQ", VERSION, kind, len(payload))
+            + payload)
     return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
 
 
+def frame_declared_length(data: bytes) -> int | None:
+    """Total frame length the header declares, or ``None`` when the header
+    itself is absent/torn. ``FSDirectory(mmap=True)`` uses this to map
+    exactly the frame instead of whole files; a file shorter than the
+    declared length then fails ``unframe`` identically on both paths."""
+    if len(data) < _HEADER_LEN or data[:4] != MAGIC:
+        return None
+    version, _kind, plen = struct.unpack_from("<IBQ", data, 4)
+    if version != VERSION:
+        return None
+    return _FRAME_OVERHEAD + plen
+
+
 def unframe(data: bytes, kind: int) -> bytes:
-    if len(data) < 13:
+    if len(data) < _FRAME_OVERHEAD:
         raise CorruptSegment(f"file truncated to {len(data)} bytes")
     if data[:4] != MAGIC:
         raise CorruptSegment(f"bad magic {data[:4]!r}")
-    version, got_kind = struct.unpack_from("<IB", data, 4)
+    version, got_kind, plen = struct.unpack_from("<IBQ", data, 4)
     if version != VERSION:
         raise CorruptSegment(f"unknown codec version {version}")
     if got_kind != kind:
         raise CorruptSegment(f"expected kind {kind}, found {got_kind}")
-    (crc,) = struct.unpack_from("<I", data, len(data) - 4)
-    if zlib.crc32(data[:-4]) & 0xFFFFFFFF != crc:
+    # the declared length is authoritative: validate exactly the declared
+    # frame and ignore trailing bytes, so plain and mmap reads agree
+    total = _FRAME_OVERHEAD + plen
+    if len(data) < total:
+        raise CorruptSegment(
+            f"frame declares {total} bytes, file holds {len(data)}")
+    (crc,) = struct.unpack_from("<I", data, total - 4)
+    if zlib.crc32(data[:total - 4]) & 0xFFFFFFFF != crc:
         raise CorruptSegment("checksum mismatch (torn or corrupted file)")
-    return data[9:-4]
+    return data[_HEADER_LEN:total - 4]
 
 
 # ---------------------------------------------------------------------------
 # streams
 # ---------------------------------------------------------------------------
 
-def _enc_stream(arr: np.ndarray, codec: str) -> bytes:
-    """One non-negative int64 stream -> length-prefixed bytes."""
-    arr = np.asarray(arr, np.int64)
-    if arr.size and int(arr.min()) < 0:
-        raise ValueError("streams must be non-negative after rebasing")
-    if codec == "raw":
-        return (struct.pack("<BQ", _RAW, arr.size)
-                + arr.astype("<i8").tobytes())
-    if codec != "pfor":
-        raise ValueError(f"unknown codec {codec!r}; one of {CODECS}")
-    if arr.size and int(arr.max()) >= 1 << 32:
-        raise ValueError("pfor streams must fit uint32 after deltas")
+def _bit_widths(mx: np.ndarray) -> np.ndarray:
+    """Per-element bit widths of non-negative uint32 maxima, vectorized.
+    Exact for the full uint32 range (integers < 2**53 are float64-exact,
+    and log2 of an exact float is correctly rounded)."""
+    return np.ceil(np.log2(mx.astype(np.float64) + 1.0)).astype(np.uint8)
+
+
+def _enc_pfor(arr: np.ndarray) -> bytes:
     n = arr.size
     nb = -(-n // pack_ref.BLOCK) if n else 0
     head = struct.pack("<BQQ", _PFOR, n, nb)
@@ -124,6 +165,175 @@ def _enc_stream(arr: np.ndarray, codec: str) -> bytes:
             + rows.astype("<u4").tobytes())
 
 
+def _enc_adaptive(arr: np.ndarray) -> bytes:
+    """Per-sub-block adaptive widths: 32-value sub-blocks, each stored at
+    its own max bit width as a horizontal LSB-first bitstream. 32·bw bits
+    per sub-block keeps every sub-block byte-aligned."""
+    n = arr.size
+    ns = -(-n // _ADW_SUB) if n else 0
+    head = struct.pack("<BQQ", _ADW, n, ns)
+    if not ns:
+        return head
+    padded = np.zeros(ns * _ADW_SUB, np.uint32)
+    padded[:n] = arr.astype(np.uint32)
+    u = padded.reshape(ns, _ADW_SUB)
+    bw = _bit_widths(u.max(axis=1))
+    # (ns, 32 values, 32 bits) LSB-first bit tensor; keep bits j < bw[s]
+    bits = np.unpackbits(u.view(np.uint8).reshape(ns, _ADW_SUB, 4),
+                         axis=2, bitorder="little")
+    keep = np.arange(32)[None, None, :] < bw[:, None, None]
+    payload = np.packbits(bits[np.broadcast_to(keep, bits.shape)],
+                          bitorder="little")
+    return head + bw.tobytes() + payload.tobytes()
+
+
+def _ef_params(m: int, u: int) -> tuple[int, int]:
+    """Elias-Fano low-bit count and high-part unary length for a chunk of
+    ``m`` values over universe ``u``."""
+    l = max(0, (u // m).bit_length() - 1) if u > 0 else 0
+    return l, m + (u >> l)
+
+
+def _enc_pef(arr: np.ndarray) -> bytes:
+    """Partitioned Elias-Fano over the stream's prefix sums: 128-value
+    chunks, each rebased to its predecessor's last prefix sum, with the
+    chunk universe table up front. Chunk bit lengths are fully determined
+    by (m, universe), so decode walks chunks without extra offsets."""
+    n = arr.size
+    head = struct.pack("<BQ", _PEF, n)
+    if not n:
+        return head
+    cum = np.cumsum(arr, dtype=np.int64)
+    if int(cum[-1]) >= 1 << 62:
+        raise ValueError("pef stream prefix sums overflow int64 headroom")
+    nc = -(-n // _PEF_CHUNK)
+    universes = np.zeros(nc, np.int64)
+    parts = []
+    base = 0
+    for c in range(nc):
+        rel = cum[c * _PEF_CHUNK:(c + 1) * _PEF_CHUNK] - base
+        m = rel.size
+        u = int(rel[-1])
+        universes[c] = u
+        base += u
+        l, high_len = _ef_params(m, u)
+        bits = np.zeros(m * l + high_len, np.uint8)
+        if l:
+            bits[:m * l] = ((rel[:, None] >> np.arange(l)) & 1).reshape(-1)
+        bits[m * l + (rel >> l) + np.arange(m)] = 1
+        parts.append(np.packbits(bits, bitorder="little").tobytes())
+    return head + universes.astype("<u8").tobytes() + b"".join(parts)
+
+
+def _enc_stream(arr: np.ndarray, codec: str) -> bytes:
+    """One non-negative int64 stream -> length-prefixed bytes."""
+    arr = np.asarray(arr, np.int64)
+    if arr.size and int(arr.min()) < 0:
+        raise ValueError("streams must be non-negative after rebasing")
+    if codec == "raw":
+        return (struct.pack("<BQ", _RAW, arr.size)
+                + arr.astype("<i8").tobytes())
+    if codec == "pef":
+        return _enc_pef(arr)
+    if codec not in ("pfor", "adaptive"):
+        raise ValueError(f"unknown codec {codec!r}; one of {CODECS}")
+    if arr.size and int(arr.max()) >= 1 << 32:
+        raise ValueError(f"{codec} streams must fit uint32 after deltas")
+    return _enc_pfor(arr) if codec == "pfor" else _enc_adaptive(arr)
+
+
+def _dec_pfor(buf: bytes, off: int) -> tuple[np.ndarray, int]:
+    n, nb = struct.unpack_from("<QQ", buf, off + 1)
+    off += 17
+    if not nb:
+        if n:
+            raise CorruptSegment("non-empty stream with zero blocks")
+        return np.zeros(0, np.int64), off
+    bw = np.frombuffer(buf[off:off + nb], np.uint8).astype(np.int64)
+    if bw.size != nb or (bw > 32).any():
+        raise CorruptSegment("bit-width table truncated or invalid")
+    off += nb
+    n_words = int(bw.sum()) * pack_ref.WORDS_PER_PLANE
+    end = off + n_words * 4
+    if end > len(buf):
+        raise CorruptSegment("pfor stream truncated")
+    rows = np.frombuffer(buf[off:end], "<u4")
+    full = pack_ref.expand_planes(rows, bw)
+    vals = np.asarray(pack_ref.unpack_fast(jnp.asarray(full), bw))
+    if n > nb * pack_ref.BLOCK:
+        raise CorruptSegment("stream count exceeds packed blocks")
+    return vals.reshape(-1)[:n].astype(np.int64), end
+
+
+def _dec_adaptive(buf: bytes, off: int) -> tuple[np.ndarray, int]:
+    n, ns = struct.unpack_from("<QQ", buf, off + 1)
+    off += 17
+    if not ns:
+        if n:
+            raise CorruptSegment("non-empty stream with zero sub-blocks")
+        return np.zeros(0, np.int64), off
+    if n > ns * _ADW_SUB:
+        raise CorruptSegment("stream count exceeds sub-blocks")
+    bw = np.frombuffer(buf[off:off + ns], np.uint8)
+    if bw.size != ns or (bw > 32).any():
+        raise CorruptSegment("bit-width table truncated or invalid")
+    off += ns
+    total_bits = int(bw.sum(dtype=np.int64)) * _ADW_SUB
+    end = off + total_bits // 8
+    if end > len(buf):
+        raise CorruptSegment("adaptive stream truncated")
+    payload = np.unpackbits(np.frombuffer(buf[off:end], np.uint8),
+                            bitorder="little")[:total_bits]
+    bits = np.zeros((ns, _ADW_SUB, 32), np.uint8)
+    keep = np.arange(32)[None, None, :] < bw[:, None, None]
+    bits[np.broadcast_to(keep, bits.shape)] = payload
+    words = np.packbits(bits, axis=2, bitorder="little")
+    vals = words.reshape(-1).view("<u4")[:n]
+    return vals.astype(np.int64), end
+
+
+def _dec_pef(buf: bytes, off: int) -> tuple[np.ndarray, int]:
+    (n,) = struct.unpack_from("<Q", buf, off + 1)
+    off += 9
+    if not n:
+        return np.zeros(0, np.int64), off
+    nc = -(-n // _PEF_CHUNK)
+    end = off + nc * 8
+    if end > len(buf):
+        raise CorruptSegment("pef universe table truncated")
+    universes = np.frombuffer(buf[off:end], "<u8").astype(np.int64)
+    if (universes < 0).any():
+        raise CorruptSegment("pef universe overflows int64")
+    off = end
+    cum = np.zeros(n, np.int64)
+    base = 0
+    for c in range(nc):
+        m = min(n, (c + 1) * _PEF_CHUNK) - c * _PEF_CHUNK
+        u = int(universes[c])
+        l, high_len = _ef_params(m, u)
+        nbits = m * l + high_len
+        end = off + -(-nbits // 8)
+        if end > len(buf):
+            raise CorruptSegment("pef stream truncated")
+        bits = np.unpackbits(np.frombuffer(buf[off:end], np.uint8),
+                             bitorder="little")[:nbits]
+        pos = np.flatnonzero(bits[m * l:])
+        if pos.size != m:
+            raise CorruptSegment("pef high bits hold a wrong value count")
+        h = (pos - np.arange(m)).astype(np.int64)
+        if l:
+            low = bits[:m * l].reshape(m, l).astype(np.int64)
+            rel = (h << l) | (low << np.arange(l)).sum(axis=1)
+        else:
+            rel = h
+        if (np.diff(rel) < 0).any() or int(rel[-1]) != u:
+            raise CorruptSegment("pef chunk is not monotone to its universe")
+        cum[c * _PEF_CHUNK:c * _PEF_CHUNK + m] = base + rel
+        base += u
+        off = end
+    return np.diff(cum, prepend=np.int64(0)), off
+
+
 def _dec_stream(buf: bytes, off: int) -> tuple[np.ndarray, int]:
     try:
         (codec_id,) = struct.unpack_from("<B", buf, off)
@@ -135,30 +345,102 @@ def _dec_stream(buf: bytes, off: int) -> tuple[np.ndarray, int]:
                 raise CorruptSegment("raw stream truncated")
             arr = np.frombuffer(buf[off:end], "<i8").astype(np.int64)
             return arr, end
-        if codec_id != _PFOR:
-            raise CorruptSegment(f"unknown stream codec id {codec_id}")
-        n, nb = struct.unpack_from("<QQ", buf, off + 1)
-        off += 17
-        if not nb:
-            if n:
-                raise CorruptSegment("non-empty stream with zero blocks")
-            return np.zeros(0, np.int64), off
-        bw = np.frombuffer(buf[off:off + nb], np.uint8).astype(np.int64)
-        if bw.size != nb or (bw > 32).any():
-            raise CorruptSegment("bit-width table truncated or invalid")
-        off += nb
-        n_words = int(bw.sum()) * pack_ref.WORDS_PER_PLANE
-        end = off + n_words * 4
-        if end > len(buf):
-            raise CorruptSegment("pfor stream truncated")
-        rows = np.frombuffer(buf[off:end], "<u4")
-        full = pack_ref.expand_planes(rows, bw)
-        vals = np.asarray(pack_ref.unpack_fast(jnp.asarray(full), bw))
-        if n > nb * pack_ref.BLOCK:
-            raise CorruptSegment("stream count exceeds packed blocks")
-        return vals.reshape(-1)[:n].astype(np.int64), end
+        if codec_id == _PFOR:
+            return _dec_pfor(buf, off)
+        if codec_id == _ADW:
+            return _dec_adaptive(buf, off)
+        if codec_id == _PEF:
+            return _dec_pef(buf, off)
+        raise CorruptSegment(f"unknown stream codec id {codec_id}")
     except struct.error as e:
         raise CorruptSegment("stream header truncated") from e
+
+
+# ---------------------------------------------------------------------------
+# naive decode oracles (tests assert the vectorized decoders against these)
+# ---------------------------------------------------------------------------
+
+class _BitReader:
+    """LSB-first bit reader over bytes — the scalar oracle's only tool."""
+
+    def __init__(self, data: bytes, pos: int = 0):
+        self.data, self.pos = data, pos
+
+    def take(self, k: int) -> int:
+        v = 0
+        for i in range(k):
+            p = self.pos + i
+            v |= ((self.data[p >> 3] >> (p & 7)) & 1) << i
+        self.pos += k
+        return v
+
+
+def decode_stream_naive(buf: bytes, off: int) -> tuple[np.ndarray, int]:
+    """Scalar pure-python decode of one stream — one loop per value, no
+    numpy bit tricks. The per-codec oracle the vectorized ``_dec_stream``
+    must agree with bit-for-bit."""
+    (codec_id,) = struct.unpack_from("<B", buf, off)
+    if codec_id == _RAW:
+        (n,) = struct.unpack_from("<Q", buf, off + 1)
+        off += 9
+        vals = [struct.unpack_from("<q", buf, off + 8 * i)[0]
+                for i in range(n)]
+        return np.asarray(vals, np.int64), off + 8 * n
+    if codec_id == _PFOR:
+        n, nb = struct.unpack_from("<QQ", buf, off + 1)
+        off += 17
+        bw = list(buf[off:off + nb])
+        off += nb
+        vals = []
+        for b in range(nb):
+            words = [[struct.unpack_from("<I", buf, off + (b_row * 4 + w)
+                                         * 4)[0]
+                      for w in range(4)]
+                     for b_row in range(sum(bw[:b]),
+                                        sum(bw[:b]) + bw[b])]
+            for lane in range(pack_ref.BLOCK):
+                v = 0
+                for j in range(bw[b]):
+                    v |= ((words[j][lane // 32] >> (lane % 32)) & 1) << j
+                vals.append(v)
+        off += sum(bw) * 4 * 4
+        return np.asarray(vals[:n], np.int64), off
+    if codec_id == _ADW:
+        n, ns = struct.unpack_from("<QQ", buf, off + 1)
+        off += 17
+        bw = list(buf[off:off + ns])
+        off += ns
+        r = _BitReader(buf[off:], 0)
+        vals = [r.take(bw[s]) for s in range(ns) for _ in range(_ADW_SUB)]
+        return np.asarray(vals[:n], np.int64), off + r.pos // 8
+    if codec_id == _PEF:
+        (n,) = struct.unpack_from("<Q", buf, off + 1)
+        off += 9
+        nc = -(-n // _PEF_CHUNK)
+        universes = [struct.unpack_from("<Q", buf, off + 8 * c)[0]
+                     for c in range(nc)]
+        off += 8 * nc
+        cum, base = [], 0
+        for c in range(nc):
+            m = min(n, (c + 1) * _PEF_CHUNK) - c * _PEF_CHUNK
+            u = universes[c]
+            l, high_len = _ef_params(m, u)
+            r = _BitReader(buf[off:], 0)
+            lows = [r.take(l) for _ in range(m)]
+            highs, h, i = [], 0, 0
+            while i < m:
+                if r.take(1):
+                    highs.append(h)
+                    i += 1
+                else:
+                    h += 1
+            cum.extend(base + (hi << l | lo)
+                       for hi, lo in zip(highs, lows))
+            base += u
+            off += -(-(m * l + high_len) // 8)
+        vals = [c - p for p, c in zip([0] + cum, cum)]
+        return np.asarray(vals, np.int64), off
+    raise CorruptSegment(f"unknown stream codec id {codec_id}")
 
 
 def _rebase_encode(vals: np.ndarray, starts: np.ndarray,
@@ -201,6 +483,15 @@ def encode_segment(seg: Segment, codec: str = "pfor") -> dict[str, bytes]:
     doc_delta = _rebase_encode(seg.docs, seg.term_start[:-1], df)
     pos_delta = _rebase_encode(seg.positions, seg.pos_start[:-1], seg.tf)
     docid_delta = np.diff(seg.doc_ids, prepend=np.int64(0))
+    # merge-time BP doc-id reassignment rides the doc table: the local
+    # permutation (rank -> original local slot) is tiny next to postings
+    # and must survive the durable round-trip so recovered readers keep
+    # the clustered block layout
+    reorder = getattr(seg, "reorder", None)
+    if reorder is None:
+        rpart = b"\x00"
+    else:
+        rpart = b"\x01" + _enc_stream(np.asarray(reorder, np.int64), codec)
     files = {
         ".dict": frame(KIND_DICT, _enc_stream(term_delta, codec)
                        + _enc_stream(df, codec)),
@@ -209,7 +500,7 @@ def encode_segment(seg: Segment, codec: str = "pfor") -> dict[str, bytes]:
         ".pos": frame(KIND_POS, _enc_stream(pos_delta, codec)),
         ".doc": frame(KIND_DOC, struct.pack("<I", seg.generation)
                       + _enc_stream(docid_delta, codec)
-                      + _enc_stream(seg.doc_len, codec)),
+                      + _enc_stream(seg.doc_len, codec) + rpart),
     }
     return files
 
@@ -242,8 +533,19 @@ def decode_segment(files: dict[str, bytes]) -> Segment:
         raise CorruptSegment("doc table truncated")
     (generation,) = struct.unpack_from("<I", p_doc, 0)
     docid_delta, off = _dec_stream(p_doc, 4)
-    doc_len, _ = _dec_stream(p_doc, off)
+    doc_len, off = _dec_stream(p_doc, off)
     doc_ids = np.cumsum(docid_delta, dtype=np.int64)
+    if off >= len(p_doc):
+        raise CorruptSegment("doc table reorder flag missing")
+    reorder = None
+    if p_doc[off] == 1:
+        reorder, _ = _dec_stream(p_doc, off + 1)
+        perm = np.sort(reorder)
+        if (reorder.size != doc_ids.size
+                or not np.array_equal(perm, np.arange(perm.size))):
+            raise CorruptSegment("reorder is not a doc permutation")
+    elif p_doc[off] != 0:
+        raise CorruptSegment("doc table reorder flag invalid")
 
     if (terms.size != df.size or docs.size != int(term_start[-1])
             or tf.size != docs.size
@@ -253,7 +555,7 @@ def decode_segment(files: dict[str, bytes]) -> Segment:
     return Segment(terms=terms, term_start=term_start, docs=docs, tf=tf,
                    positions=positions, pos_start=pos_start,
                    doc_ids=doc_ids, doc_len=doc_len,
-                   generation=int(generation))
+                   generation=int(generation), reorder=reorder)
 
 
 def encode_liveness(deletes: np.ndarray) -> bytes:

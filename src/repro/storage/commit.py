@@ -187,6 +187,7 @@ class SegmentStore:
     _counter: int = 0
     _names: dict = field(default_factory=dict)   # seg_id -> file base name
     _sizes: dict = field(default_factory=dict)   # base/liv name -> bytes
+    _suffix_sizes: dict = field(default_factory=dict)  # base -> {sfx: bytes}
     _superseded: set = field(default_factory=set)  # names eligible to delete
     # delete generations, per base name: the monotone bitmap makes the
     # deleted-doc COUNT a sufficient fingerprint for "changed since the
@@ -215,9 +216,11 @@ class SegmentStore:
         if gen:
             for seg, name in zip(segs, names):
                 store._names[seg.seg_id] = name
+                store._suffix_sizes[name] = {
+                    sfx: directory.file_size(name + sfx)
+                    for sfx in seg_codec.SEGMENT_SUFFIXES}
                 store._sizes[name] = sum(
-                    directory.file_size(name + sfx)
-                    for sfx in seg_codec.SEGMENT_SUFFIXES)
+                    store._suffix_sizes[name].values())
                 keep.update(name + sfx
                             for sfx in seg_codec.SEGMENT_SUFFIXES)
                 lname = liv.get(name)
@@ -262,9 +265,12 @@ class SegmentStore:
             name = f"s{self._counter:08x}"
             self._counter += 1
         n = write_segment(self.directory, name, seg, self.codec)
+        by_sfx = {sfx: self.directory.file_size(name + sfx)
+                  for sfx in seg_codec.SEGMENT_SUFFIXES}
         with self._lock:
             self._names[seg.seg_id] = name
             self._sizes[name] = n
+            self._suffix_sizes[name] = by_sfx
             self.bytes_encoded_written += n
         return name
 
@@ -309,6 +315,25 @@ class SegmentStore:
                 if lname is not None:
                     total += self._sizes.get(lname, 0)
             return total
+
+    def encoded_bytes_by_suffix(self, segs) -> dict:
+        """Per-file-kind breakdown of ``encoded_bytes_live``: measured
+        bytes-on-media of a segment set keyed by suffix (``.dict`` /
+        ``.pst`` / ``.pos`` / ``.doc``, plus ``.liv`` for current delete
+        generations) — where the codec actually spends its bytes."""
+        with self._lock:
+            out = {sfx: 0 for sfx in seg_codec.SEGMENT_SUFFIXES}
+            out[".liv"] = 0
+            for s in segs:
+                name = self._names.get(s.seg_id)
+                if name is None:
+                    continue
+                for sfx, n in self._suffix_sizes.get(name, {}).items():
+                    out[sfx] += n
+                lname = self._liv_file.get(name)
+                if lname is not None:
+                    out[".liv"] += self._sizes.get(lname, 0)
+            return out
 
     def commit(self, live_segments) -> int:
         """Durably publish ``live_segments`` as commit ``gen+1``: roll a
@@ -360,6 +385,7 @@ class SegmentStore:
             for n in dead:
                 self._superseded.discard(n)
                 self._sizes.pop(n, None)
+                self._suffix_sizes.pop(n, None)
                 # a dead segment's delete generation dies with it
                 lname = self._liv_file.pop(n, None)
                 if lname is not None:

@@ -218,6 +218,18 @@ class FSDirectory(Directory):
     lives in the public ``read_file`` wrapper), so measured-IO envelopes
     stay comparable across modes; ``mmap_reads`` counts how many reads
     the mapping actually served.
+
+    Frame-length honoring: a mapped read copies exactly the bytes the
+    codec frame header DECLARES (``codec.frame_declared_length``) rather
+    than the whole mapping — the actual MMapDirectory shape, where a
+    reader slices the region its footer describes instead of touching
+    every mapped page. Trailing bytes beyond the frame (a torn rewrite,
+    filesystem padding) are ignored by ``unframe`` on the plain path
+    too (the declared length is authoritative), so both modes decode
+    identically; a partial/truncated frame (declared length > file
+    size, or an unparseable header) is returned whole and fails
+    ``unframe``'s length/CRC validation with ``CorruptSegment``
+    identically across both paths.
     """
 
     def __init__(self, path: str, mmap: bool = False):
@@ -266,7 +278,18 @@ class FSDirectory(Directory):
                     pass  # empty file / fs without mmap: plain read below
                 else:
                     try:
-                        data = bytes(mm)
+                        # honor the codec frame length: copy exactly the
+                        # declared frame when the mapping holds it all;
+                        # shorter (truncated) or unframed files are
+                        # copied whole so unframe fails identically to
+                        # the plain-read path
+                        from repro.storage.codec import frame_declared_length
+                        declared = frame_declared_length(
+                            mm[:32] if len(mm) >= 32 else mm[:])
+                        if declared is not None and declared <= len(mm):
+                            data = mm[:declared]
+                        else:
+                            data = bytes(mm)
                     finally:
                         mm.close()
                     with self._acct_lock:

@@ -82,6 +82,71 @@ def test_bm25_skip_kernel_over_compacted_survivors(nb):
                                rtol=1e-6)
 
 
+def _compact_layout(packed, bw):
+    """(cplanes tail-padded with 32 zero rows, exclusive-cumsum offsets)
+    — the layout ``build_block_index(compact=True)`` stores."""
+    bw_np = np.asarray(bw, np.int64)
+    rows = pref.compact_planes(np.asarray(packed), bw_np)
+    pad = np.zeros((32, pref.WORDS_PER_PLANE), np.uint32)
+    coff = (np.cumsum(bw_np) - bw_np).astype(np.int32)
+    return jnp.asarray(np.vstack([rows, pad])), jnp.asarray(coff)
+
+
+def test_compact_planes_roundtrip():
+    """compact_planes drops exactly the dead planes (rows == sum(bw))
+    and expand_planes restores the fixed-stride form bit-identically,
+    including bw=0 and bw=32 blocks."""
+    rng = np.random.default_rng(50)
+    vals = rng.integers(0, 1 << 16, (6, 128)).astype(np.uint32)
+    vals[0] = 0                       # bw = 0
+    vals[1] = 0xFFFFFFFF              # bw = 32
+    packed, bw = pref.pack_ref(jnp.asarray(vals))
+    packed, bw_np = np.asarray(packed), np.asarray(bw, np.int64)
+    rows = pref.compact_planes(packed, bw_np)
+    assert rows.shape == (int(bw_np.sum()), pref.WORDS_PER_PLANE)
+    back = pref.expand_planes(rows, bw_np)
+    np.testing.assert_array_equal(back, packed * (
+        np.arange(32)[None, :, None] < bw_np[:, None, None]))
+    np.testing.assert_array_equal(
+        np.asarray(pref.unpack_fast(jnp.asarray(back), bw)), vals)
+
+
+@pytest.mark.parametrize("nb", [4, 32, 37])
+def test_bm25_compact_matches_plain_ref(nb):
+    """The fused decompress-and-score stack: expand_rows_ref gather, the
+    compact jnp oracle, and the Pallas compact kernel (interpret mode)
+    all reproduce ``bm25_blocks_ref`` over the fixed-stride planes bit
+    for bit — blocks decode inside the scoring computation without ever
+    materializing the expanded form up front."""
+    from repro.kernels.bm25_blockmax.kernel import bm25_blocks_compact_pallas
+    from repro.kernels.bm25_blockmax.ops import bm25_blocks_compact
+    from repro.kernels.bm25_blockmax.ref import (bm25_blocks_compact_ref,
+                                                 expand_rows_ref)
+    rng = np.random.default_rng(nb + 3)
+    deltas = rng.integers(0, 50, (nb, 128)).astype(np.uint32)
+    deltas[:, 0] = 0
+    deltas[0] = 0                     # an all-zero-gap block (bw=0)
+    tf = rng.integers(0, 30, (nb, 128)).astype(np.uint32)
+    pd, bwd = pref.pack_ref(jnp.asarray(deltas))
+    pt, bwt = pref.pack_ref(jnp.asarray(tf))
+    cpl_d, coff_d = _compact_layout(pd, bwd)
+    cpl_t, coff_t = _compact_layout(pt, bwt)
+    first = jnp.asarray(rng.integers(0, 5000, nb).astype(np.int32))
+    idf = jnp.asarray(rng.random(nb).astype(np.float32) * 4)
+    act = jnp.asarray((rng.random(nb) < 0.8).astype(np.int32))
+    want = bm25_blocks_ref(pd, bwd, first, pt, bwt, idf, act)
+    np.testing.assert_array_equal(
+        np.asarray(expand_rows_ref(cpl_d, coff_d, bwd)), np.asarray(pd) * (
+            np.arange(32)[None, :, None] < np.asarray(bwd)[:, None, None]))
+    for fn in (bm25_blocks_compact_ref, bm25_blocks_compact,
+               lambda *a: bm25_blocks_compact_pallas(
+                   *a, block_rows=4 if nb % 4 == 0 else 1,
+                   interpret=True)):
+        got = fn(cpl_d, coff_d, bwd, first, cpl_t, coff_t, bwt, idf, act)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 @pytest.mark.parametrize("nb", [4, 32])
 def test_bm25_kernel_matches_ref(nb):
     rng = np.random.default_rng(nb)

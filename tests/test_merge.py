@@ -342,6 +342,103 @@ def test_apply_deletes_routes_to_affected_segments_only():
     assert not np.isin([1002, 1003, 3001, 9000], final.doc_ids).any()
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 100000), st.integers(1, 5))
+def test_merge_reorder_keeps_logical_arrays_bit_identical(seed, n_segs):
+    """BP doc-id reassignment is a pure LAYOUT hint: ``reorder=True``
+    must leave every logical array bit-identical to the plain merge
+    (tombstones included), and any emitted permutation must be a valid
+    permutation of the local doc slots."""
+    segs = tombstoned_seg_set(seed, n_segs)
+    m0 = merge_segments(list(segs))
+    m1 = merge_segments(list(segs), reorder=True)
+    assert_bit_identical(m0, m1)
+    assert m0.reorder is None
+    if m1.reorder is not None:
+        assert np.array_equal(np.sort(m1.reorder), np.arange(m1.n_docs))
+
+
+def test_reassign_doc_ids_permutation_and_determinism():
+    """On a segment big enough to bisect (> 128 docs) BP emits a full
+    permutation, deterministically (stable sorts, no RNG), and small
+    segments opt out with None — permuting within one 128-lane block
+    cannot change any block statistic."""
+    from repro.core.merge import reassign_doc_ids
+    rng = np.random.default_rng(40)
+    segs = [make_segment(rng, 200 * i, n_docs=120, vocab=300, max_terms=60)
+            for i in range(3)]
+    m = merge_segments(segs)
+    assert m.n_docs == 360
+    p1, p2 = reassign_doc_ids(m), reassign_doc_ids(m)
+    assert p1 is not None
+    assert np.array_equal(np.sort(p1), np.arange(m.n_docs))
+    assert np.array_equal(p1, p2)
+    small = make_segment(rng, 9000, n_docs=6)
+    assert reassign_doc_ids(small) is None
+
+
+def test_merge_driver_reorder_on_merge_threads_permutation():
+    """``MergeDriver(reorder_on_merge=True)``: cascade outputs carry the
+    BP permutation once they clear the block-size floor, the logical doc
+    set is unchanged, and ``with_deletes`` on a reordered segment keeps
+    the permutation (tombstones ride the liveness bitmap, not the
+    layout)."""
+    from repro.core.merge import MergeDriver
+    rng = np.random.default_rng(41)
+    segs = [make_segment(rng, 200 * i, n_docs=100, vocab=300, max_terms=50)
+            for i in range(2)]
+    drv = MergeDriver(fanout=2, reorder_on_merge=True)
+    for s in segs:
+        drv.add_flush(s)
+    assert drv.n_merges == 1
+    (m,) = drv.live_segments()
+    assert m.reorder is not None and m.n_docs == 200
+    assert np.array_equal(np.sort(m.reorder), np.arange(200))
+    want = np.sort(np.concatenate([s.doc_ids for s in segs]))
+    assert np.array_equal(m.doc_ids, want)
+    d = m.with_deletes(m.doc_ids[:5])
+    assert d.reorder is m.reorder
+    # parity against the reorder-free driver on the same inputs
+    drv0 = MergeDriver(fanout=2)
+    for s in segs:
+        drv0.add_flush(s)
+    assert_bit_identical(drv0.live_segments()[0], m)
+
+
+def test_expunge_deletes_compacts_heaviest_segment_only():
+    """expungeDeletes: the churn-heaviest live segment is rewritten
+    without tombstones ON ITS OWN TIER; clean segments keep their
+    identity (no reader-cache invalidation), and the dead docs are gone
+    from the live set. No qualifying segment -> None, no work."""
+    from repro.core.merge import MergeDriver
+    rng = np.random.default_rng(42)
+    segs = [make_segment(rng, 1000 * i, n_docs=8, max_terms=8)
+            for i in range(3)]
+    drv = MergeDriver(fanout=10)          # no cascade: 3 tier-0 residents
+    for s in segs:
+        drv.add_flush(s)
+    assert drv.expunge_deletes() is None  # nothing tombstoned yet
+    drv.apply_deletes(segs[1].doc_ids[:5])    # 5/8 dead in the middle one
+    drv.apply_deletes(segs[2].doc_ids[:1])    # 1/8 dead in the last one
+    before = {int(s.doc_ids[0]): s.seg_id for s in drv.live_segments()}
+    out = drv.expunge_deletes(min_ratio=0.25)
+    assert out is not None and not out.has_deletes
+    assert out.n_docs == 3                # the 5 tombstones reclaimed
+    assert int(out.doc_ids[0]) == 1005
+    live = drv.live_segments()
+    assert len(live) == 3
+    by_base = {int(s.doc_ids[0]): s for s in live}
+    assert by_base[0].seg_id == before[0]         # untouched
+    assert by_base[2000].seg_id == before[2000]   # below min_ratio
+    assert by_base[2000].n_deleted == 1           # ...tombstones intact
+    assert by_base[1005].seg_id == out.seg_id
+    # the compaction is invisible to the merged end state
+    final = drv.finalize()
+    dead = np.concatenate([segs[1].doc_ids[:5], segs[2].doc_ids[:1]])
+    assert not np.isin(dead, final.doc_ids).any()
+    assert final.n_docs == 24 - 6
+
+
 def test_segment_bytes_memoized(monkeypatch):
     rng = np.random.default_rng(10)
     s = make_segment(rng, 0, n_docs=6)

@@ -95,6 +95,50 @@ def test_prune_stats_monotone_and_counted(seed):
     assert pruned.prune_stats.batches == 2
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_reordered_and_compact_serving_bit_identical(seed):
+    """The layout-invariance oracle: the same live doc set served off
+    (a) the natural-order merge, (b) the BP-reordered merge, and (c) the
+    reordered merge through the fused compact (decompress-in-kernel)
+    path must return bit-identical score VALUES at every rank, and the
+    full (score, doc) ranking must be the same SET — doc order may
+    legally differ only among equal scores (top-k tie-breaking follows
+    block slot order, which reordering permutes)."""
+    from repro.core.merge import reassign_doc_ids
+    from dataclasses import replace
+    rng = np.random.default_rng(seed)
+    segs = tombstoned_seg_set(seed, 3)
+    m_nat = merge_segments(list(segs))
+    if m_nat.n_docs < 2 or m_nat.n_postings == 0:
+        return
+    perm = reassign_doc_ids(m_nat, min_partition=2)
+    if perm is None:
+        perm = rng.permutation(m_nat.n_docs).astype(np.int64)
+    m_re = replace(m_nat, reorder=perm)
+    # tombstones on top of the reordered layout (delete ~1/4 of docs)
+    dead = rng.choice(m_nat.doc_ids, size=m_nat.n_docs // 4, replace=False)
+    if dead.size:
+        m_nat, m_re = m_nat.with_deletes(dead), m_re.with_deletes(dead)
+    n_live = m_nat.live_doc_count
+    if n_live == 0:
+        return
+    q = _query_vocab([m_nat], rng)
+    k = n_live  # full ranking: makes the set comparison total
+    outs = []
+    for compact, seg in ((False, m_nat), (False, m_re), (True, m_re)):
+        s = ReaderCache(compact=compact).refresh([seg])
+        v, i = s.search(q, k)
+        outs.append((np.asarray(v), np.asarray(i)))
+    (v0, i0), (v1, i1), (v2, i2) = outs
+    assert np.array_equal(v0, v1) and np.array_equal(v0, v2)
+    ranked = {tuple(np.sort(ix[vx > 0]).tolist()) for vx, ix in outs}
+    assert len(ranked) == 1, "hit sets diverged across layouts"
+    for vx, ix in outs[1:]:
+        assert sorted(zip(v0.tolist(), i0.tolist())) \
+            == sorted(zip(vx.tolist(), ix.tolist()))
+
+
 def test_cross_segment_skip_preserves_results():
     """A segment whose best possible score cannot beat the shared theta
     is skipped without being evaluated — and results stay exact. Build

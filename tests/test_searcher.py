@@ -61,6 +61,38 @@ def test_build_vectorized_bit_identical_to_loop(live_index):
         assert vec.max_blocks_per_term == loop.max_blocks_per_term
 
 
+def test_build_reordered_and_compact_bit_identical(live_index):
+    """The builder under the new layouts: on a BP-reordered merge the
+    vectorized build still equals the scalar loop field-for-field, and
+    the ``compact=True`` build's compressed plane rows expand back to
+    exactly the plain build's fixed-stride planes (same blocks, same
+    widths — only the storage shape differs)."""
+    from repro.core.merge import merge_segments, reassign_doc_ids
+    from dataclasses import replace
+    ix, tokens = live_index
+    m = merge_segments(ix.merger.live_segments())
+    seg = replace(m, reorder=reassign_doc_ids(m, min_partition=16))
+    assert seg.reorder is not None and not np.array_equal(
+        seg.reorder, np.arange(seg.n_docs))
+    vec, loop = build_block_index(seg), build_block_index_loop(seg)
+    for f in INDEX_FIELDS:
+        a, b = np.asarray(getattr(vec, f)), np.asarray(getattr(loop, f))
+        assert a.dtype == b.dtype and a.shape == b.shape, f
+        assert (a == b).all(), f
+    cmp = build_block_index(seg, compact=True)
+    assert cmp.compact and cmp.packed_docs is None
+    for stream in ("docs", "tf"):
+        bw = np.asarray(getattr(vec, f"bw_{stream}"), np.int64)
+        rows = np.asarray(getattr(cmp, f"cplanes_{stream}"))
+        coff = np.asarray(getattr(cmp, f"coff_{stream}"))
+        assert rows.shape == (int(bw.sum()) + 32, pack_ref.WORDS_PER_PLANE)
+        assert np.array_equal(coff, np.cumsum(bw) - bw)
+        back = pack_ref.expand_planes(rows[:-32], bw)
+        want = np.asarray(getattr(vec, f"packed_{stream}")) * (
+            np.arange(32)[None, :, None] < bw[:, None, None])
+        assert np.array_equal(back, want)
+
+
 def test_pack_unpack_fast_match_reference():
     rng = np.random.default_rng(7)
     for hi in (1, 1000, 2 ** 20, 2 ** 32 - 1):

@@ -171,7 +171,7 @@ def _roundtrip(seg, codec):
 
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 100000), st.integers(0, 4),
-       st.sampled_from(["pfor", "raw"]))
+       st.sampled_from(codec_mod.CODECS))
 def test_codec_roundtrip_bit_identical(seed, kind, codec):
     """Randomized segments (empty, zero-postings, one-term,
     single-posting-term, generic) encode -> decode bit-identically."""
@@ -184,7 +184,7 @@ def test_codec_roundtrip_bit_identical(seed, kind, codec):
     assert_bit_identical(seg, _roundtrip(seg, codec))
 
 
-@pytest.mark.parametrize("codec", ["pfor", "raw"])
+@pytest.mark.parametrize("codec", codec_mod.CODECS)
 def test_codec_roundtrip_max_doc_id(codec):
     """Doc ids at the top of the uint32 range survive exactly (the first
     posting of a term is stored absolute, so it is the largest value any
@@ -204,14 +204,18 @@ def test_codec_rejects_doc_ids_beyond_uint32():
     assert_bit_identical(seg, _roundtrip(seg, "raw"))
 
 
+@pytest.mark.parametrize("codec", ["pfor", "adaptive", "pef"])
 @pytest.mark.parametrize("suffix", SEGMENT_SUFFIXES)
 @pytest.mark.parametrize("damage", ["flip", "truncate", "missing"])
-def test_corrupt_segment_files_fail_cleanly(directory, suffix, damage):
+def test_corrupt_segment_files_fail_cleanly(directory, codec, suffix,
+                                            damage):
     """A torn or bit-flipped file raises CorruptSegment from the checksum
-    layer — it must never decode to a wrong Segment."""
+    layer — it must never decode to a wrong Segment. Every compressed
+    codec goes through the same matrix: the frame (declared length +
+    crc32) guards the payload regardless of what encoded it."""
     rng = np.random.default_rng(5)
     seg = make_segment(rng, 0, n_docs=6)
-    codec_mod.write_segment(directory, "s0", seg, "pfor")
+    codec_mod.write_segment(directory, "s0", seg, codec)
     name = "s0" + suffix
     data = directory.read_file(name)
     if damage == "flip":
@@ -227,15 +231,106 @@ def test_corrupt_segment_files_fail_cleanly(directory, suffix, damage):
 
 
 def test_codec_compresses_vs_raw():
-    """On a realistically sized segment the delta+bit-packed codec beats
-    the raw int64 stream (the reason the codec exists: fewer bytes cross
-    the device)."""
+    """On a realistically sized segment every compressed codec beats the
+    raw int64 stream (the reason the codecs exist: fewer bytes cross the
+    device)."""
     rng = np.random.default_rng(6)
     seg = make_segment(rng, 0, n_docs=64, vocab=400, max_terms=200,
                        max_tf=4)
-    pfor = sum(len(b) for b in codec_mod.encode_segment(seg, "pfor").values())
-    raw = sum(len(b) for b in codec_mod.encode_segment(seg, "raw").values())
-    assert pfor < raw, (pfor, raw)
+    sizes = {c: sum(len(b) for b in
+                    codec_mod.encode_segment(seg, c).values())
+             for c in codec_mod.CODECS}
+    for c in ("pfor", "adaptive", "pef"):
+        assert sizes[c] < sizes["raw"], (c, sizes)
+
+
+def _pattern_stream(rng, pattern):
+    """The value-pattern matrix for stream-level codec oracles: empty,
+    single value, dense (tiny gaps), sparse (large gaps), and values at
+    the top of the uint32 range."""
+    if pattern == "empty":
+        return np.zeros(0, np.int64)
+    if pattern == "single":
+        return rng.integers(0, 1 << 32, 1).astype(np.int64)
+    if pattern == "dense":
+        return rng.integers(0, 3, 400).astype(np.int64)
+    if pattern == "sparse":
+        return rng.integers(0, 1 << 20, 200).astype(np.int64)
+    return np.concatenate([[(1 << 32) - 1] * 4,
+                           rng.integers(0, 1 << 32, 8)]).astype(np.int64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(codec_mod.CODECS),
+       st.sampled_from(["empty", "single", "dense", "sparse", "max"]))
+def test_stream_codecs_roundtrip_and_match_naive_oracle(seed, codec,
+                                                        pattern):
+    """Stream-level bit-identity across ALL codecs x value patterns: the
+    vectorized decoder and the scalar naive oracle must both reproduce
+    the input exactly AND agree on how many bytes the stream occupies
+    (trailing bytes stay untouched — streams are concatenated in every
+    segment file, so a length disagreement corrupts the next stream)."""
+    rng = np.random.default_rng(seed)
+    arr = _pattern_stream(rng, pattern)
+    buf = codec_mod._enc_stream(arr, codec) + b"tail!"
+    got, off = codec_mod._dec_stream(buf, 0)
+    naive, off_n = codec_mod.decode_stream_naive(buf, 0)
+    assert off == off_n == len(buf) - 5
+    assert got.dtype == naive.dtype == np.int64
+    assert np.array_equal(got, arr)
+    assert np.array_equal(naive, arr)
+
+
+@pytest.mark.parametrize("codec", codec_mod.CODECS)
+def test_reorder_permutation_roundtrips_and_validates(codec):
+    """The BP doc-id permutation rides the ``.doc`` file: it must survive
+    encode -> decode bit-identically under every codec, absent stays
+    absent, and a corrupted flag or non-permutation payload fails as
+    CorruptSegment instead of decoding to a broken block layout."""
+    rng = np.random.default_rng(30)
+    seg = make_segment(rng, 0, n_docs=8)
+    assert _roundtrip(seg, codec).reorder is None
+    from dataclasses import replace
+    perm = rng.permutation(seg.n_docs).astype(np.int64)
+    reordered = replace(seg, reorder=perm)
+    got = _roundtrip(reordered, codec)
+    assert got.reorder is not None and got.reorder.dtype == np.int64
+    assert np.array_equal(got.reorder, perm)
+    assert_bit_identical(seg, got)  # logical arrays stay natural-order
+    # a reorder that is not a permutation of the doc slots must not load
+    bad = replace(seg, reorder=np.zeros(seg.n_docs, np.int64))
+    files = codec_mod.encode_segment(bad, codec)
+    with pytest.raises(CorruptSegment, match="permutation"):
+        codec_mod.decode_segment(files)
+    # an invalid flag byte fails loudly too
+    files = codec_mod.encode_segment(seg, codec)
+    payload = codec_mod.unframe(files[".doc"], codec_mod.KIND_DOC)
+    files[".doc"] = codec_mod.frame(codec_mod.KIND_DOC,
+                                    payload[:-1] + b"\x07")
+    with pytest.raises(CorruptSegment, match="flag"):
+        codec_mod.decode_segment(files)
+
+
+def test_reorder_survives_liv_and_store_roundtrip(directory):
+    """Durable lifecycle with a reordered segment: commit, roll a delete
+    generation, recover — the permutation and the tombstones both come
+    back (readers rebuilt from a recovered index keep the clustered
+    block layout)."""
+    from dataclasses import replace
+    rng = np.random.default_rng(31)
+    base = make_segment(rng, 0, n_docs=8)
+    seg = replace(base, reorder=rng.permutation(8).astype(np.int64))
+    store, _ = SegmentStore.open(directory)
+    store.write(seg)
+    store.commit([seg])
+    d1 = seg.with_deletes(seg.doc_ids[:2])
+    assert np.array_equal(d1.reorder, seg.reorder)  # deletes keep BP
+    store.relabel(seg, d1)
+    store.commit([d1])
+    _, segs = open_latest(directory)
+    assert len(segs) == 1 and segs[0].n_deleted == 2
+    assert np.array_equal(segs[0].reorder, seg.reorder)
+    assert_bit_identical(base, replace(segs[0], reorder=None))
 
 
 # ---------------------------------------------------------------------------
