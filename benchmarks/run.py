@@ -28,6 +28,10 @@ trajectory.
                     codec (raw/pfor/adaptive/pef) over one merged
                     segment, and block-max pruning on a BP-reordered vs
                     natural-order index of a clustered corpus
+  fault_matrix      robustness cost: ingest GB/min + p99 search latency
+                    at 0%/1%/5% injected transient-fault rates on the
+                    nas profile (retried to zero giveups), plus
+                    degraded-mode QPS with one segment quarantined
 
 ``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
 runs a single bench.
@@ -688,10 +692,126 @@ def compression(smoke=False):
     _bp_reorder_contrast("compression", smoke)
 
 
+def fault_matrix(smoke=False):
+    """Robustness cost, measured: the same ingest -> commit -> search
+    cycle on the throttled nas profile with seeded transient faults
+    injected at 0%/1%/5% of directory ops. The RetryPolicy-wrapped
+    target must heal every one (giveups stay zero, every acked doc is
+    searchable), and the rows price what that healing costs in ingest
+    GB/min and p99 batched-search latency. Then degraded-mode serving:
+    one committed segment bit-rotted and quarantined, the scheduler
+    keeps taking traffic against the survivors and reports QPS plus the
+    missing-doc count."""
+    import dataclasses
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+    from repro.serving.query_scheduler import QueryRequest, QueryScheduler
+    from repro.storage import (DeviceThrottle, FaultInjectingDirectory,
+                               MEDIA_PROFILES, RAMDirectory, RetryPolicy,
+                               ThrottledDirectory, open_searcher)
+
+    cfg = get_arch("lucene-envelope").smoke
+    n_batches, per, doc_len = (6, 64, 128) if smoke else (12, 256, 192)
+    cfg = dataclasses.replace(cfg, doc_len=doc_len)
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=doc_len)
+    batches = [corpus.batch(i, per) for i in range(n_batches)]
+    # heavy terms -> queries whose postings actually span blocks
+    tok = batches[0]
+    vals, counts = np.unique(tok[tok > 0], return_counts=True)
+    heavy = vals[np.argsort(-counts)[:32]].astype(np.int32)
+    rng = np.random.default_rng(23)
+    B = 8
+    q = np.full((B, 4), -1, np.int32)
+    q[:, :2] = rng.choice(heavy, (B, 2))
+    n_search = 12 if smoke else 40
+
+    # --- ingest + serve under 0% / 1% / 5% transient-fault rates -----
+    # compile outside the matrix: the storage flush path (codec pack
+    # kernels) is shape-jitted, so the warm-up must write through a
+    # target_dir or the 0%-rate row pays the whole compile
+    warm = DistributedIndexer(cfg=cfg, target_dir=RAMDirectory())
+    for b in batches:
+        warm.index_batch(b)
+    warm.commit()
+    warm.close()
+    for rate in (0.0, 0.01, 0.05):
+        fi = FaultInjectingDirectory(
+            ThrottledDirectory(RAMDirectory(),
+                               DeviceThrottle(MEDIA_PROFILES["nas"])),
+            seed=17, p_transient=rate, p_torn=rate / 5, transient_repeat=2)
+        # cap must cover stacked gates (sync = list + sync): see
+        # storage/retry.py — 2 * transient_repeat, plus headroom
+        ix = DistributedIndexer(
+            cfg=cfg, target_dir=fi,
+            retry_policy=RetryPolicy(max_retries=6, base_delay_s=1e-4,
+                                     max_delay_s=2e-3, seed=17))
+        t0 = time.perf_counter()
+        for b in batches:
+            ix.index_batch(b)
+        ix.commit()
+        wall = time.perf_counter() - t0
+        gb = ix.stats.read_bytes / 1e9
+        searcher = ix.refresh()
+        assert searcher.n_docs == n_batches * per, \
+            (f"acked docs lost under fault rate {rate}: "
+             f"{searcher.n_docs} != {n_batches * per}")
+        searcher.search_batched(q, 10)     # compile outside the timer
+        lat = []
+        for _ in range(n_search):
+            t1 = time.perf_counter()
+            searcher.search_batched(q, 10)
+            lat.append(time.perf_counter() - t1)
+        rep = ix.envelope_report()
+        assert rep["io_giveups"] == 0, \
+            f"retry cap breached at fault rate {rate}"
+        ix.close()
+        tag = f"fault_matrix.t{rate * 100:g}"
+        emit(f"{tag}.ingest_gb_per_min", gb / (wall / 60),
+             f"faults_injected={fi.injected['transient'] + fi.injected['torn']} "
+             f"io_retries={rep['io_retries']} giveups=0", ".3f")
+        emit(f"{tag}.search_p99_ms",
+             float(np.percentile(lat, 99)) * 1e3,
+             f"batch={B} n={n_search} (in-memory snapshot post-recovery)",
+             ".2f")
+
+    # --- degraded serving: one committed segment quarantined ---------
+    fi = FaultInjectingDirectory(RAMDirectory(), seed=3)  # disarmed
+    ix = DistributedIndexer(cfg=cfg, target_dir=fi, merge_threads=0)
+    for b in batches:
+        ix.index_batch(b)
+        ix.commit()                        # one commit point per batch
+    names = sorted(ix.store._names.values())
+    ix.close()
+
+    def qps_of(searcher):
+        sched = QueryScheduler(searcher=searcher, slots=B, max_terms=4,
+                               k=10)
+        sched.submit(QueryRequest(rid=-1, terms=heavy[:2]))
+        sched.step()                       # compile outside the timer
+        n_req = 64 if smoke else 256
+        for i in range(n_req):
+            sched.submit(QueryRequest(rid=i, terms=rng.choice(heavy, 2)))
+        t0 = time.perf_counter()
+        done = sched.run_to_completion()
+        return len(done) / (time.perf_counter() - t0), sched
+
+    _, healthy = open_searcher(fi)
+    qps_full, _ = qps_of(healthy)
+    fi.corrupt_file(names[0] + ".dict")    # post-commit bit rot
+    _, degraded = open_searcher(fi, degraded=True)
+    qps_deg, sched = qps_of(degraded)
+    assert sched.degraded and sched.missing_docs > 0, \
+        "degraded snapshot must carry its casualty count"
+    emit("fault_matrix.degraded_qps", qps_deg,
+         f"healthy_qps={qps_full:.0f} quarantined=1 "
+         f"missing_docs={sched.missing_docs} served={sched.served}", ".0f")
+
+
 BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
            invert_kernel, build_reader, search_batched, searcher_refresh,
            merge_throughput, index_gb_per_min, envelope_measured,
-           update_heavy, search_pruned, compression]
+           update_heavy, search_pruned, compression, fault_matrix]
 SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
                  invert_kernel, merge_throughput, index_gb_per_min]
 

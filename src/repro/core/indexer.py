@@ -170,7 +170,37 @@ class DistributedIndexer:
     # cfg.refresh_every; 0 disables. Stopped and joined by ``close()``.
     refresh_every: float = None
     searcher: IndexSearcher = None   # latest refreshed snapshot
+    # ---- fault tolerance (repro.storage fault layer) ----
+    # wal=True: every acked add/delete is frame-logged + synced to a
+    # ``wal_N`` file BEFORE index_batch/delete returns, replayed on
+    # recovery and truncated at commit — kill -9 between ack and flush
+    # loses nothing. None: take cfg.wal (default off). Needs target_dir.
+    wal: bool = None
+    # a storage.RetryPolicy: target_dir is wrapped in a RetryingDirectory
+    # so every op under SegmentStore / write_commit / .liv writes retries
+    # transient faults with capped backoff (persistent ones propagate
+    # typed). None: no wrapping (callers may stack their own).
+    retry_policy: object = None
+    # > 0: background merges that fault are re-enqueued with backoff up
+    # to this many times (ConcurrentMergeScheduler retry) before a typed
+    # MergeRetriesExhausted parks. None: take cfg.merge_retries; 0 keeps
+    # the park-on-first-failure behavior.
+    merge_retries: int = None
+    # > 0: a ChecksumScrubber daemon re-verifies committed frames every
+    # this many seconds (scrub_io_mbps caps its read rate via a
+    # MergeRateLimiter), feeding detections into store quarantine. The
+    # scrubber object exists (for manual ``sweep()``) whenever target_dir
+    # is set. None: take cfg.scrub_every / cfg.scrub_io_mbps.
+    scrub_every: float = None
+    scrub_io_mbps: float = None
+    # recover a partially-corrupt newest commit minus its quarantined
+    # segments (degraded) instead of falling back / failing
+    degraded_ok: bool = False
+    scrubber: object = None
     _next_doc: int = 0
+    _wal: object = None
+    _wal_covered: int = -1     # highest wal seq whose ops are flushed
+    _wal_replaying: bool = False
 
     def __post_init__(self):
         from repro.core.flush import FlushPolicy
@@ -179,10 +209,16 @@ class DistributedIndexer:
         self.merger = MergeDriver(
             fanout=self.cfg.merge_fanout,
             reorder_on_merge=getattr(self.cfg, "reorder_on_merge", False))
+        if self.retry_policy is not None and self.target_dir is not None:
+            from repro.storage.retry import RetryingDirectory
+            if not isinstance(self.target_dir, RetryingDirectory):
+                self.target_dir = RetryingDirectory(self.target_dir,
+                                                    self.retry_policy)
         if self.target_dir is not None:
             from repro.storage.commit import SegmentStore
             self.store, recovered = SegmentStore.open(
-                self.target_dir, codec=getattr(self.cfg, "codec", "pfor"))
+                self.target_dir, codec=getattr(self.cfg, "codec", "pfor"),
+                degraded=self.degraded_ok)
             self.merger.store = self.store
             # resume from the last commit point: recovered segments rejoin
             # their merge tier, new doc ids continue after the committed
@@ -200,9 +236,18 @@ class DistributedIndexer:
                 self._next_doc = max(tops) + 1
         if self.merge_threads is None:
             self.merge_threads = self.cfg.merge_threads
+        if self.merge_retries is None:
+            self.merge_retries = getattr(self.cfg, "merge_retries", 0)
         if self.merge_threads:
+            merge_policy = None
+            if self.merge_retries:
+                from repro.storage.retry import RetryPolicy
+                merge_policy = RetryPolicy(max_retries=self.merge_retries,
+                                           base_delay_s=0.01,
+                                           max_delay_s=0.25)
             self.merge_scheduler = ConcurrentMergeScheduler(
-                self.merger, max_threads=self.merge_threads)
+                self.merger, max_threads=self.merge_threads,
+                retry_policy=merge_policy)
         if self.merge_io_mbps is None:
             self.merge_io_mbps = getattr(self.cfg, "merge_io_mbps", 0.0)
         if self.merge_io_mbps:
@@ -219,6 +264,26 @@ class DistributedIndexer:
         # document lifecycle: acknowledged-but-unapplied delete ids
         # (Lucene's BufferedUpdates), drained at flush under _flush_lock
         self._buffered_deletes = np.zeros(0, np.int64)
+        if self.wal is None:
+            self.wal = bool(getattr(self.cfg, "wal", False))
+        if self.wal and self.target_dir is not None:
+            from repro.storage.wal import WriteAheadLog
+            self._wal = WriteAheadLog(self.target_dir)
+            self._wal_covered = -1
+            self._replay_wal()
+        if self.scrub_every is None:
+            self.scrub_every = getattr(self.cfg, "scrub_every", 0.0)
+        if self.scrub_io_mbps is None:
+            self.scrub_io_mbps = getattr(self.cfg, "scrub_io_mbps", 0.0)
+        if self.target_dir is not None:
+            from repro.core.merge import MergeRateLimiter
+            from repro.storage.scrub import ChecksumScrubber
+            limiter = (MergeRateLimiter(self.scrub_io_mbps)
+                       if self.scrub_io_mbps else None)
+            self.scrubber = ChecksumScrubber(
+                self.target_dir, store=self.store, limiter=limiter,
+                interval_s=self.scrub_every or 0.0)
+            self.scrubber.start()   # no-op unless scrub_every > 0
         if self.refresh_every is None:
             self.refresh_every = getattr(self.cfg, "refresh_every", 0.0)
         self._stop_refresh = threading.Event()
@@ -229,14 +294,40 @@ class DistributedIndexer:
                 target=self._refresh_loop, name="nrt-refresh", daemon=True)
             self._refresh_thread.start()
 
+    def _replay_wal(self):
+        """Re-apply every readable WAL record through the normal ingest
+        paths, in sequence order. Doc-id allocation is deterministic —
+        ``_next_doc`` resumed from the committed max and replay order
+        equals original ack order — so every acked doc reappears under
+        its original id. Torn/rotted records (never acked) are skipped
+        and counted by the log."""
+        self._wal_replaying = True
+        try:
+            for _seq, op, payload in self._wal.replay():
+                if op == "add":
+                    self.index_batch(payload)
+                else:
+                    self.delete(payload)
+        finally:
+            self._wal_replaying = False
+
     def index_batch(self, tokens: np.ndarray):
         """tokens: (D, L) int32 host buffer. Accumulates in the in-memory
         buffer (the paper's RAM-budget inversion); flushes a segment when
-        the flush policy's budget fills."""
-        self.stats.docs += tokens.shape[0]
-        self.stats.tokens += int((tokens > 0).sum())
-        self.stats.read_bytes += tokens.nbytes
+        the flush policy's budget fills.
+
+        With the WAL enabled the batch is logged + synced *before* any
+        state changes: a return from this method means the docs survive
+        kill -9 even though they are only in the in-memory buffer. A
+        failed log append (e.g. ENOSPC past retries) therefore leaves the
+        indexer exactly as before the call — the batch was never acked."""
         with self._flush_lock:
+            if self._wal is not None and not self._wal_replaying:
+                from repro.storage.wal import encode_wal_add
+                self._wal.append(encode_wal_add(tokens))
+            self.stats.docs += tokens.shape[0]
+            self.stats.tokens += int((tokens > 0).sum())
+            self.stats.read_bytes += tokens.nbytes
             if self._flush_policy.add(tokens):
                 return self._flush()
         return None
@@ -252,6 +343,9 @@ class DistributedIndexer:
         if ids.size == 0:
             return 0
         with self._flush_lock:
+            if self._wal is not None and not self._wal_replaying:
+                from repro.storage.wal import encode_wal_delete
+                self._wal.append(encode_wal_delete(ids))
             self._buffered_deletes = np.union1d(self._buffered_deletes, ids)
             self.stats.deletes += int(ids.size)
         return int(ids.size)
@@ -302,6 +396,10 @@ class DistributedIndexer:
     def _flush_locked(self):
         if self._flush_policy.pending_docs == 0:
             self._apply_deletes_locked(drain=True)
+            if self._wal is not None:
+                # nothing buffered: every logged op's effect is in the
+                # live segment set, so the whole log is commit-covered
+                self._wal_covered = self._wal.next_seq - 1
             return None
         t0 = time.time()
         tokens = self._flush_policy.take()
@@ -317,6 +415,11 @@ class DistributedIndexer:
         # (after it, so deletes targeting docs in this very buffer hit
         # the segment they just became), then the buffer drains
         self._apply_deletes_locked(drain=True)
+        if self._wal is not None:
+            # every record appended before this flush (same lock) is now
+            # represented in flushed segments + applied deletes: the next
+            # successful commit makes them durable and may truncate
+            self._wal_covered = self._wal.next_seq - 1
         self.stats.flushed_bytes += seg.total_bytes()
         self.stats.wall_s += time.time() - t0
         return seg
@@ -346,7 +449,12 @@ class DistributedIndexer:
                 self._flush_locked()
             else:
                 self._apply_deletes_locked(drain=False)
-        return self.store.commit(self.merger.live_segments())
+            covered = self._wal_covered
+        gen = self.store.commit(self.merger.live_segments())
+        if self._wal is not None and covered >= 0:
+            # only once the commit is durable are its records disposable
+            self._wal.truncate_upto(covered)
+        return gen
 
     def finalize(self) -> Segment:
         """Force-merge to the paper's single-segment end state (committed
@@ -354,9 +462,13 @@ class DistributedIndexer:
         attached this first drains in-flight cascades (inside
         ``MergeDriver.finalize``); the scheduler stays usable afterwards."""
         self._flush()
+        with self._flush_lock:
+            covered = self._wal_covered
         final = self.merger.finalize()
         if self.store is not None:
             self.store.commit(self.merger.live_segments())
+            if self._wal is not None and covered >= 0:
+                self._wal.truncate_upto(covered)
         return final
 
     def close(self):
@@ -372,6 +484,9 @@ class DistributedIndexer:
             if self._refresh_error is not None:
                 err, self._refresh_error = self._refresh_error, None
                 raise err
+        if self.scrubber is not None:
+            scrubber, self.scrubber = self.scrubber, None
+            scrubber.close()   # re-raises a scrub-thread error
         if self.merge_scheduler is not None:
             self.merge_scheduler.close()
             self.merge_scheduler = None
@@ -409,7 +524,13 @@ class DistributedIndexer:
             else:
                 self._apply_deletes_locked(drain=False)
         t0 = time.time()
-        searcher = self.reader_cache.refresh(self.merger.live_segments())
+        recovery = None
+        if self.store is not None and self.store.quarantined:
+            from repro.storage.commit import RecoveryInfo
+            recovery = RecoveryInfo(
+                quarantined=dict(self.store.quarantined))
+        searcher = self.reader_cache.refresh(self.merger.live_segments(),
+                                             recovery=recovery)
         self.stats.refreshes += 1
         self.stats.last_refresh_s = time.time() - t0
         self.searcher = searcher   # the (atomic) NRT swap
@@ -481,6 +602,38 @@ class DistributedIndexer:
             "segments_skipped": ps.segments_skipped,
             "prune_skip_rate": ps.skip_rate,
         })
+        # fault-tolerance surface: is this index serving with holes, and
+        # what has the hardened IO path absorbed so far
+        if self.store is not None:
+            q = dict(self.store.quarantined)
+            report.update({
+                "degraded": bool(q),
+                "missing_docs": sum(int(v or 0) for v in q.values()),
+                "segments_quarantined": len(q),
+                "segments_healed": self.store.heals,
+            })
+        else:
+            report.update({
+                "degraded": bool(getattr(self.searcher, "degraded", False)),
+                "missing_docs": int(getattr(self.searcher,
+                                            "missing_docs", 0) or 0),
+                "segments_quarantined": len(getattr(self.searcher,
+                                                    "quarantined", ())
+                                            or ()),
+            })
+        if self._wal is not None:
+            report.update({"wal_appends": self._wal.appended,
+                           "wal_replayed": self._wal.replayed,
+                           "wal_skipped": self._wal.skipped})
+        if self.scrubber is not None:
+            report.update({f"scrub_{k}": v
+                           for k, v in self.scrubber.report().items()
+                           if k != "corrupt"})
+        if hasattr(self.target_dir, "retries"):
+            report["io_retries"] = self.target_dir.retries
+            report["io_giveups"] = self.target_dir.giveups
+        if self.merge_scheduler is not None:
+            report["merge_retries"] = self.merge_scheduler.merge_retries
         if self.store is not None:
             report.update(self._measured_report())
         return report

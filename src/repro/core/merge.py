@@ -798,6 +798,19 @@ class MergeDriver:
         return self.snapshot()["amplification"]
 
 
+class MergeRetriesExhausted(RuntimeError):
+    """A merge batch kept failing past the retry policy's cap — typed so
+    callers can tell a dead merge path from a first-strike error. The
+    final underlying failure is chained as ``__cause__``."""
+
+    def __init__(self, batch_key, attempts: int, cause: BaseException):
+        super().__init__(f"merge of batch {batch_key} failed after "
+                         f"{attempts} attempts: {cause}")
+        self.batch_key = batch_key
+        self.attempts = attempts
+        self.__cause__ = cause
+
+
 class ConcurrentMergeScheduler:
     """Background merge execution, mirroring Lucene's scheduler of the same
     name: ingest threads only *enqueue* merge pressure; a small thread pool
@@ -817,17 +830,30 @@ class ConcurrentMergeScheduler:
     the same batch clears its recorded error: transient failures self-heal
     instead of raising stale on a healthy index; persistent failures keep
     raising.
+
+    With a ``retry_policy`` (``storage.RetryPolicy``), a faulted merge is
+    *re-enqueued* with capped exponential backoff instead of parking its
+    error: the failed run already restored its inputs to their tier, so a
+    delayed ``notify`` simply re-claims the batch. Only after the cap is
+    exhausted does a typed ``MergeRetriesExhausted`` (chaining the last
+    failure) land in the error map for ``drain`` to raise. A success at
+    any attempt clears the batch's attempt count.
     """
 
-    def __init__(self, driver: MergeDriver, max_threads: int = 2):
+    def __init__(self, driver: MergeDriver, max_threads: int = 2,
+                 retry_policy=None):
         self.driver = driver
         self.max_threads = max_threads
+        self.retry_policy = retry_policy
         self.pool = ThreadPoolExecutor(max_workers=max_threads,
                                        thread_name_prefix="merge")
         self._cv = threading.Condition()
         self._pending = {}          # future -> _MergeWork, not yet done
         self._errors = {}           # batch key -> exception
+        self._attempts = {}         # batch key -> failed attempts so far
+        self._retry_timers = 0      # backoff timers not yet fired
         self.submitted = 0
+        self.merge_retries = 0      # backoff re-enqueues issued
         self.peak_pending = 0
         driver.scheduler = self
 
@@ -860,14 +886,43 @@ class ConcurrentMergeScheduler:
         with self._cv:
             work = self._pending.pop(fut, None)
             if work is not None:
+                key = self._key(work)
                 if exc is None:
-                    self._errors.pop(self._key(work), None)  # retry healed
+                    self._errors.pop(key, None)  # retry healed
+                    self._attempts.pop(key, None)
+                elif self.retry_policy is not None:
+                    attempts = self._attempts.get(key, 0) + 1
+                    self._attempts[key] = attempts
+                    if attempts <= self.retry_policy.max_retries:
+                        # inputs are already back in their tier (run_merge
+                        # restores on failure): re-claim after backoff
+                        t = threading.Timer(
+                            self.retry_policy.delay(attempts),
+                            self._retry_fire)
+                        t.daemon = True
+                        self._retry_timers += 1
+                        self.merge_retries += 1
+                        t.start()
+                    else:
+                        self._errors[key] = MergeRetriesExhausted(
+                            key, attempts, exc)
                 else:
-                    self._errors[self._key(work)] = exc
+                    self._errors[key] = exc
         if exc is None:
             self.notify()   # the installed output may have filled a tier
         with self._cv:
             self._cv.notify_all()
+
+    def _retry_fire(self):
+        with self._cv:
+            self._retry_timers -= 1
+            self._cv.notify_all()
+        try:
+            self.notify()
+        except BaseException:
+            # pool racing shutdown: notify's guard restored the claim, so
+            # the batch stays in its tier for a synchronous finalize
+            pass
 
     def drain(self):
         """Block until every pending and in-flight merge has completed
@@ -879,7 +934,7 @@ class ConcurrentMergeScheduler:
         while True:
             self.notify()
             with self._cv:
-                while self._pending:
+                while self._pending or self._retry_timers:
                     self._cv.wait(0.1)
                 if self._errors:
                     raise self._errors.pop(next(iter(self._errors)))

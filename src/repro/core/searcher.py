@@ -520,6 +520,12 @@ class IndexSearcher:
     prune: bool = True
     n_docs: int = 0                # LIVE docs in the snapshot
     avgdl: float = 1.0
+    # degraded serving (fault-tolerance layer): True when the snapshot
+    # was recovered minus quarantined segments — results are correct over
+    # the surviving docs, but ``missing_docs`` committed docs are absent
+    degraded: bool = False
+    missing_docs: int = 0
+    quarantined: tuple = ()        # quarantined segment base names
     prune_stats: PruneStats = None
     _doc_norms: list = None
     _df_terms: np.ndarray = None   # (U,) sorted union of segment terms
@@ -732,7 +738,10 @@ class ReaderCache:
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
 
-    def refresh(self, segs: list) -> IndexSearcher:
+    def refresh(self, segs: list, recovery=None) -> IndexSearcher:
+        """``recovery`` (a ``storage.RecoveryInfo`` or any object with
+        ``quarantined``/``missing_docs``) marks the returned searcher
+        degraded: it serves ``segs`` while reporting what is missing."""
         with self._lock:
             have = dict(self._readers)
         # build missing readers OUTSIDE the lock: a refresh that is all
@@ -777,5 +786,12 @@ class ReaderCache:
                 self._max_seen = snap_max
                 self.evictions += len(set(self._readers) - set(live))
                 self._readers = live
+        quarantined = tuple(sorted(getattr(recovery, "quarantined", ())
+                                   or ()))
         return IndexSearcher(readers=readers, k1=self.k1, b=self.b,
-                             prune=self.prune)
+                             prune=self.prune,
+                             degraded=bool(quarantined),
+                             missing_docs=int(getattr(recovery,
+                                                      "missing_docs", 0)
+                                              or 0),
+                             quarantined=quarantined)

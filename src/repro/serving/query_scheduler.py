@@ -62,6 +62,18 @@ class QueryScheduler:
         self._stats_mark = ps.snapshot() if ps is not None else None
 
     @property
+    def degraded(self) -> bool:
+        """True when the snapshot being served was recovered minus
+        quarantined segments — traffic keeps flowing, but callers (and
+        the future replica router) can see this node is incomplete."""
+        return bool(getattr(self.searcher, "degraded", False))
+
+    @property
+    def missing_docs(self) -> int:
+        """Committed docs absent from the snapshot being served."""
+        return int(getattr(self.searcher, "missing_docs", 0) or 0)
+
+    @property
     def prune_stats(self) -> PruneStats:
         """Pruning counters for everything THIS scheduler served: batches
         accumulated across searcher swaps plus the current searcher's

@@ -4,24 +4,44 @@ The storage subsystem turns the envelope model's *predicted* media
 behavior into something measured: segments become checksummed bytes
 written through a ``Directory`` (RAM / filesystem / bandwidth-throttled
 media emulation), commits make them durable, recovery reloads them.
+
+The fault-tolerance layer hardens the same seam: inject faults
+(``FaultInjectingDirectory``), retry past transient ones
+(``RetryPolicy``/``RetryingDirectory``), log acked ingest before it is
+flushed (``wal``), serve a partially-corrupt commit minus its
+quarantined casualties (``open_latest_degraded``), and scrub committed
+frames for bit rot in the background (``ChecksumScrubber``).
 """
 from repro.storage.codec import (CODECS, CorruptSegment, SEGMENT_SUFFIXES,
                                  decode_liveness, decode_segment,
                                  encode_liveness, encode_segment,
                                  read_segment, write_segment)
-from repro.storage.commit import (SegmentStore, list_commits, liv_name,
-                                  open_latest, open_searcher, read_commit,
-                                  write_commit)
+from repro.storage.commit import (RecoveryInfo, SegmentStore, list_commits,
+                                  liv_name, open_latest,
+                                  open_latest_degraded, open_searcher,
+                                  read_commit, write_commit)
 from repro.storage.directory import (MEDIA_PROFILES, DeviceThrottle,
-                                     Directory, FSDirectory, MediaProfile,
+                                     Directory, FaultInjectingDirectory,
+                                     FSDirectory, MediaProfile,
                                      RAMDirectory, ThrottledDirectory)
+from repro.storage.retry import (RetriesExhausted, RetryingDirectory,
+                                 RetryPolicy, is_transient_error)
+from repro.storage.scrub import ChecksumScrubber
+from repro.storage.wal import (WriteAheadLog, decode_wal, encode_wal_add,
+                               encode_wal_delete)
 
 __all__ = [
     "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES", "decode_liveness",
     "decode_segment", "encode_liveness", "encode_segment", "read_segment",
     "write_segment",
-    "SegmentStore", "list_commits", "liv_name", "open_latest",
-    "open_searcher", "read_commit", "write_commit",
-    "MEDIA_PROFILES", "DeviceThrottle", "Directory", "FSDirectory",
-    "MediaProfile", "RAMDirectory", "ThrottledDirectory",
+    "RecoveryInfo", "SegmentStore", "list_commits", "liv_name",
+    "open_latest", "open_latest_degraded", "open_searcher", "read_commit",
+    "write_commit",
+    "MEDIA_PROFILES", "DeviceThrottle", "Directory",
+    "FaultInjectingDirectory", "FSDirectory", "MediaProfile",
+    "RAMDirectory", "ThrottledDirectory",
+    "RetriesExhausted", "RetryingDirectory", "RetryPolicy",
+    "is_transient_error",
+    "ChecksumScrubber",
+    "WriteAheadLog", "decode_wal", "encode_wal_add", "encode_wal_delete",
 ]

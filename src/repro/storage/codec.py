@@ -75,6 +75,7 @@ _FRAME_OVERHEAD = _HEADER_LEN + 4
 KIND_DICT, KIND_PST, KIND_POS, KIND_DOC = 1, 2, 3, 4
 KIND_MANIFEST, KIND_SPOOL = 5, 6
 KIND_LIV = 7
+KIND_WAL = 8
 
 SEGMENT_SUFFIXES = (".dict", ".pst", ".pos", ".doc")
 _SUFFIX_KIND = {".dict": KIND_DICT, ".pst": KIND_PST,

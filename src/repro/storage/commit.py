@@ -65,9 +65,14 @@ def liv_name(base: str, gen: int) -> str:
 
 
 def write_commit(directory: Directory, gen: int, names: list[str],
-                 codec: str = "pfor", liv: dict = None) -> str:
+                 codec: str = "pfor", liv: dict = None,
+                 doc_counts: dict = None, quarantined: dict = None) -> str:
     """Two-phase commit of one manifest; returns its file name. ``liv``
     maps a segment base name to its current delete-generation file.
+    ``doc_counts`` (base name -> n_docs) makes a future quarantine's
+    missing-doc count exact; ``quarantined`` (base name -> n_docs or
+    None) carries forward segments already lost to corruption, so a
+    degraded index stays honest about its holes across commits.
 
     Durability barrier first: every data file the manifest references —
     the four files of each segment plus any ``.liv`` — is synced in ONE
@@ -76,7 +81,9 @@ def write_commit(directory: Directory, gen: int, names: list[str],
     protocol pays fsync once per commit instead of once per write."""
     liv = dict(liv or {})
     payload = json.dumps({"gen": gen, "codec": codec,
-                          "segments": list(names), "liv": liv},
+                          "segments": list(names), "liv": liv,
+                          "doc_counts": dict(doc_counts or {}),
+                          "quarantined": dict(quarantined or {})},
                          sort_keys=True).encode()
     name = manifest_name(gen)
     data_files = [n + sfx for n in names
@@ -99,6 +106,9 @@ def read_commit(directory: Directory, name: str) -> dict:
     liv = meta.setdefault("liv", {})  # pre-lifecycle manifests lack it
     if not isinstance(liv, dict):
         raise CorruptSegment(f"manifest {name} has a malformed liv map")
+    for k in ("doc_counts", "quarantined"):  # pre-fault-tolerance manifests
+        if not isinstance(meta.setdefault(k, {}), dict):
+            raise CorruptSegment(f"manifest {name} has a malformed {k} map")
     return meta
 
 
@@ -109,53 +119,150 @@ def list_commits(directory: Directory) -> list[int]:
     return sorted(gens, reverse=True)
 
 
-def _open_latest_full(directory: Directory
-                      ) -> tuple[int, list, list, dict]:
-    """Newest fully-valid commit as ``(gen, segments, names, liv)`` —
+@dataclass
+class RecoveryInfo:
+    """What recovery had to step around: skipped commits, flaky reads,
+    and — in degraded mode — segments quarantined for corruption."""
+
+    commits_skipped: int = 0
+    io_errors: int = 0
+    # base name -> committed n_docs (None when the manifest predates
+    # doc_counts and the loss size is unknown)
+    quarantined: dict = field(default_factory=dict)
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.quarantined)
+
+    @property
+    def missing_docs(self) -> int:
+        return sum(int(v or 0) for v in self.quarantined.values())
+
+
+# what the commit walk survives: checksum/shape corruption from torn
+# writes and bit rot, plus (satellite of the fault-tolerance PR) any
+# OSError from a flaky read — a transient EIO mid-walk must send
+# recovery to the next-oldest commit, not kill it. FileNotFoundError and
+# RetriesExhausted are OSErrors, so one class covers all of them.
+_RECOVERY_SKIP = (CorruptSegment, json.JSONDecodeError, struct.error,
+                  OSError)
+
+
+def _load_segment(directory, meta, n):
+    seg = read_segment(directory, n)
+    lname = meta["liv"].get(n)
+    if lname is not None:
+        mask = decode_liveness(directory.read_file(lname), seg.n_docs)
+        seg = seg.with_deletes(seg.doc_ids[mask])
+    return seg
+
+
+def _open_latest_full(directory: Directory, degraded: bool = False,
+                      info: RecoveryInfo = None
+                      ) -> tuple[int, list, list, dict, RecoveryInfo]:
+    """Newest usable commit as ``(gen, segments, names, liv, info)`` —
     shared by ``open_latest`` and ``SegmentStore.open`` so the manifest
     is read (and its bytes charged to the device) exactly once. Each
     segment's committed delete generation is decoded and re-attached
-    (``with_deletes``); a missing or torn ``.liv`` invalidates the whole
-    commit, exactly like a torn segment file."""
-    for gen in list_commits(directory):
+    (``with_deletes``).
+
+    Strict mode (default): a missing/torn segment or ``.liv`` — or a
+    flaky read (any ``OSError``) — invalidates the whole commit and the
+    walk continues to the next-oldest manifest; partial commits never
+    surface partially.
+
+    Degraded mode: when no commit fully validates (the common post-rot
+    shape — older manifests are deleted at each commit, so falling back
+    usually means losing *everything*), the newest commit whose manifest
+    frame validates is served anyway: each unreadable segment is
+    quarantined in ``info.quarantined`` (with its committed doc count
+    when the manifest records one) and the rest are loaded. Segments the
+    manifest itself lists as previously quarantined stay quarantined
+    either way.
+    """
+    info = info if info is not None else RecoveryInfo()
+    gens = list_commits(directory)
+    chosen = None
+    for gen in gens:
         try:
             meta = read_commit(directory, manifest_name(gen))
-            segs = []
-            for n in meta["segments"]:
-                seg = read_segment(directory, n)
-                lname = meta["liv"].get(n)
-                if lname is not None:
-                    mask = decode_liveness(directory.read_file(lname),
-                                           seg.n_docs)
-                    seg = seg.with_deletes(seg.doc_ids[mask])
-                segs.append(seg)
-        except (CorruptSegment, json.JSONDecodeError, struct.error,
-                FileNotFoundError):
+            segs = [_load_segment(directory, meta, n)
+                    for n in meta["segments"]]
+        except _RECOVERY_SKIP as e:
+            if isinstance(e, OSError) and not isinstance(
+                    e, FileNotFoundError):
+                info.io_errors += 1
+            info.commits_skipped += 1
             continue
-        return gen, segs, list(meta["segments"]), dict(meta["liv"])
-    return 0, [], [], {}
+        chosen = (gen, segs, list(meta["segments"]), dict(meta["liv"]),
+                  meta)
+        break
+    if degraded and gens and (chosen is None or chosen[0] != gens[0]):
+        newer = [g for g in gens if chosen is None or g > chosen[0]]
+        for gen in newer:
+            try:
+                meta = read_commit(directory, manifest_name(gen))
+            except _RECOVERY_SKIP:
+                continue  # already counted by the strict walk
+            segs, names, liv, quar = [], [], {}, {}
+            for n in meta["segments"]:
+                try:
+                    segs.append(_load_segment(directory, meta, n))
+                except _RECOVERY_SKIP:
+                    quar[n] = meta["doc_counts"].get(n)
+                    continue
+                names.append(n)
+                if meta["liv"].get(n) is not None:
+                    liv[n] = meta["liv"][n]
+            # an all-casualty commit is no better than the strict pick
+            if segs or chosen is None:
+                info.quarantined.update(quar)
+                chosen = (gen, segs, names, liv, meta)
+            break
+    if chosen is None:
+        return 0, [], [], {}, info
+    gen, segs, names, liv, meta = chosen
+    for n, count in meta["quarantined"].items():
+        info.quarantined.setdefault(n, count)
+    return gen, segs, names, liv, info
 
 
 def open_latest(directory: Directory) -> tuple[int, list]:
     """Load the newest fully-valid commit point: ``(gen, segments)``.
 
     Walks commits newest-first; a commit whose manifest or any referenced
-    segment file fails its checksum (torn by an interrupted run) is
-    skipped entirely — partial commits never surface partially. An empty
+    segment file fails its checksum (torn by an interrupted run) — or
+    throws a flaky-read ``OSError`` — is skipped entirely. An empty
     or never-committed directory recovers to ``(0, [])``. Recovered
     segments carry their committed tombstone bitmaps.
     """
-    gen, segs, _, _ = _open_latest_full(directory)
+    gen, segs, _, _, _ = _open_latest_full(directory)
     return gen, segs
 
 
-def open_searcher(directory: Directory, reader_cache=None):
+def open_latest_degraded(directory: Directory
+                         ) -> tuple[int, list, RecoveryInfo]:
+    """Like ``open_latest``, but a commit with corrupt segments is served
+    minus its casualties instead of abandoned: returns ``(gen, segments,
+    info)`` where ``info.quarantined``/``info.missing_docs`` name the
+    holes. Identical to the strict walk whenever everything validates."""
+    gen, segs, _, _, info = _open_latest_full(directory, degraded=True)
+    return gen, segs, info
+
+
+def open_searcher(directory: Directory, reader_cache=None,
+                  degraded: bool = False):
     """Recovery straight to the read path: load the latest commit and
     refresh a ``ReaderCache`` over it (loaded segments get fresh seg_ids,
-    so the cache treats them like any live segment set)."""
+    so the cache treats them like any live segment set). With
+    ``degraded=True`` a partially-corrupt commit serves its surviving
+    segments and the searcher carries ``degraded``/``missing_docs``."""
     from repro.core.searcher import ReaderCache
-    gen, segs = open_latest(directory)
     cache = reader_cache if reader_cache is not None else ReaderCache()
+    if degraded:
+        gen, segs, info = open_latest_degraded(directory)
+        return gen, cache.refresh(segs, recovery=info)
+    gen, segs = open_latest(directory)
     return gen, cache.refresh(segs)
 
 
@@ -184,8 +291,15 @@ class SegmentStore:
     bytes_encoded_written: int = 0   # cumulative, flush + merges + .liv
     bytes_encoded_read: int = 0      # merge re-reads through the directory
     n_commits: int = 0
+    heals: int = 0                   # quarantined segs rewritten from memory
+    # base name -> committed n_docs (or None): segments lost to corruption,
+    # excluded from commits but carried in every manifest so degraded
+    # serving stays honest; fed by degraded recovery and the scrubber
+    quarantined: dict = field(default_factory=dict)
+    recovery: RecoveryInfo = None
     _counter: int = 0
     _names: dict = field(default_factory=dict)   # seg_id -> file base name
+    _doc_counts: dict = field(default_factory=dict)  # base name -> n_docs
     _sizes: dict = field(default_factory=dict)   # base/liv name -> bytes
     _suffix_sizes: dict = field(default_factory=dict)  # base -> {sfx: bytes}
     _superseded: set = field(default_factory=set)  # names eligible to delete
@@ -200,8 +314,8 @@ class SegmentStore:
                                   repr=False)
 
     @classmethod
-    def open(cls, directory: Directory, codec: str = "pfor"
-             ) -> tuple["SegmentStore", list]:
+    def open(cls, directory: Directory, codec: str = "pfor",
+             degraded: bool = False) -> tuple["SegmentStore", list]:
         """Recover a store over an existing directory: load the latest
         commit, register its segments and their committed ``.liv``
         generations, delete every unreferenced store-owned file (stray
@@ -209,13 +323,19 @@ class SegmentStore:
         generations — there are no concurrent writers during recovery, so
         cleanup is safe here). Files the store could not have written
         (spooled source batches, anything else living in the directory)
-        are left untouched."""
-        gen, segs, names, liv = _open_latest_full(directory)
+        are left untouched. ``degraded=True`` lets a partially-corrupt
+        newest commit recover minus its casualties (quarantined, their
+        files preserved as evidence) instead of falling back."""
+        gen, segs, names, liv, info = _open_latest_full(
+            directory, degraded=degraded)
         store = cls(directory=directory, codec=codec, gen=gen)
+        store.recovery = info
+        store.quarantined = dict(info.quarantined)
         keep = set()
         if gen:
             for seg, name in zip(segs, names):
                 store._names[seg.seg_id] = name
+                store._doc_counts[name] = seg.n_docs
                 store._suffix_sizes[name] = {
                     sfx: directory.file_size(name + sfx)
                     for sfx in seg_codec.SEGMENT_SUFFIXES}
@@ -232,6 +352,13 @@ class SegmentStore:
                     store._sizes[lname] = directory.file_size(lname)
                     keep.add(lname)
             keep.add(manifest_name(gen))
+        # a quarantined segment's files are evidence, not garbage: keep
+        # every file belonging to a quarantined base name
+        for qname in store.quarantined:
+            keep.update(qname + sfx for sfx in seg_codec.SEGMENT_SUFFIXES)
+            keep.update(f for f in directory.list_files()
+                        if (m := LIV_NAME_RE.match(f))
+                        and m.group(1) == qname)
         for f in directory.list_files():
             if f not in keep and _OWNED_RE.match(f):
                 directory.delete_file(f)
@@ -269,6 +396,7 @@ class SegmentStore:
                   for sfx in seg_codec.SEGMENT_SUFFIXES}
         with self._lock:
             self._names[seg.seg_id] = name
+            self._doc_counts[name] = seg.n_docs
             self._sizes[name] = n
             self._suffix_sizes[name] = by_sfx
             self.bytes_encoded_written += n
@@ -290,6 +418,22 @@ class SegmentStore:
         with self._lock:
             self.bytes_encoded_read += total
         return total
+
+    def quarantine(self, file_name: str) -> bool:
+        """Mark the segment owning ``file_name`` (a base name, one of its
+        suffixed files, or a ``.liv``) as corrupt-on-media. Its files are
+        preserved but it will never be referenced by a future commit —
+        unless the segment is still live in memory, in which case the
+        next ``commit`` rewrites it under a fresh name (self-heal).
+        Returns True when this is a new quarantine. Fed by the checksum
+        scrubber and by degraded recovery."""
+        m = LIV_NAME_RE.match(file_name)
+        base = m.group(1) if m else file_name.split(".", 1)[0]
+        with self._lock:
+            if base in self.quarantined:
+                return False
+            self.quarantined[base] = self._doc_counts.get(base)
+            return True
 
     def mark_superseded(self, segs) -> None:
         """Record that ``segs`` left the live set permanently (their merge
@@ -342,8 +486,26 @@ class SegmentStore:
         two-phase-write the manifest referencing exactly one generation
         per segment, then delete files that are superseded AND
         unreferenced by this manifest — dead segments, stale ``.liv``
-        generations, and all older manifests."""
+        generations, and all older manifests.
+
+        Self-heal: a live segment whose on-media copy was quarantined
+        (scrubber-detected rot) is rewritten from memory under a fresh
+        name first — the in-memory Segment is authoritative, so a live
+        writer recovers from bit rot with zero loss; the corrupt files
+        are superseded and deleted like any dead segment's."""
         live_segments = list(live_segments)
+        with self._lock:
+            quarantined_now = set(self.quarantined)
+        if quarantined_now:
+            for s in live_segments:
+                with self._lock:
+                    old = self._names.get(s.seg_id)
+                if old in quarantined_now:
+                    self.write(s)   # re-registers seg_id under a new name
+                    with self._lock:
+                        self.quarantined.pop(old, None)
+                        self._superseded.add(old)
+                        self.heals += 1
         with self._lock:
             try:
                 names = [self._names[s.seg_id] for s in live_segments]
@@ -377,7 +539,12 @@ class SegmentStore:
                 self._sizes[fname] = n
                 self.bytes_encoded_written += n
                 liv[name] = fname
-        write_commit(self.directory, gen, names, self.codec, liv=liv)
+        with self._lock:
+            doc_counts = {n: self._doc_counts[n] for n in names
+                          if n in self._doc_counts}
+            quarantined = dict(self.quarantined)
+        write_commit(self.directory, gen, names, self.codec, liv=liv,
+                     doc_counts=doc_counts, quarantined=quarantined)
         with self._lock:
             self.n_commits += 1
             live = set(names)
@@ -386,6 +553,7 @@ class SegmentStore:
                 self._superseded.discard(n)
                 self._sizes.pop(n, None)
                 self._suffix_sizes.pop(n, None)
+                self._doc_counts.pop(n, None)
                 # a dead segment's delete generation dies with it
                 lname = self._liv_file.pop(n, None)
                 if lname is not None:

@@ -7,11 +7,19 @@ experiments become *runnable* instead of modeled:
 
   ``RAMDirectory``        dict-backed, for tests and as the inner store of
                           throttled in-silico experiments.
-  ``FSDirectory``         one flat filesystem directory. ``write_file`` is
-                          deliberately NOT atomic (a kill mid-write leaves a
-                          torn file, like a real crash); only ``rename`` is
-                          atomic (``os.replace``), which is all the two-phase
-                          commit protocol in ``storage/commit.py`` needs.
+  ``FSDirectory``         one flat filesystem directory. ``write_file``
+                          stages into a hidden ``.tmp.`` name and
+                          ``os.replace``s it into place, so a kill mid-write
+                          leaves either the old content or nothing — never a
+                          torn file; ``rename`` is ``os.replace`` too, which
+                          is all the two-phase commit protocol in
+                          ``storage/commit.py`` needs.
+  ``FaultInjectingDirectory``  wraps any Directory and injects seeded or
+                          scripted faults per op — transient/persistent
+                          ``IOError``, ``ENOSPC``, torn writes (prefix
+                          only), silent bit flips, latency spikes — so the
+                          retry / quarantine / WAL-replay machinery above
+                          can be driven deterministically in tests.
   ``ThrottledDirectory``  wraps any Directory and charges every byte to a
                           ``DeviceThrottle`` — a single device timeline with
                           the bandwidth/latency profile of one of the paper's
@@ -27,8 +35,10 @@ GB/min next to the analytic ``core/envelope.py`` prediction.
 """
 from __future__ import annotations
 
+import errno
 import mmap as _mmap
 import os
+import random
 import threading
 import time
 from dataclasses import dataclass
@@ -195,14 +205,17 @@ class RAMDirectory(Directory):
 class FSDirectory(Directory):
     """One flat directory on the local filesystem.
 
-    ``write_file`` writes in place (non-atomic on purpose: a crash can
-    leave a torn file, which the codec's checksums and the commit
-    protocol's recovery must survive) and does NOT fsync — durability is
-    batched into the ``sync`` barrier the commit protocol issues over all
-    its data files at once, one fsync per file plus one on the directory
-    inode (so the renames themselves are durable too). ``rename`` is
-    ``os.replace`` — atomic on POSIX — and is the only primitive the
-    two-phase commit relies on.
+    ``write_file`` stages the bytes into a hidden ``.tmp.<name>`` file
+    and ``os.replace``s it over the target, so a mid-write failure (EIO,
+    ENOSPC, kill -9) leaves the previous content — or no file — never a
+    half-written one. Stale ``.tmp.`` files from a crashed writer are
+    swept on construction (the recovery moment: a restart builds a fresh
+    FSDirectory) and hidden from ``list_files``. Writes still do NOT
+    fsync — durability is batched into the ``sync`` barrier the commit
+    protocol issues over all its data files at once, one fsync per file
+    plus one on the directory inode (so the renames themselves are
+    durable too). ``rename`` is ``os.replace`` — atomic on POSIX — and
+    is the only primitive the two-phase commit relies on.
 
     ``mmap=True`` serves reads through memory-mapped files (Lucene's
     MMapDirectory seam): the data path is the page cache via ``mmap(2)``
@@ -232,19 +245,40 @@ class FSDirectory(Directory):
     identically across both paths.
     """
 
+    _TMP_PREFIX = ".tmp."
+
     def __init__(self, path: str, mmap: bool = False):
         super().__init__()
         self.path = str(path)
         self.use_mmap = bool(mmap)
         self.mmap_reads = 0
+        self.stale_tmps_removed = 0
         os.makedirs(self.path, exist_ok=True)
+        # recovery sweep: a crashed writer's staged files are garbage
+        for n in os.listdir(self.path):
+            if n.startswith(self._TMP_PREFIX) and os.path.isfile(self._p(n)):
+                try:
+                    os.remove(self._p(n))
+                    self.stale_tmps_removed += 1
+                except OSError:
+                    pass
 
     def _p(self, name):
         return os.path.join(self.path, name)
 
     def _write(self, name, data):
-        with open(self._p(name), "wb") as f:
-            f.write(data)
+        # stage + replace: the target name only ever holds complete bytes
+        tmp = self._TMP_PREFIX + name
+        try:
+            with open(self._p(tmp), "wb") as f:
+                f.write(data)
+            os.replace(self._p(tmp), self._p(name))
+        except BaseException:
+            try:
+                os.remove(self._p(tmp))
+            except OSError:
+                pass
+            raise
 
     def _sync(self, names):
         for name in names:
@@ -299,7 +333,8 @@ class FSDirectory(Directory):
 
     def _list(self):
         return [n for n in os.listdir(self.path)
-                if os.path.isfile(self._p(n))]
+                if os.path.isfile(self._p(n))
+                and not n.startswith(self._TMP_PREFIX)]
 
     def _delete(self, name):
         os.remove(self._p(name))
@@ -446,4 +481,213 @@ class ThrottledDirectory(Directory):
         self.inner.sync(names)
 
     def _size(self, name):
+        return self.inner.file_size(name)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("transient", "persistent", "enospc", "torn", "flip",
+               "latency")
+
+# ops a fault can target; "*" in scripted faults matches any of them
+_FAULT_OPS = ("write", "read", "list", "delete", "rename", "sync", "size")
+
+
+class FaultInjectingDirectory(Directory):
+    """A Directory wrapper that makes the media *fail* on purpose.
+
+    Real NAS mounts, disk arrays, and SSDs throw transient EIO, run out
+    of space, tear writes, rot bits, and stall — the paper's envelope
+    only holds on the runs that survive them. This wrapper injects those
+    faults either **seeded** (per-op probabilities drawn from one RNG,
+    reproducible by seed) or **scripted** (``fail_next``/``fail_always``/
+    ``corrupt_file`` for deterministic tests):
+
+      transient   op raises ``OSError(EIO)``; the same op on the same
+                  name heals after ``transient_repeat`` consecutive
+                  failures, so capped retries provably recover.
+      persistent  op raises ``OSError(EIO)`` forever (``fail_always``).
+      enospc      write-side op raises ``OSError(ENOSPC)`` once — the
+                  non-retryable class a RetryPolicy must refuse.
+      torn        ``_write`` stores a strict prefix of the data, then
+                  raises — the on-media state a kill mid-write leaves.
+      flip        after a successful write, one random bit of the stored
+                  bytes is flipped *silently* (no exception) — bit rot
+                  that only crc32 validation can catch.
+      latency     the op sleeps ``latency_s`` before proceeding.
+
+    Fault and op counts land in ``injected``/``op_counts`` next to the
+    byte/wall accounting every Directory already keeps. ``armed=False``
+    pauses all injection (setup/teardown phases of a test).
+    """
+
+    def __init__(self, inner: Directory, seed: int = 0, *,
+                 p_transient: float = 0.0, p_torn: float = 0.0,
+                 p_enospc: float = 0.0, p_flip: float = 0.0,
+                 p_latency: float = 0.0, latency_s: float = 0.001,
+                 transient_repeat: int = 1):
+        super().__init__()
+        self.inner = inner
+        self.p_transient = p_transient
+        self.p_torn = p_torn
+        self.p_enospc = p_enospc
+        self.p_flip = p_flip
+        self.p_latency = p_latency
+        self.latency_s = latency_s
+        self.transient_repeat = max(1, int(transient_repeat))
+        self.armed = True
+        self.injected = {k: 0 for k in FAULT_KINDS}
+        self.op_counts = {op: 0 for op in _FAULT_OPS}
+        self._rng = random.Random(seed)
+        self._fault_lock = threading.Lock()
+        # (op, name) -> [kind, remaining_failures]: a drawn fault replays
+        # deterministically until exhausted, so retries are bounded
+        self._pending: dict[tuple, list] = {}
+        self._scripted: list[dict] = []   # fail_next queue, FIFO
+        self._always: list[tuple] = []    # (op_or_*, name_substr)
+
+    # -- scripting ----------------------------------------------------------
+    def fail_next(self, op: str = "*", kind: str = "transient",
+                  times: int = 1, name_substr: str = "") -> None:
+        """Queue ``times`` deterministic faults for the next matching ops."""
+        if kind not in ("transient", "persistent", "enospc", "torn"):
+            raise ValueError(f"unknown scripted fault kind {kind!r}")
+        with self._fault_lock:
+            self._scripted.append({"op": op, "kind": kind,
+                                   "times": int(times),
+                                   "name": name_substr})
+
+    def fail_always(self, op: str = "*", name_substr: str = "") -> None:
+        """Every matching op fails persistently from now on."""
+        with self._fault_lock:
+            self._always.append((op, name_substr))
+
+    def clear_faults(self) -> None:
+        with self._fault_lock:
+            self._scripted.clear()
+            self._always.clear()
+            self._pending.clear()
+
+    def corrupt_file(self, name: str, bit: int | None = None) -> int:
+        """Flip one bit of ``name``'s stored bytes right now (post-commit
+        bit rot); returns the flipped bit index."""
+        data = bytearray(self.inner.read_file(name))
+        if not data:
+            raise ValueError(f"cannot corrupt empty file {name!r}")
+        if bit is None:
+            bit = self._rng.randrange(len(data) * 8)
+        data[bit // 8] ^= 1 << (bit % 8)
+        self.inner.write_file(name, bytes(data))
+        with self._fault_lock:
+            self.injected["flip"] += 1
+        return bit
+
+    # -- fault engine -------------------------------------------------------
+    def _count(self, kind):
+        self.injected[kind] += 1
+
+    def _match(self, spec_op, spec_name, op, name):
+        return (spec_op in ("*", op)) and (spec_name in name)
+
+    def _gate(self, op: str, name: str, writeish: bool) -> str | None:
+        """Count the op; raise/sleep per scripted then seeded faults.
+        Returns "torn" when the caller (``_write``) must tear the write."""
+        with self._fault_lock:
+            self.op_counts[op] += 1
+            if not self.armed:
+                return None
+            # scripted faults take precedence: deterministic by order
+            for spec in self._scripted:
+                if spec["times"] > 0 and self._match(spec["op"],
+                                                    spec["name"], op, name):
+                    spec["times"] -= 1
+                    kind = spec["kind"]
+                    if kind == "torn" and op != "write":
+                        kind = "transient"
+                    self._count(kind if kind != "persistent"
+                                else "persistent")
+                    if kind == "torn":
+                        return "torn"
+                    if kind == "enospc":
+                        raise OSError(errno.ENOSPC,
+                                      f"injected ENOSPC: {op} {name}")
+                    raise OSError(errno.EIO,
+                                  f"injected {kind} fault: {op} {name}")
+            for spec_op, spec_name in self._always:
+                if self._match(spec_op, spec_name, op, name):
+                    self._count("persistent")
+                    raise OSError(errno.EIO,
+                                  f"injected persistent fault: {op} {name}")
+            # seeded faults: one pending state per (op, name). A drawn
+            # fault fails exactly `remaining` consecutive attempts; the
+            # attempt after that succeeds deterministically (no fresh
+            # draw), so a retry cap >= transient_repeat provably heals.
+            key = (op, name)
+            st = self._pending.get(key)
+            if st is not None and st[1] <= 0:
+                del self._pending[key]   # healed: this attempt succeeds
+            elif st is None:
+                r = self._rng.random()
+                if writeish and r < self.p_torn:
+                    st = ["torn", self.transient_repeat]
+                elif writeish and r < self.p_torn + self.p_enospc:
+                    st = ["enospc", 1]
+                elif r < self.p_torn + self.p_enospc + self.p_transient:
+                    st = ["transient", self.transient_repeat]
+                if st is not None:
+                    self._pending[key] = st
+            if st is not None and st[1] > 0:
+                st[1] -= 1
+                kind = st[0]
+                self._count(kind)
+                if kind == "torn":
+                    return "torn"
+                if kind == "enospc":
+                    raise OSError(errno.ENOSPC,
+                                  f"injected ENOSPC: {op} {name}")
+                raise OSError(errno.EIO,
+                              f"injected transient fault: {op} {name}")
+            spike = (self.p_latency > 0
+                     and self._rng.random() < self.p_latency)
+            if spike:
+                self._count("latency")
+        if spike:
+            time.sleep(self.latency_s)
+        return None
+
+    # -- Directory ops ------------------------------------------------------
+    def _write(self, name, data):
+        verdict = self._gate("write", name, writeish=True)
+        if verdict == "torn":
+            cut = self._rng.randrange(len(data)) if len(data) else 0
+            self.inner.write_file(name, data[:cut])
+            raise OSError(errno.EIO, f"injected torn write: {name}")
+        self.inner.write_file(name, data)
+        if self.armed and self.p_flip and self._rng.random() < self.p_flip:
+            self.corrupt_file(name)
+
+    def _read(self, name):
+        self._gate("read", name, writeish=False)
+        return self.inner.read_file(name)
+
+    def _list(self):
+        self._gate("list", "", writeish=False)
+        return self.inner._list()
+
+    def _delete(self, name):
+        self._gate("delete", name, writeish=True)
+        self.inner.delete_file(name)
+
+    def _rename(self, src, dst):
+        self._gate("rename", dst, writeish=True)
+        self.inner.rename(src, dst)
+
+    def _sync(self, names):
+        self._gate("sync", ";".join(names), writeish=True)
+        self.inner.sync(names)
+
+    def _size(self, name):
+        self._gate("size", name, writeish=False)
         return self.inner.file_size(name)

@@ -1,0 +1,150 @@
+"""Write-ahead log for the ingest buffer — the durability gap closer.
+
+The indexer acks ``index_batch``/``delete`` as soon as the ops are in
+its in-memory buffer; segments only reach the Directory at flush and
+only become visible at commit. A kill -9 between ack and flush
+therefore used to lose acked documents silently — exactly the buffered
+write path the incremental-indexing literature calls the
+durability-critical piece. The WAL closes that gap:
+
+  * every acked op is first appended as one ``wal_<seq>`` file holding
+    one frame-v2 record (``KIND_WAL``, crc32-checked like every other
+    frame) and synced *before* the ack;
+  * on recovery, records are replayed in sequence order through the
+    normal ingest paths — doc-id allocation is deterministic (replay
+    order equals original order, ``_next_doc`` resumes from the
+    committed max), so every acked doc reappears with its original id,
+    exactly once;
+  * a torn tail record (the op that was mid-append at the kill) fails
+    its crc and is skipped: it was never acked, so nothing is lost;
+  * at commit, every record the flushed segments now cover is deleted
+    (``truncate_upto``), keeping the log bounded by the commit cadence.
+
+Record payloads (little-endian, inside the frame):
+
+  add     ``b"A" | u64 D | u64 L | D*L * i32 tokens``
+  delete  ``b"D" | u64 n | n * i64 doc_ids``
+"""
+from __future__ import annotations
+
+import re
+import struct
+
+import numpy as np
+
+from repro.storage.codec import CorruptSegment, KIND_WAL, frame, unframe
+from repro.storage.directory import Directory
+
+WAL_RE = re.compile(r"^wal_(\d{10})$")
+
+
+def wal_name(seq: int) -> str:
+    return f"wal_{seq:010d}"
+
+
+def encode_wal_add(tokens: np.ndarray) -> bytes:
+    tokens = np.asarray(tokens, dtype=np.int32)
+    if tokens.ndim != 2:
+        raise ValueError(f"wal add expects (D, L) tokens, got "
+                         f"{tokens.shape}")
+    d, l = tokens.shape
+    return (b"A" + struct.pack("<QQ", d, l)
+            + tokens.astype("<i4").tobytes())
+
+
+def encode_wal_delete(doc_ids) -> bytes:
+    ids = np.asarray(doc_ids, dtype=np.int64)
+    return b"D" + struct.pack("<Q", ids.size) + ids.astype("<i8").tobytes()
+
+
+def decode_wal(payload: bytes):
+    """-> ("add", tokens (D, L) int32) | ("delete", ids int64)."""
+    if not payload:
+        raise CorruptSegment("empty wal record")
+    tag = payload[:1]
+    if tag == b"A":
+        if len(payload) < 17:
+            raise CorruptSegment("wal add header truncated")
+        d, l = struct.unpack("<QQ", payload[1:17])
+        body = payload[17:]
+        if len(body) != d * l * 4:
+            raise CorruptSegment(
+                f"wal add body {len(body)}B != {d}x{l} i32")
+        return "add", np.frombuffer(body, dtype="<i4").reshape(
+            d, l).astype(np.int32)
+    if tag == b"D":
+        if len(payload) < 9:
+            raise CorruptSegment("wal delete header truncated")
+        (n,) = struct.unpack("<Q", payload[1:9])
+        body = payload[9:]
+        if len(body) != n * 8:
+            raise CorruptSegment(
+                f"wal delete body {len(body)}B != {n} i64")
+        return "delete", np.frombuffer(body, dtype="<i8").astype(np.int64)
+    raise CorruptSegment(f"unknown wal record tag {tag!r}")
+
+
+class WriteAheadLog:
+    """Sequenced one-record-per-file log over a Directory.
+
+    File names (``wal_0000000042``) deliberately do not match the
+    commit layer's owned-file pattern, so segment recovery cleanup
+    leaves the log alone; only ``truncate_upto`` deletes records.
+    """
+
+    def __init__(self, directory: Directory):
+        self.directory = directory
+        seqs = self._seqs()
+        self._next_seq = (max(seqs) + 1) if seqs else 0
+        self.appended = 0
+        self.replayed = 0
+        self.skipped = 0
+
+    def _seqs(self) -> list[int]:
+        return sorted(int(m.group(1))
+                      for n in self.directory.list_files()
+                      if (m := WAL_RE.match(n)))
+
+    @property
+    def next_seq(self) -> int:
+        return self._next_seq
+
+    def append(self, payload: bytes) -> int:
+        """Write + sync one record; returns its sequence number. Only
+        after this returns may the op be acked."""
+        seq = self._next_seq
+        name = wal_name(seq)
+        self.directory.write_file(name, frame(KIND_WAL, payload))
+        self.directory.sync([name])
+        self._next_seq = seq + 1
+        self.appended += 1
+        return seq
+
+    def replay(self):
+        """Yield ``(seq, op, payload)`` for every readable record in
+        sequence order; corrupt (torn / bit-rotted, never-acked) records
+        are counted in ``skipped`` and passed over."""
+        for seq in self._seqs():
+            self._next_seq = max(self._next_seq, seq + 1)
+            try:
+                data = self.directory.read_file(wal_name(seq))
+                op, payload = decode_wal(unframe(data, KIND_WAL))
+            except (CorruptSegment, FileNotFoundError):
+                self.skipped += 1
+                continue
+            self.replayed += 1
+            yield seq, op, payload
+
+    def truncate_upto(self, seq: int) -> int:
+        """Delete every record with sequence <= ``seq`` (they are covered
+        by flushed-and-committed segments); returns how many."""
+        n = 0
+        for s in self._seqs():
+            if s > seq:
+                break
+            try:
+                self.directory.delete_file(wal_name(s))
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n

@@ -290,3 +290,99 @@ def test_stress_search_thread_during_concurrent_ingest():
     final = ix.finalize()
     assert final.n_docs == 320
     ix.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler error paths under a retry policy (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def test_failing_batch_restores_inputs_while_others_complete(monkeypatch):
+    """Two batches in flight, one faults mid-scatter: the failed batch's
+    inputs return to their tier intact (every doc still live) while the
+    healthy batch's merge installs normally."""
+    import errno
+    real = merge_segments
+
+    def selective(segs):
+        if min(s.doc_ids[0] for s in segs) == 0:   # batch [s0, s1] only
+            raise RuntimeError("batch A exploded")
+        return real(segs)
+
+    monkeypatch.setattr(merge_mod, "merge_segments", selective)
+    drv = MergeDriver(fanout=2)
+    sched = ConcurrentMergeScheduler(drv, max_threads=2)
+    rng = np.random.default_rng(6)
+    segs = _flush_n(drv, 4, rng)          # two tier-0 batches of two
+    with pytest.raises(RuntimeError, match="batch A exploded"):
+        sched.drain()
+    live = drv.live_segments()
+    got = np.sort(np.concatenate([s.doc_ids for s in live]))
+    want = np.sort(np.concatenate([s.doc_ids for s in segs]))
+    assert (got == want).all(), "docs lost by the failed merge"
+    assert {s.seg_id for s in segs[:2]} <= {s.seg_id for s in live}
+    assert drv.n_merges == 1              # the healthy batch landed
+    assert not drv._in_flight
+    sched.pool.shutdown(wait=True)
+
+
+def test_merge_retry_policy_reenqueues_and_converges(monkeypatch):
+    """With a retry policy, a faulted merge is re-enqueued with backoff
+    instead of parking its error: drain() converges without raising."""
+    import errno
+    from repro.storage import RetryPolicy
+    calls = []
+
+    def flaky(segs):
+        calls.append(1)
+        if len(calls) <= 2:
+            raise OSError(errno.EIO, "merge IO hiccup")
+        return merge_segments(segs)
+
+    monkeypatch.setattr(merge_mod, "merge_segments", flaky)
+    drv = MergeDriver(fanout=2)
+    sched = ConcurrentMergeScheduler(
+        drv, max_threads=1,
+        retry_policy=RetryPolicy(max_retries=3, base_delay_s=1e-4,
+                                 max_delay_s=1e-3))
+    rng = np.random.default_rng(7)
+    segs = _flush_n(drv, 2, rng)
+    sched.drain()                         # heals inside the cap: no raise
+    assert drv.n_merges == 1 and len(calls) == 3
+    assert sched.merge_retries == 2
+    merged = drv.live_segments()
+    assert len(merged) == 1
+    all_docs = np.sort(np.concatenate([s.doc_ids for s in segs]))
+    assert (merged[0].doc_ids == all_docs).all()
+    sched.drain()                         # healthy: no stale error either
+    sched.close()
+
+
+def test_merge_retries_exhausted_is_typed_and_restores_inputs(monkeypatch):
+    """Past the cap, drain raises the typed MergeRetriesExhausted (last
+    failure chained) and the inputs are still safely in their tier."""
+    import errno
+    from repro.core.merge import MergeRetriesExhausted
+    from repro.storage import RetryPolicy
+
+    def boom(segs):
+        raise OSError(errno.EIO, "dead controller")
+
+    monkeypatch.setattr(merge_mod, "merge_segments", boom)
+    drv = MergeDriver(fanout=2)
+    sched = ConcurrentMergeScheduler(
+        drv, max_threads=1,
+        retry_policy=RetryPolicy(max_retries=2, base_delay_s=1e-4,
+                                 max_delay_s=1e-3))
+    rng = np.random.default_rng(8)
+    segs = _flush_n(drv, 2, rng)
+    with pytest.raises(MergeRetriesExhausted) as e:
+        sched.drain()
+    # 1 try + max_retries backoff re-tries (+ at most one from drain's
+    # own leading notify racing the final backoff timer)
+    assert e.value.attempts in (3, 4)
+    assert isinstance(e.value.__cause__, OSError)
+    assert sched.merge_retries == 2       # backoff bounded by the cap
+    live = drv.live_segments()            # nothing lost, nothing stuck
+    assert {s.seg_id for s in live} == {s.seg_id for s in segs}
+    assert not drv._in_flight and drv.n_merges == 0
+    sched.pool.shutdown(wait=True)

@@ -1,0 +1,642 @@
+"""Fault-injection harness + hardened IO path (ISSUE 7).
+
+The acceptance invariants:
+  * every injected fault kind (transient/persistent EIO, ENOSPC, torn
+    write, silent bit flip, latency spike) is reproducible by seed or
+    script, and counted;
+  * capped-backoff retries heal any transient fault whose consecutive-
+    failure run fits the cap, never retry ENOSPC / missing files, and
+    surface the typed ``RetriesExhausted`` past the cap — retries are
+    BOUNDED by the policy, by construction;
+  * the WAL makes acked-but-unflushed ingest durable: replay restores
+    every acked op in order, skips torn (never-acked) tails, and
+    truncates at commit;
+  * a commit with one corrupt segment serves the rest (quarantine +
+    degraded serving), the loss is sized honestly, and a still-live
+    quarantined segment self-heals at the next commit;
+  * the checksum scrubber finds post-commit bit rot within one sweep,
+    pays its reads to the shared IO rate limiter, and feeds quarantine.
+"""
+import dataclasses
+import errno
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.indexer import DistributedIndexer
+from repro.core.merge import MergeRateLimiter
+from repro.data.corpus import TINY, SyntheticCorpus
+from repro.serving.query_scheduler import QueryRequest, QueryScheduler
+from repro.storage import (ChecksumScrubber, CorruptSegment,
+                           FaultInjectingDirectory, FSDirectory,
+                           RAMDirectory, RetriesExhausted, RetryingDirectory,
+                           RetryPolicy, SegmentStore, WriteAheadLog,
+                           decode_wal, encode_wal_add, encode_wal_delete,
+                           is_transient_error, open_latest,
+                           open_latest_degraded, open_searcher)
+from repro.storage.codec import KIND_WAL, frame
+from repro.storage.commit import read_commit, write_commit
+from repro.storage.wal import wal_name
+from test_merge import make_segment
+
+SMOKE_CFG = get_arch("lucene-envelope").smoke
+
+# fast policy for tests: real backoff shape, negligible wall clock
+FAST = dict(base_delay_s=1e-5, max_delay_s=1e-4)
+
+
+def _tokens(rng, n=16):
+    return rng.integers(1, 4096, (n, 64)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjectingDirectory: scripted + seeded fault engine
+# ---------------------------------------------------------------------------
+
+def test_scripted_transient_fault_fails_then_heals():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    fi.fail_next("write", "transient", times=2)
+    for _ in range(2):
+        with pytest.raises(OSError) as e:
+            fi.write_file("a", b"x")
+        assert e.value.errno == errno.EIO
+    fi.write_file("a", b"x")                 # script exhausted: succeeds
+    assert fi.read_file("a") == b"x"
+    assert fi.injected["transient"] == 2
+    assert fi.op_counts["write"] == 3
+
+
+def test_scripted_enospc_is_errno_enospc():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    fi.fail_next("write", "enospc")
+    with pytest.raises(OSError) as e:
+        fi.write_file("a", b"x")
+    assert e.value.errno == errno.ENOSPC
+    assert fi.injected["enospc"] == 1
+    fi.write_file("a", b"x")
+
+
+def test_scripted_torn_write_leaves_strict_prefix():
+    ram = RAMDirectory()
+    fi = FaultInjectingDirectory(ram, seed=3)
+    data = bytes(range(200))
+    fi.fail_next("write", "torn")
+    with pytest.raises(OSError):
+        fi.write_file("f", data)
+    assert fi.injected["torn"] == 1
+    on_media = ram._files["f"]               # the kill-mid-write residue
+    assert len(on_media) < len(data)
+    assert data.startswith(on_media)
+    fi.write_file("f", data)                 # retry lands the full bytes
+    assert fi.read_file("f") == data
+
+
+def test_fail_always_until_cleared_and_name_filter():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    fi.write_file("seg.pst", b"a")
+    fi.write_file("other", b"b")
+    fi.fail_always("read", name_substr=".pst")
+    for _ in range(3):
+        with pytest.raises(OSError):
+            fi.read_file("seg.pst")
+    assert fi.read_file("other") == b"b"     # filter: other names untouched
+    assert fi.injected["persistent"] == 3
+    fi.clear_faults()
+    assert fi.read_file("seg.pst") == b"a"
+
+
+def test_corrupt_file_flips_exactly_one_bit():
+    fi = FaultInjectingDirectory(RAMDirectory(), seed=7)
+    data = b"\x00" * 64
+    fi.write_file("f", data)
+    bit = fi.corrupt_file("f")
+    got = fi.read_file("f")
+    assert got != data and len(got) == len(data)
+    diff = np.unpackbits(np.frombuffer(got, np.uint8)
+                         ^ np.frombuffer(data, np.uint8))
+    assert diff.sum() == 1                   # exactly one bit of rot
+    assert fi.injected["flip"] == 1
+    fi.corrupt_file("f", bit=bit)            # flip it back: restored
+    assert fi.read_file("f") == data
+
+
+def test_seeded_faults_are_reproducible_and_bounded():
+    """Same seed + same op sequence -> identical fault sequence; and a
+    drawn transient fails exactly ``transient_repeat`` consecutive
+    attempts then succeeds WITHOUT a fresh draw — the property that
+    makes any retry cap >= transient_repeat provably heal."""
+    def run(seed):
+        fi = FaultInjectingDirectory(RAMDirectory(), seed=seed,
+                                     p_transient=0.5, transient_repeat=2)
+        trace = []
+        for i in range(30):
+            attempts = 0
+            while True:
+                try:
+                    fi.write_file(f"f{i}", b"x")
+                    break
+                except OSError:
+                    attempts += 1
+                    assert attempts <= 2, "fault outlived transient_repeat"
+            trace.append(attempts)
+        return trace, fi.injected["transient"]
+
+    t1, n1 = run(11)
+    t2, n2 = run(11)
+    t3, _ = run(12)
+    assert t1 == t2 and n1 == n2 > 0
+    assert t3 != t1                          # a different seed, different run
+    assert all(a in (0, 2) for a in t1)      # drawn faults replay fully
+
+
+def test_latency_spikes_sleep_and_count():
+    fi = FaultInjectingDirectory(RAMDirectory(), seed=0,
+                                 p_latency=1.0, latency_s=0.01)
+    t0 = time.perf_counter()
+    fi.write_file("a", b"x")
+    assert time.perf_counter() - t0 >= 0.01
+    assert fi.injected["latency"] == 1
+
+
+def test_disarmed_injector_passes_through():
+    fi = FaultInjectingDirectory(RAMDirectory(), p_transient=1.0)
+    fi.armed = False
+    for i in range(5):
+        fi.write_file(f"f{i}", b"x")         # would all fault if armed
+    assert fi.injected["transient"] == 0
+    assert fi.op_counts["write"] == 5
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / RetryingDirectory
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_delay_capped_exponential():
+    p = RetryPolicy(max_retries=8, base_delay_s=0.01, max_delay_s=0.05,
+                    jitter=0.5, seed=0)
+    for k in range(1, 9):
+        d = p.delay(k)
+        cap = min(0.05, 0.01 * 2 ** (k - 1))
+        assert 0.5 * cap <= d <= cap         # jitter only shrinks, bounded
+
+
+def test_retry_policy_call_bounds_attempts():
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise OSError(errno.EIO, "flaky")
+
+    p = RetryPolicy(max_retries=3, **FAST)
+    with pytest.raises(RetriesExhausted) as e:
+        p.call(always_fails, op="write", name="f")
+    assert len(calls) == 4                   # 1 try + max_retries re-tries
+    assert e.value.attempts == 4
+    assert isinstance(e.value.__cause__, OSError)
+    assert isinstance(e.value, OSError)      # recovery walks catch it
+
+
+def test_retry_policy_refuses_non_retryable():
+    def enospc():
+        raise OSError(errno.ENOSPC, "full")
+
+    p = RetryPolicy(max_retries=5, **FAST)
+    with pytest.raises(OSError) as e:
+        p.call(enospc, op="write", name="f")
+    assert e.value.errno == errno.ENOSPC     # propagated untouched, no retry
+    assert not isinstance(e.value, RetriesExhausted)
+    with pytest.raises(FileNotFoundError):
+        p.call(lambda: (_ for _ in ()).throw(FileNotFoundError("f")),
+               op="read", name="f")
+
+
+def test_is_transient_error_classification():
+    assert is_transient_error(OSError(errno.EIO, "x"))
+    assert is_transient_error(OSError("plain"))
+    assert not is_transient_error(OSError(errno.ENOSPC, "full"))
+    assert not is_transient_error(FileNotFoundError("gone"))
+    assert not is_transient_error(
+        RetriesExhausted("w", "f", 3, OSError("x")))
+    assert not is_transient_error(ValueError("not io"))
+
+
+def test_retrying_directory_heals_scripted_faults():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    rd = RetryingDirectory(fi, RetryPolicy(max_retries=3, **FAST))
+    fi.fail_next("write", "transient", times=2)
+    rd.write_file("a", b"payload")           # heals inside the cap
+    fi.fail_next("read", "transient", times=3)
+    assert rd.read_file("a") == b"payload"
+    assert rd.retries == 5 and rd.giveups == 0
+
+
+def test_retrying_directory_exhausts_into_typed_error():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    rd = RetryingDirectory(fi, RetryPolicy(max_retries=2, **FAST))
+    fi.fail_always("write", name_substr="doomed")
+    with pytest.raises(RetriesExhausted) as e:
+        rd.write_file("doomed", b"x")
+    assert e.value.op == "write" and e.value.attempts == 3
+    assert rd.giveups == 1 and rd.retries == 2
+    assert fi.injected["persistent"] == 3    # attempts == injections: bounded
+    rd.write_file("fine", b"x")              # other names unaffected
+
+
+def test_retrying_directory_passes_enospc_through():
+    fi = FaultInjectingDirectory(RAMDirectory())
+    rd = RetryingDirectory(fi, RetryPolicy(max_retries=5, **FAST))
+    fi.fail_next("write", "enospc")
+    with pytest.raises(OSError) as e:
+        rd.write_file("a", b"x")
+    assert e.value.errno == errno.ENOSPC
+    assert rd.retries == 0                   # never retried a full device
+
+
+def test_retry_stack_heals_seeded_faults_statistically():
+    """The stack the ISSUE names: retry cap >= transient_repeat means a
+    seeded run completes with zero giveups no matter the draw."""
+    fi = FaultInjectingDirectory(RAMDirectory(), seed=42,
+                                 p_transient=0.4, p_torn=0.1,
+                                 transient_repeat=2)
+    rd = RetryingDirectory(fi, RetryPolicy(max_retries=3, **FAST))
+    for i in range(60):
+        rd.write_file(f"f{i:03d}", bytes([i]) * 100)
+    for i in range(60):
+        assert rd.read_file(f"f{i:03d}") == bytes([i]) * 100
+    assert fi.injected["transient"] + fi.injected["torn"] > 0
+    assert rd.retries > 0 and rd.giveups == 0
+
+
+# ---------------------------------------------------------------------------
+# FSDirectory: atomic writes + stale-tmp recovery sweep (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fs_write_is_atomic_replace(tmp_path, monkeypatch):
+    d = FSDirectory(tmp_path / "x")
+    d.write_file("f", b"old-content")
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        if os.path.basename(dst) == "f":
+            raise OSError(errno.EIO, "injected replace failure")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError):
+        d.write_file("f", b"NEW")
+    monkeypatch.undo()
+    assert d.read_file("f") == b"old-content"   # never a torn target
+    assert d.list_files() == ["f"]              # staged tmp cleaned up
+    assert not any(n.startswith(".tmp.")
+                   for n in os.listdir(tmp_path / "x"))
+
+
+def test_fs_sweeps_stale_tmp_files_on_recovery(tmp_path):
+    p = tmp_path / "x"
+    d = FSDirectory(p)
+    d.write_file("keeper", b"data")
+    # a writer killed mid-stage leaves its tmp behind
+    (p / ".tmp.victim").write_bytes(b"half a fi")
+    d2 = FSDirectory(p)                         # the restart moment
+    assert d2.stale_tmps_removed == 1
+    assert d2.list_files() == ["keeper"]
+    assert not (p / ".tmp.victim").exists()
+    assert d2.read_file("keeper") == b"data"
+
+
+# ---------------------------------------------------------------------------
+# WAL: encode/decode, append/replay/truncate, torn-tail skip
+# ---------------------------------------------------------------------------
+
+def test_wal_record_roundtrip():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(-1, 500, (5, 12)).astype(np.int32)
+    op, got = decode_wal(encode_wal_add(toks))
+    assert op == "add" and got.dtype == np.int32 and (got == toks).all()
+    ids = np.array([3, 9, 1 << 40], np.int64)
+    op, got = decode_wal(encode_wal_delete(ids))
+    assert op == "delete" and got.dtype == np.int64 and (got == ids).all()
+    with pytest.raises(CorruptSegment):
+        decode_wal(b"")
+    with pytest.raises(CorruptSegment):
+        decode_wal(b"Zjunk")
+    with pytest.raises(CorruptSegment):
+        decode_wal(encode_wal_add(toks)[:-3])   # truncated body
+    with pytest.raises(ValueError):
+        encode_wal_add(np.zeros(4, np.int32))   # must be (D, L)
+
+
+def test_wal_append_replay_truncate():
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram)
+    rng = np.random.default_rng(1)
+    toks = _tokens(rng, 3)
+    assert w.append(encode_wal_add(toks)) == 0
+    assert w.append(encode_wal_delete([7])) == 1
+    assert w.appended == 2 and w.next_seq == 2
+    assert ram.syncs == 2                       # synced before every ack
+    # a fresh WAL over the same directory (the recovery moment)
+    w2 = WriteAheadLog(ram)
+    assert w2.next_seq == 2                     # resumes past existing seqs
+    got = list(w2.replay())
+    assert [(s, op) for s, op, _ in got] == [(0, "add"), (1, "delete")]
+    assert (got[0][2] == toks).all() and got[1][2] == [7]
+    assert w2.replayed == 2 and w2.skipped == 0
+    assert w2.truncate_upto(1) == 2
+    assert not any(n.startswith("wal_") for n in ram.list_files())
+    assert w2.append(encode_wal_delete([1])) == 2   # seqs keep climbing
+
+
+def test_wal_replay_skips_torn_tail():
+    """The record mid-append at the kill was never acked: its torn frame
+    fails crc and is skipped, every earlier (acked) record replays."""
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram)
+    rng = np.random.default_rng(2)
+    w.append(encode_wal_add(_tokens(rng, 2)))
+    full = frame(KIND_WAL, encode_wal_delete([5]))
+    ram.write_file(wal_name(1), full[:len(full) - 7])    # torn tail
+    ram.write_file(wal_name(2), b"")                     # fully torn
+    w2 = WriteAheadLog(ram)
+    got = list(w2.replay())
+    assert [(s, op) for s, op, _ in got] == [(0, "add")]
+    assert w2.skipped == 2
+    assert w2.next_seq == 3                # never reuses a torn record's seq
+
+
+def test_wal_kill9_between_ack_and_flush_loses_nothing():
+    """The tentpole durability claim, deterministically: acked batches +
+    deletes that never reached a flush survive a kill -9 via replay,
+    with deterministic doc-id reallocation (replay order == ack order)."""
+    cfg = dataclasses.replace(SMOKE_CFG, flush_budget_mb=64)  # no autoflush
+    rng = np.random.default_rng(3)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=cfg, target_dir=ram, wal=True)
+    committed = _tokens(rng, 16)
+    ix.index_batch(committed)
+    ix.commit()                                 # covers seqs so far
+    assert not any(n.startswith("wal_") for n in ram.list_files())
+    acked = _tokens(rng, 8)
+    ix.index_batch(acked)                       # acked, still in RAM buffer
+    ix.delete([2, 17])                          # one committed, one buffered
+    snapshot = dict(ram._files)                 # kill -9
+    ram2 = RAMDirectory()
+    ram2._files = snapshot
+    ix2 = DistributedIndexer(cfg=cfg, target_dir=ram2, wal=True)
+    assert ix2._wal.replayed == 2
+    s = ix2.refresh()
+    assert s.n_docs == 24 - 2                   # nothing acked was lost
+    final = ix2.finalize()
+    assert (final.doc_ids
+            == np.setdiff1d(np.arange(24), [2, 17])).all()
+    ix2.close()
+    ix.close()
+
+
+def test_wal_replay_is_idempotent_across_recoveries():
+    cfg = SMOKE_CFG                             # flushes every batch
+    rng = np.random.default_rng(4)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=cfg, target_dir=ram, wal=True)
+    ix.index_batch(_tokens(rng, 8))
+    snap = dict(ram._files)
+    ix.close()
+    for _ in range(3):                          # crash-loop: replay, die, …
+        ram_n = RAMDirectory()
+        ram_n._files = dict(snap)
+        ix_n = DistributedIndexer(cfg=cfg, target_dir=ram_n, wal=True)
+        assert ix_n.refresh().n_docs == 8       # exactly once, every time
+        assert ix_n._next_doc == 8
+        ix_n.close()
+
+
+# ---------------------------------------------------------------------------
+# quarantine + degraded serving
+# ---------------------------------------------------------------------------
+
+def _committed_dir(rng, n_batches=3):
+    """RAMDirectory holding one commit of ``n_batches`` 16-doc segments."""
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=ram)
+    for _ in range(n_batches):
+        ix.index_batch(_tokens(rng, 16))
+    ix.commit()
+    ix.close()
+    segs = sorted({n.split(".")[0] for n in ram.list_files()
+                   if n.endswith(".pst")})
+    return ram, segs
+
+
+def test_degraded_open_serves_survivors_and_sizes_the_loss():
+    rng = np.random.default_rng(5)
+    ram, segs = _committed_dir(rng)
+    FaultInjectingDirectory(ram, seed=1).corrupt_file(segs[0] + ".pst")
+    gen, survivors = open_latest(ram)           # strict: whole commit dead
+    assert gen == 0 and survivors == []
+    gen, survivors, info = open_latest_degraded(ram)
+    assert gen == 1 and len(survivors) == 2
+    assert info.degraded and info.quarantined == {segs[0]: 16}
+    assert info.missing_docs == 16
+    assert sum(s.n_docs for s in survivors) == 32
+
+
+def test_degraded_flag_flows_to_searcher_and_scheduler():
+    rng = np.random.default_rng(6)
+    ram, segs = _committed_dir(rng)
+    FaultInjectingDirectory(ram, seed=2).corrupt_file(segs[1] + ".doc")
+    gen, searcher = open_searcher(ram, degraded=True)
+    assert searcher.degraded and searcher.missing_docs == 16
+    assert searcher.quarantined == (segs[1],)
+    assert searcher.n_docs == 32
+    sched = QueryScheduler(searcher=searcher, max_terms=4, k=5)
+    assert sched.degraded and sched.missing_docs == 16
+    req = QueryRequest(rid=0, terms=np.array([3, 5], np.int32), k=5)
+    sched.submit(req)
+    assert sched.step() == [req] and req.done   # traffic still flows
+    # a healthy directory reports not-degraded through the same path
+    ram2, _ = _committed_dir(np.random.default_rng(7))
+    _, healthy = open_searcher(ram2, degraded=True)
+    assert not healthy.degraded and healthy.missing_docs == 0
+
+
+def test_quarantine_carries_forward_across_commits():
+    """Once a segment is quarantined its loss stays visible in every
+    later manifest — a degraded index never silently forgets its hole."""
+    rng = np.random.default_rng(8)
+    ram, segs = _committed_dir(rng)
+    FaultInjectingDirectory(ram, seed=3).corrupt_file(segs[0] + ".pst")
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=ram, degraded_ok=True)
+    assert ix.store.quarantined == {segs[0]: 16}
+    assert ix.refresh().degraded
+    ix.index_batch(_tokens(rng, 16))            # life goes on
+    ix.commit()
+    ix.close()
+    # the NEW manifest is fully valid (casualty excluded), so even the
+    # strict walk succeeds — but the recorded loss is carried forward
+    gen, survivors = open_latest(ram)
+    assert gen == 2 and sum(s.n_docs for s in survivors) == 48
+    _, _, info = open_latest_degraded(ram)
+    assert info.quarantined == {segs[0]: 16} and info.missing_docs == 16
+
+
+def test_live_quarantined_segment_self_heals_at_commit():
+    """Bit rot under a RUNNING writer costs nothing: the in-memory copy
+    is authoritative, so commit rewrites the poisoned segment under a
+    fresh name and the quarantine clears."""
+    rng = np.random.default_rng(9)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=ram)
+    ix.index_batch(_tokens(rng, 16))
+    ix.index_batch(_tokens(rng, 16))
+    ix.commit()
+    victim = sorted({n.split(".")[0] for n in ram.list_files()
+                     if n.endswith(".pst")})[0]
+    FaultInjectingDirectory(ram, seed=4).corrupt_file(victim + ".pst")
+    assert ix.store.quarantine(victim + ".pst")
+    assert not ix.store.quarantine(victim)      # idempotent
+    ix.commit()
+    assert ix.store.heals == 1 and ix.store.quarantined == {}
+    ix.close()
+    gen, segs = open_latest(ram)                # strict walk: fully healthy
+    assert sum(s.n_docs for s in segs) == 32
+    _, _, info = open_latest_degraded(ram)
+    assert not info.degraded                    # the hole is gone for good
+
+
+def test_recovery_walk_survives_flaky_reads():
+    """Satellite: an OSError mid-walk (not just a bad checksum) skips
+    that commit and keeps walking instead of aborting recovery."""
+    rng = np.random.default_rng(10)
+    ram = RAMDirectory()
+    seg_old = make_segment(rng, 0, n_docs=4)
+    store = SegmentStore(directory=ram)
+    store.write(seg_old)
+    store.commit([seg_old])                     # gen 1
+    seg_new = make_segment(rng, 100, n_docs=4)
+    store.write(seg_new)
+    write_commit(ram, 2, [store._names[seg_new.seg_id]])  # gen 2, by hand
+    fi = FaultInjectingDirectory(ram)
+    fi.fail_always("read", name_substr="segments_2")
+    gen, segs, info = open_latest_degraded(fi)
+    assert gen == 1 and len(segs) == 1          # fell back past the EIO
+    assert segs[0].n_docs == 4
+    assert info.commits_skipped == 1 and info.io_errors == 1
+    assert not info.degraded                    # fallback commit is whole
+
+
+# ---------------------------------------------------------------------------
+# checksum scrubber
+# ---------------------------------------------------------------------------
+
+def test_scrubber_clean_sweep_verifies_every_committed_byte():
+    rng = np.random.default_rng(11)
+    ram, segs = _committed_dir(rng)
+    lim = MergeRateLimiter(mb_per_s=10_000.0)
+    sc = ChecksumScrubber(ram, limiter=lim)
+    assert sc.sweep() == []
+    rep = sc.report()
+    # manifest + every suffix of every segment
+    assert rep["files_checked"] >= 1 + 3 * len(segs)
+    assert rep["bytes_verified"] > 0 and rep["corrupt_found"] == 0
+    assert lim.bytes_charged == rep["bytes_verified"]   # reads pay the toll
+
+
+def test_scrubber_finds_bit_rot_within_one_sweep_and_quarantines():
+    rng = np.random.default_rng(12)
+    ram, segs = _committed_dir(rng)
+    store, _ = SegmentStore.open(ram, degraded=True)
+    hits = []
+    sc = ChecksumScrubber(ram, store=store, on_corrupt=hits.append)
+    assert sc.sweep() == []
+    FaultInjectingDirectory(ram, seed=5).corrupt_file(segs[2] + ".dict")
+    found = sc.sweep()
+    assert found == [segs[2] + ".dict"] and hits == found
+    assert store.quarantined == {segs[2]: 16}   # fed straight to quarantine
+    assert sc.report()["corrupt_found"] == 1
+    # the quarantined segment is excluded from later sweeps (known-bad)
+    checked_before = sc.report()["files_checked"]
+    assert sc.sweep() == []
+    assert sc.report()["files_checked"] < checked_before + checked_before
+
+
+def test_scrubber_daemon_detects_and_writer_self_heals():
+    """The full loop: background scrubber spots rot on a live index, the
+    next commit self-heals it, and a strict recovery sees every doc."""
+    rng = np.random.default_rng(13)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=ram,
+                            scrub_every=0.01, scrub_io_mbps=10_000.0)
+    ix.index_batch(_tokens(rng, 16))
+    ix.index_batch(_tokens(rng, 16))
+    ix.commit()
+    victim = sorted({n.split(".")[0] for n in ram.list_files()
+                     if n.endswith(".pst")})[0]
+    FaultInjectingDirectory(ram, seed=6).corrupt_file(victim + ".pos")
+    deadline = time.time() + 10
+    while not ix.store.quarantined and time.time() < deadline:
+        time.sleep(0.01)
+    assert ix.store.quarantined == {victim: 16}, "scrubber missed the rot"
+    ix.commit()                                 # self-heal
+    assert ix.store.heals == 1
+    rep = ix.envelope_report()
+    assert rep["scrub_corrupt_found"] >= 1 and rep["scrub_sweeps"] >= 1
+    assert rep["segments_healed"] == 1
+    ix.close()                                  # daemon error would re-raise
+    gen, segs = open_latest(ram)
+    assert sum(s.n_docs for s in segs) == 32
+
+
+# ---------------------------------------------------------------------------
+# the hardened stack end to end
+# ---------------------------------------------------------------------------
+
+def test_indexer_retry_policy_wraps_target_and_reports():
+    """retry_policy on the indexer hardens the WHOLE write path — flush,
+    .liv writes, commit — and the envelope report shows the retry cost."""
+    rng = np.random.default_rng(14)
+    fi = FaultInjectingDirectory(RAMDirectory(), seed=21,
+                                 p_transient=0.15, p_torn=0.05,
+                                 transient_repeat=2)
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=fi, wal=True,
+                            retry_policy=RetryPolicy(max_retries=3, **FAST))
+    assert isinstance(ix.target_dir, RetryingDirectory)
+    for i in range(4):
+        ix.index_batch(_tokens(rng, 16))
+        ix.delete([i * 16])
+    ix.commit()
+    rep = ix.envelope_report()
+    assert rep["io_retries"] > 0 and rep["io_giveups"] == 0
+    assert rep["wal_appends"] == 8
+    assert not rep["degraded"] and rep["missing_docs"] == 0
+    ix.close()
+    gen, segs = open_latest(fi.inner)           # media is clean underneath
+    s = open_searcher(fi.inner)[1]
+    assert s.n_docs == 64 - 4
+
+
+def test_enospc_fails_fast_through_the_whole_stack():
+    """A full device is not retried anywhere: the writer sees the ENOSPC
+    on the op that hit it, with zero retry attempts burned. The raised
+    ``index_batch`` is NOT an ack — its batch is simply not in the index,
+    and the writer stays consistent for the batches that follow."""
+    rng = np.random.default_rng(15)
+    fi = FaultInjectingDirectory(RAMDirectory())
+    ix = DistributedIndexer(cfg=SMOKE_CFG, target_dir=fi,
+                            retry_policy=RetryPolicy(max_retries=5, **FAST))
+    ix.index_batch(_tokens(rng, 16))
+    fi.fail_next("write", "enospc", times=1)
+    with pytest.raises(OSError) as e:
+        ix.index_batch(_tokens(rng, 16))        # flush hits the full device
+    assert e.value.errno == errno.ENOSPC
+    assert ix.target_dir.retries == 0
+    fi.clear_faults()
+    ix.index_batch(_tokens(rng, 16))            # space freed: writer resumes
+    ix.commit()
+    ix.close()
+    # only the two ACKED batches are served; the failed one never was
+    assert open_searcher(fi.inner)[1].n_docs == 32

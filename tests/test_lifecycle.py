@@ -21,7 +21,8 @@ from repro.core.merge import MergeDriver, drop_deleted, merge_segments
 from repro.core.query import bm25_exhaustive
 from repro.core.searcher import ReaderCache, build_block_index
 from repro.data.corpus import TINY, SyntheticCorpus
-from repro.storage import RAMDirectory, open_latest
+from repro.storage import (FaultInjectingDirectory, RAMDirectory,
+                           RetryPolicy, open_latest)
 from test_merge import ARRAY_FIELDS, assert_bit_identical, make_segment
 
 SMOKE_CFG = get_arch("lucene-envelope").smoke
@@ -388,3 +389,75 @@ def test_refresh_daemon_stress_with_concurrent_deletes():
     final = ix.finalize()
     assert final.n_docs == 12 * 16 - len(acked)
     assert not np.isin(np.array(acked), final.doc_ids).any()
+
+
+# ---------------------------------------------------------------------------
+# crash/fault interleaving oracle (ISSUE 7's acceptance invariant)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100000))
+def test_crash_fault_recovery_oracle(seed):
+    """Random kill-9 points interleaved with seeded transient/torn IO
+    faults on the hardened stack (WAL + retrying directory): after EVERY
+    recovery, each acked op is present exactly once — acked adds
+    searchable, acked deletes applied, nothing duplicated by replay —
+    and retries stay bounded by the policy cap (zero giveups, because
+    the injector heals any drawn fault within ``transient_repeat``
+    consecutive failures; ``sync`` is a compound op — its existence
+    check gates ``list`` too — so two drawn faults can stack and the
+    provable-heal cap is ``2 * transient_repeat``)."""
+    rng = np.random.default_rng(seed)
+    cfg = SMOKE_CFG
+
+    def build(files=None):
+        ram = RAMDirectory()
+        if files is not None:
+            ram._files = dict(files)
+        fi = FaultInjectingDirectory(ram, seed=seed, p_transient=0.08,
+                                     p_torn=0.04, transient_repeat=2)
+        ix = DistributedIndexer(
+            cfg=cfg, target_dir=fi, wal=True,
+            retry_policy=RetryPolicy(max_retries=5, base_delay_s=1e-5,
+                                     max_delay_s=1e-4, seed=seed))
+        return ram, ix
+
+    ram, ix = build()
+    acked, deleted = set(), set()          # doc ids whose ops were ACKED
+    crashes = 0
+    for _ in range(10):
+        op = rng.choice(["index", "delete", "commit", "crash", "check"],
+                        p=[0.45, 0.2, 0.1, 0.15, 0.1])
+        if op == "index":
+            n = int(rng.integers(1, 5))
+            toks = rng.integers(1, 512, (n, cfg.doc_len)).astype(np.int32)
+            base = ix._next_doc + ix._flush_policy.pending_docs
+            ix.index_batch(toks)           # returning == the ack
+            acked.update(range(base, base + n))
+        elif op == "delete" and acked - deleted:
+            pool = np.array(sorted(acked - deleted), np.int64)
+            ids = rng.choice(pool, size=min(2, pool.size), replace=False)
+            ix.delete(ids)                 # returning == the ack
+            deleted.update(int(i) for i in ids)
+        elif op == "commit":
+            ix.commit()
+        elif op == "crash":
+            snapshot = dict(ram._files)    # kill -9: media state only
+            crashes += 1
+            ram, ix = build(snapshot)      # WAL replay + commit recovery
+            assert ix.target_dir.giveups == 0
+            assert ix.refresh().n_docs == len(acked - deleted)
+        elif op == "check":
+            assert ix.refresh().n_docs == len(acked - deleted)
+    # one final crash so every example exercises recovery at least once
+    ram, ix = build(dict(ram._files))
+    crashes += 1
+    assert crashes >= 1
+    assert ix.target_dir.giveups == 0      # retries bounded by the cap
+    live = np.array(sorted(acked - deleted), np.int64)
+    assert ix.refresh().n_docs == live.size
+    if live.size:
+        final = ix.finalize()              # exact doc ids, exactly once
+        assert (final.doc_ids == live).all()
+        assert np.unique(final.doc_ids).size == live.size
+    ix.close()
