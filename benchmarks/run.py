@@ -30,8 +30,15 @@ trajectory.
                     natural-order index of a clustered corpus
   fault_matrix      robustness cost: ingest GB/min + p99 search latency
                     at 0%/1%/5% injected transient-fault rates on the
-                    nas profile (retried to zero giveups), plus
-                    degraded-mode QPS with one segment quarantined
+                    nas profile (retried to zero giveups), cold reopen
+                    through the still-faulting directory (read-path
+                    retry tax), plus degraded-mode QPS with one
+                    segment quarantined
+  fleet             replicated sharded serving: per-replica replication
+                    lag + bytes shipped, fleet and per-replica QPS over
+                    scatter-gather top-k (asserted bit-identical to the
+                    union oracle), and the failover cycle timed — scrub
+                    detect -> quarantine/shed -> peer re-fetch -> healthy
 
 ``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
 runs a single bench.
@@ -708,7 +715,8 @@ def fault_matrix(smoke=False):
     from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
     from repro.serving.query_scheduler import QueryRequest, QueryScheduler
     from repro.storage import (DeviceThrottle, FaultInjectingDirectory,
-                               MEDIA_PROFILES, RAMDirectory, RetryPolicy,
+                               MEDIA_PROFILES, RAMDirectory,
+                               RetryingDirectory, RetryPolicy,
                                ThrottledDirectory, open_searcher)
 
     cfg = get_arch("lucene-envelope").smoke
@@ -774,6 +782,25 @@ def fault_matrix(smoke=False):
              float(np.percentile(lat, 99)) * 1e3,
              f"batch={B} n={n_search} (in-memory snapshot post-recovery)",
              ".2f")
+        # the READ side of the same tax: re-open the committed index
+        # through the still-faulting directory (a cold restart on flaky
+        # media) — every segment decode replays the retry gauntlet
+        rdir = RetryingDirectory(fi, RetryPolicy(max_retries=6,
+                                                 base_delay_s=1e-4,
+                                                 max_delay_s=2e-3, seed=29))
+        t0 = time.perf_counter()
+        _, reopened = open_searcher(rdir)
+        t_open = time.perf_counter() - t0
+        assert reopened.n_docs == n_batches * per, \
+            (f"reopen through faults lost docs at rate {rate}: "
+             f"{reopened.n_docs} != {n_batches * per}")
+        assert rdir.giveups == 0, f"reopen giveups at fault rate {rate}"
+        reopened.search_batched(q, 10)
+        t1 = time.perf_counter()
+        reopened.search_batched(q, 10)
+        emit(f"{tag}.reopen_ms", t_open * 1e3,
+             f"io_retries={rdir.retries} giveups=0 "
+             f"warm_search_ms={(time.perf_counter()-t1)*1e3:.2f}", ".1f")
 
     # --- degraded serving: one committed segment quarantined ---------
     fi = FaultInjectingDirectory(RAMDirectory(), seed=3)  # disarmed
@@ -808,10 +835,127 @@ def fault_matrix(smoke=False):
          f"missing_docs={sched.missing_docs} served={sched.served}", ".0f")
 
 
+def fleet(smoke=False):
+    """Replicated, sharded serving fleet: two shard writers publish
+    commits, two replicas per shard pull them (manifest shipping), and a
+    ``FleetSearcher`` scatter-gathers global top-k. Rows: replication
+    lag + bytes shipped per replica, fleet and per-replica QPS, and the
+    failover cycle timed end to end — bit rot detected, traffic shed to
+    the peer (zero failed queries, asserted against the single-index
+    union oracle), segment re-fetched, replica healthy again."""
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.core.searcher import ReaderCache
+    from repro.data.corpus import CW09B_SMALL, SyntheticCorpus
+    from repro.replication import (CommitPublisher, FleetSearcher,
+                                   ReplicaSyncer)
+    from repro.storage import RAMDirectory, open_latest
+
+    cfg = get_arch("lucene-envelope").smoke
+    n_shards, n_rep, base = 2, 2, 1_000_000
+    n_batches, per = (3, 64) if smoke else (6, 128)
+    corpus = SyntheticCorpus(CW09B_SMALL, doc_buffer_len=cfg.doc_len)
+
+    writers, pubs = [], []
+    for si in range(n_shards):
+        d = RAMDirectory()
+        pub = CommitPublisher(d)
+        ix = DistributedIndexer(cfg=cfg, target_dir=d, publisher=pub,
+                                doc_base=si * base)
+        for i in range(n_batches):
+            ix.index_batch(corpus.batch(8 * si + i, per))
+        ix.delete(np.arange(si * base + 3, si * base + 9))
+        ix.commit()
+        writers.append(ix)
+        pubs.append(pub)
+
+    shards = []
+    for si in range(n_shards):
+        group = []
+        for ri in range(n_rep):
+            r = ReplicaSyncer(RAMDirectory(), writers[si].target_dir,
+                              replica_id=f"s{si}r{ri}", publisher=pubs[si])
+            t0 = time.perf_counter()
+            out = r.sync_once()
+            t_sync = time.perf_counter() - t0
+            emit(f"fleet.replication.s{si}r{ri}.lag_s", out["lag_s"],
+                 f"sync_wall_ms={t_sync*1e3:.1f} files={out['files']} "
+                 f"bytes={out['bytes']}", ".4f")
+            group.append(r)
+        for r in group:
+            r.peers = [p.directory for p in group if p is not r]
+        shards.append(group)
+    emit("fleet.replication.bytes_shipped_total",
+         sum(p.report()["bytes_shipped_total"] for p in pubs),
+         f"replicas={n_shards * n_rep} max_lag_s="
+         f"{max(p.report()['max_replication_lag_s'] for p in pubs):.4f}")
+
+    fleet_s = FleetSearcher(shards)
+    union_segs = []
+    for ix in writers:
+        union_segs.extend(open_latest(ix.target_dir)[1])
+    oracle = ReaderCache(prune=False).refresh(union_segs)
+
+    tok = corpus.batch(0, 256)
+    vals, counts = np.unique(tok[tok > 0], return_counts=True)
+    heavy = vals[np.argsort(-counts)[:32]].astype(np.int32)
+    rng = np.random.default_rng(31)
+    B = 8
+    q = rng.choice(heavy, (B, 3)).astype(np.int32)
+    fv, _ = fleet_s.search_batched(q, 10)      # warm compiles + stats
+    ov, _ = oracle.search_batched(q, 10)
+    assert np.array_equal(np.asarray(fv), np.asarray(ov)), \
+        "fleet top-k diverged from the union oracle"
+    n_q = 24 if smoke else 96
+    t0 = time.perf_counter()
+    for i in range(n_q):
+        fleet_s.search_batched(rng.choice(heavy, (B, 3)).astype(np.int32),
+                               10)
+    wall = time.perf_counter() - t0
+    rep = fleet_s.report()
+    emit("fleet.qps", n_q * B / wall,
+         f"shards={n_shards} replicas={n_shards * n_rep} batch={B} "
+         f"shards_skipped={rep['shards_skipped']}", ".0f")
+    for rid in sorted(rep["served"]):
+        emit(f"fleet.qps.{rid}", rep["served"][rid] * B / wall,
+             f"batches_served={rep['served'][rid]}", ".0f")
+
+    # failover cycle, timed: rot -> quarantine (shed) -> re-fetch -> healthy
+    bad = shards[0][0]
+    victim = next(n for n in bad.directory.list_files()
+                  if n.endswith(".pst"))
+    data = bytearray(bad.directory.read_file(victim))
+    data[len(data) // 2] ^= 0xFF
+    bad.directory.write_file(victim, bytes(data))
+    from repro.storage import ChecksumScrubber
+    t0 = time.perf_counter()
+    found = ChecksumScrubber(bad.directory).sweep()   # anti-entropy scan
+    assert victim in found, found
+    base = bad.quarantine(victim)               # shed traffic to the peer
+    t_detect_s = time.perf_counter() - t0
+    failed, mark = 0, fleet_s.report()["failovers"]
+    for i in range(4):                          # the degraded window
+        qq = rng.choice(heavy, (B, 3)).astype(np.int32)
+        fv, _ = fleet_s.search_batched(qq, 10)
+        ov, _ = oracle.search_batched(qq, 10)
+        failed += int(not np.array_equal(np.asarray(fv), np.asarray(ov)))
+    shed = fleet_s.report()["failovers"] - mark
+    out = bad.repair(base)                      # re-fetch from the peer
+    recovery_s = time.perf_counter() - t0
+    assert failed == 0, "failover served wrong results"
+    assert bad.healthy and out["files"] >= 1 and shed >= 1
+    emit("fleet.failover_recovery_ms", recovery_s * 1e3,
+         f"detect_ms={t_detect_s*1e3:.1f} refetched_files={out['files']} "
+         f"refetch_bytes={out['bytes']} shed_batches={shed} "
+         f"failed_queries=0", ".1f")
+    for ix in writers:
+        ix.close()
+
+
 BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
            invert_kernel, build_reader, search_batched, searcher_refresh,
            merge_throughput, index_gb_per_min, envelope_measured,
-           update_heavy, search_pruned, compression, fault_matrix]
+           update_heavy, search_pruned, compression, fault_matrix, fleet]
 SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
                  invert_kernel, merge_throughput, index_gb_per_min]
 

@@ -214,6 +214,12 @@ class EnvelopeConfig:
     # adaptive bit widths), or "pef" (partitioned Elias-Fano over doc-id
     # gap lists — the sparse-postings frontier)
     codec: str = "pfor"
+    # WAL group commit (storage.wal.sync_upto): concurrent ingest acks
+    # coalesce into one batched fsync instead of paying one barrier each;
+    # durability per ack is unchanged. Off by default — serial ingest
+    # gains nothing and the strict one-barrier-per-ack failure accounting
+    # is simpler to reason about.
+    wal_group: bool = False
     # run recursive graph bisection (BP) over each merge output and fold
     # the resulting doc-id permutation into the merged segment's block
     # layout: scores and results are bit-identical, but blocks become

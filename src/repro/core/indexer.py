@@ -176,6 +176,15 @@ class DistributedIndexer:
     # recovery and truncated at commit — kill -9 between ack and flush
     # loses nothing. None: take cfg.wal (default off). Needs target_dir.
     wal: bool = None
+    # wal_group=True: group commit — the record is appended under the
+    # flush lock but the sync barrier runs OUTSIDE it, and concurrent
+    # ackers coalesce into one batched ``directory.sync`` (a leader syncs
+    # the whole unsynced tail; see ``WriteAheadLog.sync_upto``). Acks
+    # still block until their record is durable, so kill -9 after an ack
+    # loses nothing — the fsync cost is amortized over the group. None:
+    # take cfg.wal_group (default off: one fsync per ack, the strictest
+    # failure accounting).
+    wal_group: bool = None
     # a storage.RetryPolicy: target_dir is wrapped in a RetryingDirectory
     # so every op under SegmentStore / write_commit / .liv writes retries
     # transient faults with capped backoff (persistent ones propagate
@@ -197,6 +206,16 @@ class DistributedIndexer:
     # segments (degraded) instead of falling back / failing
     degraded_ok: bool = False
     scrubber: object = None
+    # ---- fleet serving (repro.replication) ----
+    # a replication.CommitPublisher: every durable commit is announced to
+    # it (``on_commit``), and ``envelope_report`` grows a ``fleet``
+    # section with the per-replica lag/bytes ledger its acks feed.
+    publisher: object = None
+    # first doc id this writer allocates (doc-range sharding: shard i of
+    # a fleet runs its own writer with doc_base = i * range_size, keeping
+    # global doc-id spaces disjoint across shards). Recovery resumes from
+    # max(committed max + 1, doc_base).
+    doc_base: int = 0
     _next_doc: int = 0
     _wal: object = None
     _wal_covered: int = -1     # highest wal seq whose ops are flushed
@@ -234,6 +253,7 @@ class DistributedIndexer:
             tops = [int(s.doc_ids.max()) for s in recovered if s.n_docs]
             if tops:
                 self._next_doc = max(tops) + 1
+        self._next_doc = max(self._next_doc, self.doc_base)
         if self.merge_threads is None:
             self.merge_threads = self.cfg.merge_threads
         if self.merge_retries is None:
@@ -266,6 +286,8 @@ class DistributedIndexer:
         self._buffered_deletes = np.zeros(0, np.int64)
         if self.wal is None:
             self.wal = bool(getattr(self.cfg, "wal", False))
+        if self.wal_group is None:
+            self.wal_group = bool(getattr(self.cfg, "wal_group", False))
         if self.wal and self.target_dir is not None:
             from repro.storage.wal import WriteAheadLog
             self._wal = WriteAheadLog(self.target_dir)
@@ -280,9 +302,21 @@ class DistributedIndexer:
             from repro.storage.scrub import ChecksumScrubber
             limiter = (MergeRateLimiter(self.scrub_io_mbps)
                        if self.scrub_io_mbps else None)
+            # media-contention gate: when the target stack carries a
+            # DeviceThrottle (walk the wrapper chain — Retrying /
+            # FaultInjecting / Throttled all expose ``inner``), periodic
+            # sweeps defer while ingest keeps the device saturated
+            gate, d = None, self.target_dir
+            while d is not None:
+                thr = getattr(d, "throttle", None)
+                if thr is not None:
+                    from repro.storage.scrub import throttle_saturation_gate
+                    gate = throttle_saturation_gate(thr)
+                    break
+                d = getattr(d, "inner", None)
             self.scrubber = ChecksumScrubber(
                 self.target_dir, store=self.store, limiter=limiter,
-                interval_s=self.scrub_every or 0.0)
+                interval_s=self.scrub_every or 0.0, contention=gate)
             self.scrubber.start()   # no-op unless scrub_every > 0
         if self.refresh_every is None:
             self.refresh_every = getattr(self.cfg, "refresh_every", 0.0)
@@ -320,17 +354,30 @@ class DistributedIndexer:
         state changes: a return from this method means the docs survive
         kill -9 even though they are only in the in-memory buffer. A
         failed log append (e.g. ENOSPC past retries) therefore leaves the
-        indexer exactly as before the call — the batch was never acked."""
+        indexer exactly as before the call — the batch was never acked.
+
+        With ``wal_group`` the record is appended under the lock (replay
+        order = allocation order stays deterministic) but the durability
+        barrier runs after releasing it, coalescing with concurrent
+        ackers into one batched fsync; the return still waits for the
+        record to be durable. A sync failure then surfaces here with the
+        buffer already holding the batch — at-least-once instead of the
+        default's exactly-as-if-never-called, the classic group-commit
+        trade."""
+        seq, out = None, None
         with self._flush_lock:
             if self._wal is not None and not self._wal_replaying:
                 from repro.storage.wal import encode_wal_add
-                self._wal.append(encode_wal_add(tokens))
+                seq = self._wal.append(encode_wal_add(tokens),
+                                       sync=not self.wal_group)
             self.stats.docs += tokens.shape[0]
             self.stats.tokens += int((tokens > 0).sum())
             self.stats.read_bytes += tokens.nbytes
             if self._flush_policy.add(tokens):
-                return self._flush()
-        return None
+                out = self._flush()
+        if seq is not None and self.wal_group:
+            self._wal.sync_upto(seq)
+        return out
 
     def delete(self, doc_ids) -> int:
         """Tombstone ``doc_ids`` (absolute ids, any shape). Buffered like
@@ -342,12 +389,16 @@ class DistributedIndexer:
         ids = np.unique(np.asarray(doc_ids, np.int64).reshape(-1))
         if ids.size == 0:
             return 0
+        seq = None
         with self._flush_lock:
             if self._wal is not None and not self._wal_replaying:
                 from repro.storage.wal import encode_wal_delete
-                self._wal.append(encode_wal_delete(ids))
+                seq = self._wal.append(encode_wal_delete(ids),
+                                       sync=not self.wal_group)
             self._buffered_deletes = np.union1d(self._buffered_deletes, ids)
             self.stats.deletes += int(ids.size)
+        if seq is not None and self.wal_group:
+            self._wal.sync_upto(seq)
         return int(ids.size)
 
     def update(self, doc_id: int, doc: np.ndarray):
@@ -454,6 +505,8 @@ class DistributedIndexer:
         if self._wal is not None and covered >= 0:
             # only once the commit is durable are its records disposable
             self._wal.truncate_upto(covered)
+        if self.publisher is not None:
+            self.publisher.on_commit(gen)   # shippable to replicas now
         return gen
 
     def finalize(self) -> Segment:
@@ -466,9 +519,11 @@ class DistributedIndexer:
             covered = self._wal_covered
         final = self.merger.finalize()
         if self.store is not None:
-            self.store.commit(self.merger.live_segments())
+            gen = self.store.commit(self.merger.live_segments())
             if self._wal is not None and covered >= 0:
                 self._wal.truncate_upto(covered)
+            if self.publisher is not None:
+                self.publisher.on_commit(gen)
         return final
 
     def close(self):
@@ -624,7 +679,10 @@ class DistributedIndexer:
         if self._wal is not None:
             report.update({"wal_appends": self._wal.appended,
                            "wal_replayed": self._wal.replayed,
-                           "wal_skipped": self._wal.skipped})
+                           "wal_skipped": self._wal.skipped,
+                           "wal_group_commits": self._wal.group_commits,
+                           "wal_group_acks": self._wal.group_acks,
+                           "wal_group_max": self._wal.group_max})
         if self.scrubber is not None:
             report.update({f"scrub_{k}": v
                            for k, v in self.scrubber.report().items()
@@ -634,6 +692,8 @@ class DistributedIndexer:
             report["io_giveups"] = self.target_dir.giveups
         if self.merge_scheduler is not None:
             report["merge_retries"] = self.merge_scheduler.merge_retries
+        if self.publisher is not None:
+            report["fleet"] = self.publisher.report()
         if self.store is not None:
             report.update(self._measured_report())
         return report

@@ -526,6 +526,15 @@ class IndexSearcher:
     degraded: bool = False
     missing_docs: int = 0
     quarantined: tuple = ()        # quarantined segment base names
+    # collection statistics imposed from OUTSIDE this snapshot (fleet
+    # serving): an object with ``n_docs`` / ``avgdl`` / ``df_terms`` /
+    # ``df_table`` covering the UNION of all shards. Doc spaces across
+    # shards are disjoint, so the union stats are exactly what a
+    # single-index searcher over the union corpus computes — per-doc
+    # scores under them are bit-identical to that oracle's (doc lengths
+    # and dfs are integers, so the shared sums are exact in float64
+    # regardless of how they were grouped).
+    collection_stats: object = None
     prune_stats: PruneStats = None
     _doc_norms: list = None
     _df_terms: np.ndarray = None   # (U,) sorted union of segment terms
@@ -540,6 +549,9 @@ class IndexSearcher:
                   else np.zeros(0, np.float64))
         self.n_docs = int(all_dl.size)
         self.avgdl = max(all_dl.mean(), 1.0) if all_dl.size else 1.0
+        if self.collection_stats is not None:
+            self.n_docs = int(self.collection_stats.n_docs)
+            self.avgdl = float(self.collection_stats.avgdl)
         # norms are indexed by LOCAL doc slot at scoring time, so a
         # BP-reordered segment needs the permuted doc-length vector
         self._doc_norms = [
@@ -553,7 +565,12 @@ class IndexSearcher:
         # disjoint, so collection df is the plain sum of per-segment dfs.
         # global_idf then costs one searchsorted per query batch instead of
         # one per (reader, query).
-        if self.readers:
+        if self.collection_stats is not None:
+            self._df_terms = np.asarray(self.collection_stats.df_terms,
+                                        np.int64)
+            self._df_table = np.asarray(self.collection_stats.df_table,
+                                        np.int64)
+        elif self.readers:
             all_t = np.concatenate([r.terms_np for r in self.readers])
             all_df = np.concatenate([r.df_np for r in self.readers])
             self._df_terms, inv = np.unique(all_t, return_inverse=True)
@@ -566,6 +583,17 @@ class IndexSearcher:
     @property
     def n_segments(self) -> int:
         return len(self.readers)
+
+    def with_stats(self, stats) -> "IndexSearcher":
+        """This snapshot's readers served under externally-imposed
+        collection statistics (see ``collection_stats``). The fleet layer
+        wraps each shard's searcher with the union stats so per-shard
+        evaluation matches the union-index oracle score-for-score."""
+        return IndexSearcher(readers=self.readers, k1=self.k1, b=self.b,
+                             prune=self.prune, degraded=self.degraded,
+                             missing_docs=self.missing_docs,
+                             quarantined=self.quarantined,
+                             collection_stats=stats)
 
     def global_idf(self, q_terms: np.ndarray) -> np.ndarray:
         """Collection-wide idf for ``q_terms`` (any shape): one lookup in
@@ -586,14 +614,37 @@ class IndexSearcher:
         return (jnp.zeros(shape_prefix + (k,), jnp.float32),
                 jnp.full(shape_prefix + (k,), -1, jnp.int32))
 
-    def _search_pruned(self, q2d: np.ndarray, k: int):
+    def query_max_ub(self, q2d: np.ndarray) -> np.ndarray:
+        """(B,) best POSSIBLE score this snapshot can give each query —
+        the max over live segments of the per-segment impact bound, under
+        this searcher's (possibly fleet-imposed) collection stats. The
+        fleet layer visits SHARDS in descending order of this bound and
+        skips a shard wholesale once the cross-shard theta exceeds it,
+        exactly as ``_search_pruned`` does with segments."""
+        q = np.asarray(q2d)
+        idf = self.global_idf(q)
+        ubs = [r.query_max_ub(q, idf, self.avgdl) for r in self.readers
+               if r.live_docs > 0 and r.terms_np.size > 0]
+        if not ubs:
+            return np.zeros(q.shape[0], np.float64)
+        return np.max(np.stack(ubs), axis=0)
+
+    def _search_pruned(self, q2d: np.ndarray, k: int, theta0=None):
         """Shared pruned evaluation over a (B, Q) batch with cross-segment
         threshold sharing: readers are visited in descending best-possible
         -score order; the running global k-th score (a valid lower bound
         on the final k-th — scores only join the pool, never leave) seeds
         each later segment's theta, and a segment whose best possible
         score is strictly below the bound for every query is skipped
-        without touching the device at all."""
+        without touching the device at all.
+
+        ``theta0`` (optional, (B,) or scalar) seeds the bound from OUTSIDE
+        the snapshot — cross-shard sharing: the caller asserts k results
+        with score >= theta0 are already secured on other shards, so a
+        segment (or the whole snapshot) below it can be skipped before any
+        local results exist. Same contract as the per-segment ``theta0``:
+        results strictly above the seed are exact; docs at or below it may
+        be dropped, but >= k better ones exist elsewhere by assertion."""
         B = q2d.shape[0]
         idf = self.global_idf(q2d)
         stats = PruneStats(queries=B, batches=1)
@@ -601,13 +652,17 @@ class IndexSearcher:
                 if min(k, r.live_docs) > 0 and r.terms_np.size > 0]
         seg_ub = [r.query_max_ub(q2d, idf, self.avgdl) for r, _ in live]
         order = np.argsort([-float(u.sum()) for u in seg_ub], kind="stable")
-        theta0 = np.zeros(B, np.float64)
+        ext_theta = theta0 is not None
+        theta0 = (np.zeros(B, np.float64) if theta0 is None else
+                  np.array(np.broadcast_to(
+                      np.asarray(theta0, np.float64), (B,))))
         running = None  # (B, <=k) best values seen so far, O(S*k) upkeep
         parts_v, parts_i = [], []
         for oi in order:
             r, dn = live[oi]
             k_eff = min(k, r.live_docs)
-            if running is not None and running.shape[1] >= k \
+            if (ext_theta or (running is not None
+                              and running.shape[1] >= k)) \
                     and bool(np.all(seg_ub[oi] < theta0)):
                 stats.segments_skipped += 1
                 continue  # nothing inside can beat the running top-k
@@ -671,16 +726,19 @@ class IndexSearcher:
             top_i = jnp.pad(top_i, (0, k - kk), constant_values=-1)
         return top_v, top_i
 
-    def search_batched(self, q_batch, k: int = 10):
+    def search_batched(self, q_batch, k: int = 10, theta0=None):
         """Fixed-shape batched search: ``q_batch`` is (B, Q) int32, queries
         right-padded with -1 (absent everywhere -> contributes nothing).
         Returns (scores (B, k), doc_ids (B, k)). With pruning, each
         segment evaluates the whole batch through one metadata pass + one
         compacted scorer call (survivors padded to a shared power-of-two
-        bucket across the batch, so compiled shapes stay bounded)."""
+        bucket across the batch, so compiled shapes stay bounded).
+        ``theta0`` seeds the pruning threshold from outside the snapshot
+        (cross-shard bound sharing — see ``_search_pruned``); the dense
+        exhaustive path ignores it (its results are exact regardless)."""
         q = np.asarray(q_batch)
         if self.prune:
-            return self._search_pruned(q, k)
+            return self._search_pruned(q, k, theta0=theta0)
         B = q.shape[0]
         idf = jnp.asarray(self.global_idf(q))
         qj = jnp.asarray(q, jnp.int32)

@@ -1,0 +1,20 @@
+"""Replicated, sharded serving fleet over the segment store.
+
+Manifest-shipping replication (``publisher``/``syncer``), scatter-gather
+top-k with cross-shard bound sharing (``fleet``), and process-per-replica
+serving (``server``). See each module's docstring for the protocol."""
+from repro.replication.fleet import (CollectionStats, FleetSearcher,
+                                     FleetStats, ShardSpec,
+                                     merge_topk_sharded)
+from repro.replication.publisher import (CommitPublisher, SyncPlan,
+                                         latest_commit_meta, manifest_files,
+                                         plan_delta)
+from repro.replication.server import RemoteReplica, replica_main
+from repro.replication.syncer import NoCleanCopy, ReplicaSyncer
+
+__all__ = [
+    "CollectionStats", "FleetSearcher", "FleetStats", "ShardSpec",
+    "merge_topk_sharded", "CommitPublisher", "SyncPlan",
+    "latest_commit_meta", "manifest_files", "plan_delta",
+    "RemoteReplica", "replica_main", "NoCleanCopy", "ReplicaSyncer",
+]

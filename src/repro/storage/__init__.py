@@ -23,10 +23,12 @@ from repro.storage.commit import (RecoveryInfo, SegmentStore, list_commits,
 from repro.storage.directory import (MEDIA_PROFILES, DeviceThrottle,
                                      Directory, FaultInjectingDirectory,
                                      FSDirectory, MediaProfile,
-                                     RAMDirectory, ThrottledDirectory)
+                                     RAMDirectory, ThrottledDirectory,
+                                     VolatileDirectory)
 from repro.storage.retry import (RetriesExhausted, RetryingDirectory,
                                  RetryPolicy, is_transient_error)
-from repro.storage.scrub import ChecksumScrubber
+from repro.storage.scrub import (ChecksumScrubber, expected_kind,
+                                 throttle_saturation_gate)
 from repro.storage.wal import (WriteAheadLog, decode_wal, encode_wal_add,
                                encode_wal_delete)
 
@@ -39,9 +41,9 @@ __all__ = [
     "write_commit",
     "MEDIA_PROFILES", "DeviceThrottle", "Directory",
     "FaultInjectingDirectory", "FSDirectory", "MediaProfile",
-    "RAMDirectory", "ThrottledDirectory",
+    "RAMDirectory", "ThrottledDirectory", "VolatileDirectory",
     "RetriesExhausted", "RetryingDirectory", "RetryPolicy",
     "is_transient_error",
-    "ChecksumScrubber",
+    "ChecksumScrubber", "expected_kind", "throttle_saturation_gate",
     "WriteAheadLog", "decode_wal", "encode_wal_add", "encode_wal_delete",
 ]

@@ -37,6 +37,7 @@ import json
 import re
 import struct
 import threading
+import time
 from dataclasses import dataclass, field
 
 from repro.storage import codec as seg_codec
@@ -66,7 +67,8 @@ def liv_name(base: str, gen: int) -> str:
 
 def write_commit(directory: Directory, gen: int, names: list[str],
                  codec: str = "pfor", liv: dict = None,
-                 doc_counts: dict = None, quarantined: dict = None) -> str:
+                 doc_counts: dict = None, quarantined: dict = None,
+                 ts: float = None) -> str:
     """Two-phase commit of one manifest; returns its file name. ``liv``
     maps a segment base name to its current delete-generation file.
     ``doc_counts`` (base name -> n_docs) makes a future quarantine's
@@ -80,10 +82,13 @@ def write_commit(directory: Directory, gen: int, names: list[str],
     manifest can thus never outlive the bytes it points at, and the
     protocol pays fsync once per commit instead of once per write."""
     liv = dict(liv or {})
+    # wall-clock commit stamp: the replication layer's lag reference
+    # (a replica's replication_lag_s = install time - manifest ts)
     payload = json.dumps({"gen": gen, "codec": codec,
                           "segments": list(names), "liv": liv,
                           "doc_counts": dict(doc_counts or {}),
-                          "quarantined": dict(quarantined or {})},
+                          "quarantined": dict(quarantined or {}),
+                          "ts": time.time() if ts is None else ts},
                          sort_keys=True).encode()
     name = manifest_name(gen)
     data_files = [n + sfx for n in names
@@ -109,6 +114,7 @@ def read_commit(directory: Directory, name: str) -> dict:
     for k in ("doc_counts", "quarantined"):  # pre-fault-tolerance manifests
         if not isinstance(meta.setdefault(k, {}), dict):
             raise CorruptSegment(f"manifest {name} has a malformed {k} map")
+    meta.setdefault("ts", 0.0)   # pre-replication manifests lack the stamp
     return meta
 
 

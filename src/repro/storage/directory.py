@@ -202,6 +202,49 @@ class RAMDirectory(Directory):
             return len(self._files[name])
 
 
+class VolatileDirectory(RAMDirectory):
+    """In-memory Directory that models the page cache over a durable
+    store: writes land volatile, ``sync(names)`` copies those files to
+    the durable side, and ``crash()`` returns a fresh ``RAMDirectory``
+    holding ONLY what was synced — the survivor set a kill -9 leaves on
+    real media. RAMDirectory can't express that distinction (its sync is
+    a no-op and everything survives by definition), so durability tests
+    — WAL group commit, commit-protocol ordering — run against this.
+
+    ``rename`` models POSIX: the new dirent is volatile until the next
+    ``sync`` of that name (which is why the commit protocol syncs the
+    manifest name again after the rename). ``delete`` removes both sides
+    (a removal that must survive needs no barrier here; nothing in the
+    commit protocol depends on losing a deletion)."""
+
+    def __init__(self):
+        super().__init__()
+        self._durable: dict[str, bytes] = {}
+
+    def _sync(self, names):
+        with self._lock:
+            for n in names:
+                if n in self._files:   # base pre-checked existence
+                    self._durable[n] = self._files[n]
+
+    def _delete(self, name):
+        super()._delete(name)
+        with self._lock:
+            self._durable.pop(name, None)
+
+    def _rename(self, src, dst):
+        super()._rename(src, dst)
+        with self._lock:
+            self._durable.pop(src, None)
+
+    def crash(self) -> RAMDirectory:
+        """The post-kill-9 view: a directory holding only synced bytes."""
+        survivor = RAMDirectory()
+        with self._lock:
+            survivor._files = dict(self._durable)
+        return survivor
+
+
 class FSDirectory(Directory):
     """One flat directory on the local filesystem.
 

@@ -16,6 +16,13 @@ lets a serving-only node flip its searcher to degraded instead.
 ``sweep()`` is the synchronous core (one full pass, returns the corrupt
 file names) so tests and operators can scrub on demand; ``start()``
 runs sweeps every ``interval_s`` until ``close()``.
+
+Scrub IO competes with ingest for the same media, so beyond the rate
+limiter the scrubber can be handed a ``contention`` gate: while it
+reports the device saturated (e.g. ``throttle_saturation_gate`` over
+the ingest ``DeviceThrottle``), periodic sweeps are DEFERRED — rot
+detection latency is traded for ingest throughput exactly while the
+envelope is write-bound, and the sweep resumes on the first idle tick.
 """
 from __future__ import annotations
 
@@ -29,8 +36,10 @@ from repro.storage.commit import (LIV_NAME_RE, MANIFEST_RE, list_commits,
 from repro.storage.directory import Directory
 
 
-def _expected_kind(name: str) -> int | None:
-    """Frame kind a committed file must decode as, or None to skip."""
+def expected_kind(name: str) -> int | None:
+    """Frame kind a committed file must decode as, or None to skip.
+    Shared with the replication layer, which verifies every fetched
+    copy against the same mapping on arrival."""
     if MANIFEST_RE.match(name):
         return KIND_MANIFEST
     if LIV_NAME_RE.match(name):
@@ -39,6 +48,27 @@ def _expected_kind(name: str) -> int | None:
         if name.endswith(sfx):
             return kind
     return None
+
+
+_expected_kind = expected_kind
+
+
+def throttle_saturation_gate(throttle, threshold: float = 0.5):
+    """Contention gate over a ``DeviceThrottle``: truthy while the share
+    of wall time the device spent busy since the LAST CALL exceeds
+    ``threshold``. Stateful by design — each call samples the
+    (busy_s, now) deltas, so the gate measures the current regime, not
+    the run's lifetime average."""
+    state = {"busy": float(throttle.busy_s), "t": time.monotonic()}
+
+    def saturated() -> bool:
+        busy, now = float(throttle.busy_s), time.monotonic()
+        d_busy, d_t = busy - state["busy"], now - state["t"]
+        state["busy"], state["t"] = busy, now
+        if d_t <= 0:
+            return False
+        return (d_busy / d_t) > threshold
+    return saturated
 
 
 class ChecksumScrubber:
@@ -52,13 +82,17 @@ class ChecksumScrubber:
 
     def __init__(self, directory: Directory, store=None,
                  limiter=None, interval_s: float = 0.0,
-                 on_corrupt=None):
+                 on_corrupt=None, contention=None):
         self.directory = directory
         self.store = store
         self.limiter = limiter          # MergeRateLimiter (or None)
         self.interval_s = interval_s
         self.on_corrupt = on_corrupt
+        # no-arg callable; truthy -> the media is saturated by ingest and
+        # this periodic sweep is deferred (see throttle_saturation_gate)
+        self.contention = contention
         self.sweeps = 0
+        self.sweeps_deferred = 0
         self.files_checked = 0
         self.bytes_verified = 0
         self.corrupt_found = 0
@@ -136,6 +170,17 @@ class ChecksumScrubber:
             self.sweeps += 1
         return found
 
+    def maybe_sweep(self) -> list[str] | None:
+        """``sweep()`` unless the contention gate reports the media
+        saturated, in which case the pass is deferred (None) and retried
+        at the next interval. An explicit ``sweep()`` call always runs —
+        the gate only moderates the periodic background pressure."""
+        if self.contention is not None and self.contention():
+            with self._lock:
+                self.sweeps_deferred += 1
+            return None
+        return self.sweep()
+
     # -- daemon -------------------------------------------------------------
     def start(self) -> None:
         if self._thread is not None or self.interval_s <= 0:
@@ -148,7 +193,7 @@ class ChecksumScrubber:
     def _loop(self) -> None:
         while not self._stop.wait(self.interval_s):
             try:
-                self.sweep()
+                self.maybe_sweep()
             except BaseException as e:   # surfaced at close()
                 self._error = e
                 return
@@ -166,6 +211,7 @@ class ChecksumScrubber:
     def report(self) -> dict:
         with self._lock:
             return {"sweeps": self.sweeps,
+                    "sweeps_deferred": self.sweeps_deferred,
                     "files_checked": self.files_checked,
                     "bytes_verified": self.bytes_verified,
                     "corrupt_found": self.corrupt_found,

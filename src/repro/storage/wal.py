@@ -20,6 +20,17 @@ durability-critical piece. The WAL closes that gap:
   * at commit, every record the flushed segments now cover is deleted
     (``truncate_upto``), keeping the log bounded by the commit cadence.
 
+Group commit (``append(sync=False)`` + ``sync_upto``): under concurrent
+ingest, one fsync per ack makes the sync barrier THE bottleneck — the
+classic database fix is to let concurrent ackers share one barrier.
+Appenders write their record file (cheap, page cache) and then wait on
+``sync_upto(seq)``: the first waiter becomes the sync LEADER, grabs the
+entire unsynced tail, and issues ONE batched ``directory.sync`` for all
+of it; followers whose seq the batch covered return without ever
+touching the device. Durability semantics per ack are unchanged —
+``sync_upto`` returns only once the record is on media — the fsync cost
+is just amortized over ``group_acks / group_commits`` records.
+
 Record payloads (little-endian, inside the frame):
 
   add     ``b"A" | u64 D | u64 L | D*L * i32 tokens``
@@ -29,6 +40,7 @@ from __future__ import annotations
 
 import re
 import struct
+import threading
 
 import numpy as np
 
@@ -99,6 +111,15 @@ class WriteAheadLog:
         self.appended = 0
         self.replayed = 0
         self.skipped = 0
+        # group-commit state (see module doc): records appended with
+        # sync=False queue here until a sync_upto leader flushes them
+        self.group_commits = 0   # batched sync barriers issued
+        self.group_acks = 0      # records those barriers made durable
+        self.group_max = 0       # largest single group
+        self._cond = threading.Condition()
+        self._unsynced: list[tuple[int, str]] = []   # (seq, name), ordered
+        self._synced_upto = self._next_seq - 1
+        self._sync_leader = False
 
     def _seqs(self) -> list[int]:
         return sorted(int(m.group(1))
@@ -109,16 +130,76 @@ class WriteAheadLog:
     def next_seq(self) -> int:
         return self._next_seq
 
-    def append(self, payload: bytes) -> int:
-        """Write + sync one record; returns its sequence number. Only
-        after this returns may the op be acked."""
-        seq = self._next_seq
-        name = wal_name(seq)
-        self.directory.write_file(name, frame(KIND_WAL, payload))
-        self.directory.sync([name])
-        self._next_seq = seq + 1
-        self.appended += 1
-        return seq
+    def append(self, payload: bytes, sync: bool = True) -> int:
+        """Write one record; returns its sequence number. With ``sync``
+        (default) the record is synced before returning — only then may
+        the op be acked; a failed sync leaves the sequence unconsumed
+        (the next append overwrites the torn file), so the indexer's
+        never-acked accounting holds. ``sync=False`` defers the barrier
+        to a later ``sync_upto(seq)`` (group commit): the caller must
+        not ack until that returns."""
+        with self._cond:
+            seq = self._next_seq
+            name = wal_name(seq)
+            self.directory.write_file(name, frame(KIND_WAL, payload))
+            if sync:
+                self.directory.sync([name])   # raises -> seq not consumed
+            self._next_seq = seq + 1
+            self.appended += 1
+            if not sync:
+                self._unsynced.append((seq, name))
+            elif not self._unsynced:
+                # safe only while nothing earlier awaits its barrier (the
+                # watermark asserts everything <= it is durable)
+                self._synced_upto = max(self._synced_upto, seq)
+            return seq
+
+    def sync_upto(self, seq: int) -> None:
+        """Block until record ``seq`` is durable. The first waiter
+        becomes the LEADER: it takes the whole unsynced tail and issues
+        one batched ``directory.sync``; every waiter whose record the
+        batch covered returns without issuing its own. On a sync failure
+        the batch is re-queued (no record is silently marked durable)
+        and the error propagates to the leader's caller."""
+        while True:
+            with self._cond:
+                if self._synced_upto >= seq:
+                    return
+                if self._sync_leader:
+                    self._cond.wait(timeout=0.5)
+                    continue
+                self._sync_leader = True
+                batch = self._unsynced
+                self._unsynced = []
+            try:
+                # a record truncate_upto already deleted (its ops were
+                # committed durably via the manifest) needs no barrier;
+                # re-filter once if a truncation races the existence check
+                names = [n for _, n in batch
+                         if self.directory.file_exists(n)]
+                while True:
+                    try:
+                        if names:
+                            self.directory.sync(names)
+                        break
+                    except FileNotFoundError:
+                        names = [n for n in names
+                                 if self.directory.file_exists(n)]
+            except BaseException:
+                with self._cond:
+                    self._unsynced = batch + self._unsynced
+                    self._sync_leader = False
+                    self._cond.notify_all()
+                raise
+            with self._cond:
+                if batch:
+                    self._synced_upto = max(self._synced_upto,
+                                            batch[-1][0])
+                    self.group_commits += 1
+                    self.group_acks += len(batch)
+                    self.group_max = max(self.group_max, len(batch))
+                self._sync_leader = False
+                self._cond.notify_all()
 
     def replay(self):
         """Yield ``(seq, op, payload)`` for every readable record in

@@ -34,6 +34,27 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 900):
     return r.stdout
 
 
+def test_spmd_regions_import_the_compat_shim():
+    """Every SPMD region must get shard_map from the version-stable shim
+    in ``repro/distributed/compat.py`` — importing it straight from
+    ``jax.experimental`` reintroduces the cross-version API drift the
+    shim exists to absorb. Lint, not runtime: grep the source tree."""
+    shim = REPO / "src" / "repro" / "distributed" / "compat.py"
+    bad = []
+    for path in sorted((REPO / "src").rglob("*.py")):
+        if path == shim:
+            continue
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            code = line.split("#", 1)[0]
+            if "jax.experimental.shard_map" in code or \
+                    ("shard_map" in code and "import" in code
+                     and "jax.experimental" in code):
+                bad.append(f"{path.relative_to(REPO)}:{ln}: {line.strip()}")
+    assert not bad, \
+        "import shard_map from repro.distributed.compat, not " \
+        "jax.experimental:\n" + "\n".join(bad)
+
+
 def test_shuffle_conservation_and_ownership():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
