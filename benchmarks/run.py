@@ -39,6 +39,14 @@ trajectory.
                     scatter-gather top-k (asserted bit-identical to the
                     union oracle), and the failover cycle timed — scrub
                     detect -> quarantine/shed -> peer re-fetch -> healthy
+  serve_steady      steady-state serving: open-loop Poisson driver at a
+                    fixed QPS under ~10% ingest/delete churn — tail
+                    latency (p50/p99/p999) for wait-for-full vs
+                    continuous batching (SLO gate: continuous p99 must
+                    win), generation-keyed result-cache + postings-cache
+                    hit rates, and admission control past saturation
+                    (typed rejections, admitted p99 vs the unbounded
+                    queue's, zero wrong answers)
 
 ``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME``
 runs a single bench.
@@ -952,10 +960,191 @@ def fleet(smoke=False):
         ix.close()
 
 
+def serve_steady(smoke=False):
+    """Steady-state serving, measured open-loop: a seeded Poisson
+    arrival stream at a fixed target QPS drives the scheduler while the
+    standard ~10% churn loop (index + delete + refresh + swap) mutates
+    the index underneath. Three measured contrasts, each SLO-gated:
+
+    1. Batching policy A/B at the same offered load: wait-for-full
+       (``full_batch=True``, the old policy) puts the inter-arrival gap
+       of a whole batch into every tail; continuous batching launches
+       partials after ``max_wait_ms``. Gate: continuous p99 < full p99,
+       nothing shed, nothing lost.
+    2. Generation-keyed result cache + hot-term postings cache hit
+       rates under churn (every refresh swap bumps the generation, so
+       hits are bit-identical by construction — asserted in the test
+       suite, priced here).
+    3. Admission control past saturation: service time pinned with a
+       sleep floor so overload is deterministic, then the same offered
+       storm with and without ``admit_cap``. Gate: the bounded queue's
+       admitted p99 beats the unbounded queue's, rejections are typed
+       and counted, and every admitted answer is bit-identical to the
+       direct-searcher oracle (zero wrong answers)."""
+    import dataclasses
+    from repro.configs.registry import get_arch
+    from repro.core.indexer import DistributedIndexer
+    from repro.serving.query_scheduler import QueryRequest, QueryScheduler
+    from repro.serving.steady import (ResultCache, make_churn,
+                                      run_open_loop, warm_searcher)
+    from repro.storage import RAMDirectory, open_latest
+
+    # merge_fanout raised so no merge fires inside the short measured
+    # windows: a churn-triggered merge is a multi-second compile storm
+    # that buries the policy contrast for BOTH arms — the merge-under-
+    # serve tax is priced in index_gb_per_min / update_heavy
+    cfg = dataclasses.replace(get_arch("lucene-envelope").smoke,
+                              postings_cache_mb=4.0, merge_fanout=64)
+    rng = np.random.default_rng(41)
+    n_docs, qps, duration = (256, 75, 0.8) if smoke else (1024, 75, 2.0)
+    ix = DistributedIndexer(cfg=cfg, target_dir=RAMDirectory(),
+                            merge_threads=0)
+    toks = rng.integers(1, 4096, (n_docs, cfg.doc_len)).astype(np.int32)
+    ix.index_batch(toks)
+    ix.commit()
+    searcher = ix.refresh()
+
+    vals, counts = np.unique(toks[toks > 0], return_counts=True)
+    heavy = vals[np.argsort(-counts)[:32]].astype(np.int32)
+    pool = [rng.choice(heavy, 3).astype(np.int32) for _ in range(8)]
+    slots, max_terms, k = 8, 4, 10
+    warm_searcher(searcher, pool, slots, max_terms, k)
+    searcher.search(pool[0], k)            # the oracle path, warmed too
+    # throwaway churn ticks warm the write path's compile shapes (flush
+    # pack kernels; tick 4 deletes, compiling the masked evaluators of
+    # the seed segments) before anything is measured
+    pre = QueryScheduler(searcher=searcher, slots=slots,
+                         max_terms=max_terms, k=k)
+    tick = make_churn(ix, pre, rng, warm_pool=pool)
+    for _ in range(5):
+        tick()
+
+    # ~10% churn = doc-ops as a fraction of queries served. Churn is
+    # bounded by TICK COUNT, not wall time: each tick flushes a new
+    # segment whose evaluators must compile, so unbounded interval-
+    # driven ticks are a positive feedback loop (slow ticks stretch the
+    # wall, the wall admits more ticks) that starves both arms alike.
+    n_ticks = 3 if smoke else 7
+
+    def drive(full_batch, cache=None, tag=None):
+        s = ix.refresh()                   # never serve a cold snapshot:
+        warm_searcher(s, pool, slots, max_terms, k)  # the warmer is
+        sched = QueryScheduler(searcher=s, slots=slots,  # the swap contract
+                               max_terms=max_terms, k=k,
+                               full_batch=full_batch, max_wait_ms=2.0,
+                               cache=cache)
+        churn = make_churn(ix, sched, rng, docs_per_tick=2,
+                           delete_every=2, warm_pool=pool)
+        left = [n_ticks]
+
+        def bounded_churn():
+            if left[0] > 0:
+                left[0] -= 1
+                churn()
+
+        rep = run_open_loop(sched, pool, qps=qps, duration_s=duration,
+                            seed=43, churn=bounded_churn,
+                            churn_interval_s=duration / (n_ticks + 1))
+        assert rep.completed == rep.offered and rep.rejected == 0, \
+            f"{tag}: lost admitted traffic ({rep.row()})"
+        return rep, sched
+
+    # --- batching policy A/B at the same offered load ----------------
+    full, _ = drive(full_batch=True, tag="full_batch")
+    cont, csched = drive(full_batch=False, tag="continuous")
+    assert cont.p99_ms < full.p99_ms, \
+        (f"continuous batching must beat wait-for-full at {qps} QPS: "
+         f"p99 {cont.p99_ms:.2f}ms >= {full.p99_ms:.2f}ms")
+    assert cont.qps_achieved >= 0.5 * qps, \
+        f"driver failed to sustain load: {cont.qps_achieved:.0f}/{qps}"
+    emit("serve_steady.full_batch.p99_ms", full.p99_ms,
+         f"p50={full.p50_ms:.2f} p999={full.p999_ms:.2f} "
+         f"qps={full.qps_achieved:.0f} offered={full.offered}", ".2f")
+    emit("serve_steady.continuous.p99_ms", cont.p99_ms,
+         f"p50={cont.p50_ms:.2f} p999={cont.p999_ms:.2f} "
+         f"partial_steps={csched.partial_steps}/{csched.steps} "
+         f"mean_depth={cont.mean_queue_depth:.1f}", ".2f")
+    emit("serve_steady.continuous.qps_achieved", cont.qps_achieved,
+         f"target={qps} churn=10% wall_s={cont.wall_s:.2f}", ".0f")
+
+    # --- cache hit rates under churn ---------------------------------
+    cache = ResultCache(cap_bytes=1 << 20)
+    cached, _ = drive(full_batch=False, cache=cache, tag="cached")
+    crep = cache.report()
+    erep = ix.envelope_report()
+    emit("serve_steady.result_cache.hit_rate",
+         crep["hits"] / max(1, crep["hits"] + crep["misses"]),
+         f"hits={crep['hits']} misses={crep['misses']} "
+         f"entries={crep['entries']} bytes={crep['bytes']} "
+         f"served_cached={cached.cached}", ".3f")
+    # NRT serving never touches the directory (segments are handed from
+    # the writer in memory), so the postings cache is priced on its real
+    # workload: a cold reopen of the committed index fills it, a second
+    # reopen (restart / replica refresh) reads through it
+    ix.commit()
+    r0 = ix.envelope_report()
+    open_latest(ix.target_dir)
+    r1 = ix.envelope_report()
+    open_latest(ix.target_dir)
+    r2 = ix.envelope_report()
+    warm_h = r2["postings_cache_hits"] - r1["postings_cache_hits"]
+    warm_m = r2["postings_cache_misses"] - r1["postings_cache_misses"]
+    emit("serve_steady.postings_cache.hit_rate",
+         warm_h / max(1, warm_h + warm_m),
+         f"warm_reopen_hits={warm_h} warm_reopen_misses={warm_m} "
+         f"cold_fill_misses="
+         f"{r1['postings_cache_misses'] - r0['postings_cache_misses']} "
+         f"bytes={r2['postings_cache_bytes']}", ".3f")
+
+    # --- admission control past saturation ---------------------------
+    class _SlowSearcher:                   # pins service time: overload
+        def __init__(self, inner, delay_s):     # is deterministic, not
+            self._inner, self._delay_s = inner, delay_s  # machine-luck
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+        def search_batched(self, q, kk, theta0=None):
+            time.sleep(self._delay_s)
+            return self._inner.search_batched(q, kk, theta0=theta0)
+
+    storm_snap = ix.refresh()
+    warm_searcher(storm_snap, pool, 4, max_terms, k)
+    slow = _SlowSearcher(storm_snap, 0.004)
+    storm_qps, storm_s = (2000, 0.12) if smoke else (2500, 0.2)
+
+    def storm(admit_cap):
+        sched = QueryScheduler(searcher=slow, slots=4, max_terms=max_terms,
+                               k=k, max_wait_ms=2.0, admit_cap=admit_cap)
+        rep = run_open_loop(sched, pool, qps=storm_qps, duration_s=storm_s,
+                            seed=47)
+        assert rep.completed + rep.rejected == rep.offered, rep.row()
+        return rep, sched
+
+    unshed, _ = storm(admit_cap=0)
+    shed, ssched = storm(admit_cap=8)
+    assert shed.rejected > 0 and shed.rejected == ssched.rejected, \
+        "saturation storm must shed typed rejections"
+    assert shed.p99_ms < unshed.p99_ms, \
+        (f"admission control must bound admitted p99 past saturation: "
+         f"{shed.p99_ms:.1f}ms >= {unshed.p99_ms:.1f}ms")
+    oracle = ix.refresh()
+    for req in [r for r in shed.requests if r.done][:16]:
+        _, oi = oracle.search(req.terms, k)         # zero wrong answers
+        np.testing.assert_array_equal(np.asarray(req.doc_ids),
+                                      np.asarray(oi))
+    emit("serve_steady.admission.p99_ms", shed.p99_ms,
+         f"unbounded_p99={unshed.p99_ms:.1f} rejected={shed.rejected}/"
+         f"{shed.offered} admit_cap=8 wrong_answers=0", ".2f")
+    emit("serve_steady.admission.shed_rate",
+         shed.rejected / shed.offered,
+         f"offered_qps={storm_qps} completed={shed.completed}", ".3f")
+    ix.close()
+
+
 BENCHES = [table1_envelope, indexing_pipeline, pack_kernel, bm25_query,
            invert_kernel, build_reader, search_batched, searcher_refresh,
            merge_throughput, index_gb_per_min, envelope_measured,
-           update_heavy, search_pruned, compression, fault_matrix, fleet]
+           update_heavy, search_pruned, compression, fault_matrix, fleet,
+           serve_steady]
 SMOKE_BENCHES = [table1_envelope, indexing_pipeline, pack_kernel,
                  invert_kernel, merge_throughput, index_gb_per_min]
 

@@ -211,9 +211,25 @@ class EnvelopeConfig:
     # "pfor" (delta + lane-blocked bit-planes, the compressed default),
     # "raw" (int64 streams, the incompressible baseline the envelope
     # benchmarks compare against), "adaptive" (per-32-value-sub-block
-    # adaptive bit widths), or "pef" (partitioned Elias-Fano over doc-id
-    # gap lists — the sparse-postings frontier)
+    # adaptive bit widths), "pef" (partitioned Elias-Fano over doc-id
+    # gap lists — the sparse-postings frontier), or "auto" (every stream
+    # encoded with whichever of pfor/adaptive/pef comes out smallest;
+    # the chosen codec id is the stream's leading byte as always, so
+    # decode needs no knob)
     codec: str = "pfor"
+    # WAL rotation: > 0 caps every wal_N record file at this many MB —
+    # an oversized acked batch splits row-wise across consecutive files
+    # (replayed atomically; storage/wal.py). 0 = one record per op.
+    wal_rotate_mb: float = 0.0
+    # WAL recycling: keep up to this many truncated record files parked
+    # at future sequence slots (renamed, not deleted) for appends to
+    # overwrite — spares the create/delete metadata churn. 0 = delete.
+    wal_recycle: int = 0
+    # hot-term postings cache (storage.CachingDirectory) over the target
+    # media stack: > 0 pins up to this many MB of frame-verified
+    # dict/postings blocks in RAM, LFU-evicted, so nas/disk profiles stop
+    # re-paying media latency for head terms. 0 = no cache layer.
+    postings_cache_mb: float = 0.0
     # WAL group commit (storage.wal.sync_upto): concurrent ingest acks
     # coalesce into one batched fsync instead of paying one barrier each;
     # durability per ack is unchanged. Off by default — serial ingest

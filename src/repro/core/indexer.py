@@ -216,6 +216,14 @@ class DistributedIndexer:
     # global doc-id spaces disjoint across shards). Recovery resumes from
     # max(committed max + 1, doc_base).
     doc_base: int = 0
+    # ---- steady-state serving (repro.serving) ----
+    # callables invoked with the fresh searcher after every ``refresh``
+    # swap — ``attach_serving`` registers the scheduler's
+    # ``swap_searcher`` here, so refresh -> generation bump -> exact
+    # result-cache invalidation is one wiring call.
+    on_refresh: list = None
+    serving: object = None       # attached QueryScheduler (report source)
+    _postings_cache: object = None   # CachingDirectory when configured
     _next_doc: int = 0
     _wal: object = None
     _wal_covered: int = -1     # highest wal seq whose ops are flushed
@@ -228,11 +236,24 @@ class DistributedIndexer:
         self.merger = MergeDriver(
             fanout=self.cfg.merge_fanout,
             reorder_on_merge=getattr(self.cfg, "reorder_on_merge", False))
+        if self.on_refresh is None:
+            self.on_refresh = []
         if self.retry_policy is not None and self.target_dir is not None:
             from repro.storage.retry import RetryingDirectory
             if not isinstance(self.target_dir, RetryingDirectory):
                 self.target_dir = RetryingDirectory(self.target_dir,
                                                     self.retry_policy)
+        # hot-term postings cache ABOVE the whole media stack (retry /
+        # faults / throttle): repeat reads of head-term segment files stop
+        # paying media latency. Everything below still sees real IO, and
+        # the scrubber deliberately reads the unwrapped stack so cached
+        # blocks can't mask on-media bit rot.
+        cache_mb = float(getattr(self.cfg, "postings_cache_mb", 0.0) or 0.0)
+        if cache_mb > 0 and self.target_dir is not None:
+            from repro.storage.directory import CachingDirectory
+            self.target_dir = CachingDirectory(
+                self.target_dir, cap_bytes=int(cache_mb * 1e6))
+            self._postings_cache = self.target_dir
         if self.target_dir is not None:
             from repro.storage.commit import SegmentStore
             self.store, recovered = SegmentStore.open(
@@ -290,7 +311,11 @@ class DistributedIndexer:
             self.wal_group = bool(getattr(self.cfg, "wal_group", False))
         if self.wal and self.target_dir is not None:
             from repro.storage.wal import WriteAheadLog
-            self._wal = WriteAheadLog(self.target_dir)
+            self._wal = WriteAheadLog(
+                self.target_dir,
+                rotate_bytes=int(float(getattr(self.cfg, "wal_rotate_mb",
+                                               0.0) or 0.0) * 1e6),
+                recycle_keep=int(getattr(self.cfg, "wal_recycle", 0) or 0))
             self._wal_covered = -1
             self._replay_wal()
         if self.scrub_every is None:
@@ -314,8 +339,11 @@ class DistributedIndexer:
                     gate = throttle_saturation_gate(thr)
                     break
                 d = getattr(d, "inner", None)
+            scrub_dir = (self._postings_cache.inner
+                         if self._postings_cache is not None
+                         else self.target_dir)
             self.scrubber = ChecksumScrubber(
-                self.target_dir, store=self.store, limiter=limiter,
+                scrub_dir, store=self.store, limiter=limiter,
                 interval_s=self.scrub_every or 0.0, contention=gate)
             self.scrubber.start()   # no-op unless scrub_every > 0
         if self.refresh_every is None:
@@ -589,7 +617,23 @@ class DistributedIndexer:
         self.stats.refreshes += 1
         self.stats.last_refresh_s = time.time() - t0
         self.searcher = searcher   # the (atomic) NRT swap
+        # serving hooks: swap attached schedulers to the new snapshot —
+        # its generation keys result caches, so a content change here IS
+        # the exact invalidation event
+        for cb in (self.on_refresh or ()):
+            cb(searcher)
         return searcher
+
+    def attach_serving(self, scheduler) -> None:
+        """Wire a ``QueryScheduler`` into this writer's lifecycle: every
+        ``refresh`` swaps the fresh searcher in (the generation key makes
+        that an exact result-cache invalidation), and
+        ``envelope_report`` grows the ``serve_*`` counters."""
+        self.serving = scheduler
+        self.on_refresh.append(scheduler.swap_searcher)
+        if self.searcher is not None \
+                and scheduler.searcher is not self.searcher:
+            scheduler.swap_searcher(self.searcher)
 
     def envelope_report(self) -> dict:
         """Charge measured bytes to the configured media pair."""
@@ -682,16 +726,47 @@ class DistributedIndexer:
                            "wal_skipped": self._wal.skipped,
                            "wal_group_commits": self._wal.group_commits,
                            "wal_group_acks": self._wal.group_acks,
-                           "wal_group_max": self._wal.group_max})
+                           "wal_group_max": self._wal.group_max,
+                           "wal_rotations": self._wal.rotations,
+                           "wal_recycled": self._wal.recycled,
+                           "wal_recycle_reused": self._wal.recycle_reused,
+                           "wal_recycle_reclaimed":
+                               self._wal.recycle_reclaimed})
         if self.scrubber is not None:
             report.update({f"scrub_{k}": v
                            for k, v in self.scrubber.report().items()
                            if k != "corrupt"})
-        if hasattr(self.target_dir, "retries"):
-            report["io_retries"] = self.target_dir.retries
-            report["io_giveups"] = self.target_dir.giveups
+        d = self.target_dir   # retry wrapper may sit under the cache layer
+        while d is not None:
+            if hasattr(d, "retries"):
+                report["io_retries"] = d.retries
+                report["io_giveups"] = d.giveups
+                break
+            d = getattr(d, "inner", None)
         if self.merge_scheduler is not None:
             report["merge_retries"] = self.merge_scheduler.merge_retries
+        if self._postings_cache is not None:
+            pc = self._postings_cache
+            report.update({
+                "postings_cache_hits": pc.cache_hits,
+                "postings_cache_misses": pc.cache_misses,
+                "postings_cache_evictions": pc.cache_evictions,
+                "postings_cache_rejected": pc.cache_rejected,
+                "postings_cache_bytes": pc.cache_bytes,
+            })
+        if self.serving is not None:
+            s = self.serving
+            report.update({
+                "serve_served": s.served,
+                "serve_cached": s.served_cached,
+                "serve_rejected": s.rejected,
+                "serve_steps": s.steps,
+                "serve_partial_steps": s.partial_steps,
+                "serve_queue_depth": s.queue_depth,
+                "serve_degraded": s.degraded,
+            })
+            if s.cache is not None:
+                report["result_cache"] = s.cache.report()
         if self.publisher is not None:
             report["fleet"] = self.publisher.report()
         if self.store is not None:

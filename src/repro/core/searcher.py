@@ -51,6 +51,7 @@ old searcher while indexing proceeds, and swap in a fresh one per refresh.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from dataclasses import dataclass, field
 
@@ -526,6 +527,12 @@ class IndexSearcher:
     degraded: bool = False
     missing_docs: int = 0
     quarantined: tuple = ()        # quarantined segment base names
+    # snapshot identity for result caching: two searchers with the same
+    # nonzero generation serve bit-identical results for every query (the
+    # ReaderCache assigns one per distinct (seg_ids, quarantine) state,
+    # from a process-global counter so fleets of caches never collide).
+    # 0 = unkeyed snapshot — result caches must treat it as uncacheable.
+    generation: int = 0
     # collection statistics imposed from OUTSIDE this snapshot (fleet
     # serving): an object with ``n_docs`` / ``avgdl`` / ``df_terms`` /
     # ``df_table`` covering the UNION of all shards. Doc spaces across
@@ -594,6 +601,9 @@ class IndexSearcher:
                              missing_docs=self.missing_docs,
                              quarantined=self.quarantined,
                              collection_stats=stats)
+        # generation stays 0: the imposed stats change scores, so this
+        # snapshot's key no longer determines the wrapped results (the
+        # fleet layer keys its caches on its own all-shard generation)
 
     def global_idf(self, q_terms: np.ndarray) -> np.ndarray:
         """Collection-wide idf for ``q_terms`` (any shape): one lookup in
@@ -764,6 +774,12 @@ class IndexSearcher:
         return top_v, top_i
 
 
+# process-global searcher-generation source: every distinct snapshot state
+# any ReaderCache serves gets a unique nonzero id, so result caches keyed
+# by generation can never collide across indexes, shards, or replicas
+_GENERATIONS = itertools.count(1)
+
+
 @dataclass
 class ReaderCache:
     """Reader cache keyed by segment identity (``Segment.seg_id``).
@@ -793,6 +809,12 @@ class ReaderCache:
     evictions: int = 0
     _readers: dict = field(default_factory=dict)
     _max_seen: int = -1  # newest seg_id ever installed (monotonic)
+    # searcher-generation state: the generation bumps (fresh id from the
+    # process-global counter) exactly when the served snapshot's identity
+    # — live seg_ids (seg_id changes per delete generation) + quarantine
+    # state — changes, so equal generations imply bit-identical results
+    _gen_key: tuple = None
+    _generation: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
 
@@ -846,10 +868,17 @@ class ReaderCache:
                 self._readers = live
         quarantined = tuple(sorted(getattr(recovery, "quarantined", ())
                                    or ()))
+        missing = int(getattr(recovery, "missing_docs", 0) or 0)
+        gen_key = (tuple(sorted(s.seg_id for s in segs)), quarantined,
+                   missing)
+        with self._lock:
+            if gen_key != self._gen_key:
+                self._gen_key = gen_key
+                self._generation = next(_GENERATIONS)
+            generation = self._generation
         return IndexSearcher(readers=readers, k1=self.k1, b=self.b,
                              prune=self.prune,
                              degraded=bool(quarantined),
-                             missing_docs=int(getattr(recovery,
-                                                      "missing_docs", 0)
-                                              or 0),
-                             quarantined=quarantined)
+                             missing_docs=missing,
+                             quarantined=quarantined,
+                             generation=generation)

@@ -40,6 +40,7 @@ healthy replica at all does the least-degraded one serve
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -177,6 +178,7 @@ class FleetStats:
     shards_skipped: int = 0      # whole shards pruned by the shared bound
     failovers: int = 0           # unhealthy replica bypassed for a peer
     degraded_served: int = 0     # shard served degraded (no healthy peer)
+    lat_routed: int = 0          # picks decided by the EWMA latency table
     served: dict = field(default_factory=dict)   # replica_id -> batches
 
 
@@ -188,15 +190,29 @@ class FleetSearcher:
     ``degraded`` / ``missing_docs`` / ``prune_stats``), so a scheduler
     can serve a whole fleet exactly like one local index."""
 
-    def __init__(self, shards, mesh=None, mesh_axis: str = "shard"):
+    def __init__(self, shards, mesh=None, mesh_axis: str = "shard",
+                 latency_aware: bool = True, ewma_alpha: float = 0.2,
+                 probe_every: int = 16):
         self.shards = [list(g) for g in shards]
         assert self.shards and all(self.shards), \
             "every shard needs at least one replica"
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        # latency-aware routing: each serve updates an EWMA of that
+        # replica's batch latency; once every healthy peer has samples,
+        # picks go to the fastest (a slow replica sheds traffic without
+        # ever being marked unhealthy). Every ``probe_every``-th pick per
+        # shard falls back to round-robin so a recovered replica's EWMA
+        # refreshes instead of being starved forever at its old worst.
+        self.latency_aware = bool(latency_aware)
+        self.ewma_alpha = float(ewma_alpha)
+        self.probe_every = max(2, int(probe_every))
         self.stats = FleetStats()
         self.prune_stats = PruneStats()
         self._rr = [0] * len(self.shards)
+        self._picks = [0] * len(self.shards)
+        self._ewma = [[None] * len(g) for g in self.shards]   # seconds
+        self._ewma_n = [[0] * len(g) for g in self.shards]
         self._stats_key = None
         self.union_stats: CollectionStats = None
         self._lock = threading.Lock()
@@ -218,21 +234,65 @@ class FleetSearcher:
         return sum(min(int(r.missing_docs) for r in g)
                    for g in self.shards)
 
+    @property
+    def generation(self):
+        """Fleet-level result-cache key, or 0 (uncacheable) unless the
+        fleet is in a cacheable state: every replica of every shard
+        healthy and the whole group agreed on one commit generation.
+        Healthy replicas at the same commit serve identical content, so
+        routing cannot change results and the tuple of per-shard commit
+        gens determines every answer. Syncers assign ``gen`` only AFTER
+        their searcher swap, so a stable key across a serve brackets a
+        consistent fleet — the scheduler re-checks the key post-serve
+        before caching."""
+        gens = []
+        for g in self.shards:
+            seen = set()
+            for r in g:
+                if not r.healthy:
+                    return 0
+                seen.add(int(r.gen))
+            if len(seen) != 1:
+                return 0   # mid-sync: replicas answer from different commits
+            gens.append(seen.pop())
+        return ("fleet", id(self), tuple(gens))
+
     # -- routing ------------------------------------------------------------
     def _pick(self, si: int):
-        """Round-robin among shard ``si``'s healthy replicas; a degraded
-        replica sheds to the next healthy peer. Returns ``(replica,
-        failed_over, served_degraded)``."""
+        """Pick shard ``si``'s serving replica: the lowest-EWMA-latency
+        healthy one once every healthy peer has warm stats, round-robin
+        otherwise (cold start, single survivor, or the periodic probe
+        pick). A degraded replica sheds to a healthy peer either way
+        (``failed_over`` = the round-robin head was unhealthy). Returns
+        ``(replica, failed_over, served_degraded, replica_index)``."""
         group = self.shards[si]
         n = len(group)
         start = self._rr[si]
         self._rr[si] = (start + 1) % n
-        for j in range(n):
-            r = group[(start + j) % n]
-            if r.healthy:
-                return r, j > 0, False
-        r = min(group, key=lambda x: int(x.missing_docs))
-        return r, False, True
+        self._picks[si] += 1
+        healthy = [j for j in range(n) if group[j].healthy]
+        if not healthy:
+            j = min(range(n), key=lambda x: int(group[x].missing_docs))
+            return group[j], False, True, j
+        failed_over = start not in healthy
+        if (self.latency_aware and len(healthy) > 1
+                and self._picks[si] % self.probe_every != 0
+                and all(self._ewma_n[si][j] >= 2 for j in healthy)):
+            j = min(healthy, key=lambda x: self._ewma[si][x])
+            self.stats.lat_routed += 1
+        else:
+            j = next((start + o) % n for o in range(n)
+                     if (start + o) % n in healthy)
+        return group[j], failed_over, False, j
+
+    def _observe(self, si: int, j: int, dt: float) -> None:
+        """Fold one serve's wall time into replica ``j``'s EWMA."""
+        with self._lock:
+            prev = self._ewma[si][j]
+            a = self.ewma_alpha
+            self._ewma[si][j] = dt if prev is None \
+                else (1.0 - a) * prev + a * dt
+            self._ewma_n[si][j] += 1
 
     def _ensure_stats(self, chosen) -> None:
         """(Re)aggregate + install union stats when any chosen replica's
@@ -255,6 +315,7 @@ class FleetSearcher:
         with self._lock:
             picks = [self._pick(si) for si in range(self.n_shards)]
             chosen = [p[0] for p in picks]
+            ridx = [p[3] for p in picks]
             self.stats.failovers += sum(p[1] for p in picks)
             self.stats.degraded_served += sum(p[2] for p in picks)
             for r in chosen:
@@ -274,8 +335,10 @@ class FleetSearcher:
                     and bool(np.all(ubs[si] < theta0)):
                 skipped += 1
                 continue   # no doc on this shard can beat the running k-th
+            t_serve = time.perf_counter()
             v, i = chosen[si].search_batched(q, k, theta0=theta0)
             v, i = np.asarray(v), np.asarray(i)
+            self._observe(si, ridx[si], time.perf_counter() - t_serve)
             vals[si, :, :v.shape[1]] = v
             ids[si, :, :i.shape[1]] = i
             visited += 1
@@ -309,4 +372,10 @@ class FleetSearcher:
                     "shards_skipped": self.stats.shards_skipped,
                     "failovers": self.stats.failovers,
                     "degraded_served": self.stats.degraded_served,
+                    "lat_routed": self.stats.lat_routed,
+                    "latency_ms": {
+                        g[j].replica_id: round(self._ewma[si][j] * 1e3, 4)
+                        for si, g in enumerate(self.shards)
+                        for j in range(len(g))
+                        if self._ewma[si][j] is not None},
                     "served": dict(self.stats.served)}

@@ -210,9 +210,13 @@ class ReplicaSyncer:
             new_live[n] = (lname, seg)
         self._cores = {n: c for n, c in self._cores.items() if n in current}
         self._live = new_live
-        self.gen = gen
         self.meta = meta
         self._refresh_searcher()
+        # gen advances LAST: a concurrent fleet-generation reader that
+        # sees the new gen is guaranteed the searcher swap already
+        # happened, so a result cached under the new key can only hold
+        # new-snapshot content (see FleetSearcher.generation)
+        self.gen = gen
 
     def _refresh_searcher(self) -> None:
         """Swap the serving searcher over the current live set; the

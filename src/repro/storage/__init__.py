@@ -12,19 +12,20 @@ flushed (``wal``), serve a partially-corrupt commit minus its
 quarantined casualties (``open_latest_degraded``), and scrub committed
 frames for bit rot in the background (``ChecksumScrubber``).
 """
-from repro.storage.codec import (CODECS, CorruptSegment, SEGMENT_SUFFIXES,
-                                 decode_liveness, decode_segment,
-                                 encode_liveness, encode_segment,
-                                 read_segment, write_segment)
+from repro.storage.codec import (AUTO, CODECS, CorruptSegment,
+                                 SEGMENT_SUFFIXES, decode_liveness,
+                                 decode_segment, encode_liveness,
+                                 encode_segment, read_segment,
+                                 stream_codec_name, write_segment)
 from repro.storage.commit import (RecoveryInfo, SegmentStore, list_commits,
                                   liv_name, open_latest,
                                   open_latest_degraded, open_searcher,
                                   read_commit, write_commit)
-from repro.storage.directory import (MEDIA_PROFILES, DeviceThrottle,
-                                     Directory, FaultInjectingDirectory,
-                                     FSDirectory, MediaProfile,
-                                     RAMDirectory, ThrottledDirectory,
-                                     VolatileDirectory)
+from repro.storage.directory import (MEDIA_PROFILES, CachingDirectory,
+                                     DeviceThrottle, Directory,
+                                     FaultInjectingDirectory, FSDirectory,
+                                     MediaProfile, RAMDirectory,
+                                     ThrottledDirectory, VolatileDirectory)
 from repro.storage.retry import (RetriesExhausted, RetryingDirectory,
                                  RetryPolicy, is_transient_error)
 from repro.storage.scrub import (ChecksumScrubber, expected_kind,
@@ -33,13 +34,13 @@ from repro.storage.wal import (WriteAheadLog, decode_wal, encode_wal_add,
                                encode_wal_delete)
 
 __all__ = [
-    "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES", "decode_liveness",
-    "decode_segment", "encode_liveness", "encode_segment", "read_segment",
-    "write_segment",
+    "AUTO", "CODECS", "CorruptSegment", "SEGMENT_SUFFIXES",
+    "decode_liveness", "decode_segment", "encode_liveness",
+    "encode_segment", "read_segment", "stream_codec_name", "write_segment",
     "RecoveryInfo", "SegmentStore", "list_commits", "liv_name",
     "open_latest", "open_latest_degraded", "open_searcher", "read_commit",
     "write_commit",
-    "MEDIA_PROFILES", "DeviceThrottle", "Directory",
+    "MEDIA_PROFILES", "CachingDirectory", "DeviceThrottle", "Directory",
     "FaultInjectingDirectory", "FSDirectory", "MediaProfile",
     "RAMDirectory", "ThrottledDirectory", "VolatileDirectory",
     "RetriesExhausted", "RetryingDirectory", "RetryPolicy",

@@ -84,6 +84,12 @@ _SUFFIX_KIND = {".dict": KIND_DICT, ".pst": KIND_PST,
 # stream codec ids
 _RAW, _PFOR, _ADW, _PEF = 0, 1, 2, 3
 CODECS = ("raw", "pfor", "adaptive", "pef")
+# write-time pseudo-codec: every stream is encoded with whichever of the
+# compressed codecs comes out smallest for ITS values; the choice is
+# recorded in the stream's leading id byte, so the decoder needs no
+# out-of-band knob and mixed-codec segment files read back exactly
+AUTO = "auto"
+_AUTO_CANDIDATES = ("pfor", "adaptive", "pef")
 
 _ADW_SUB = 32      # adaptive codec sub-block size (values per width)
 _PEF_CHUNK = 128   # partitioned Elias-Fano chunk size (values per universe)
@@ -231,6 +237,21 @@ def _enc_stream(arr: np.ndarray, codec: str) -> bytes:
     arr = np.asarray(arr, np.int64)
     if arr.size and int(arr.min()) < 0:
         raise ValueError("streams must be non-negative after rebasing")
+    if codec == AUTO:
+        # smallest of the compressed codecs for THIS stream; a candidate
+        # whose value domain the stream exceeds (pfor/adaptive cap at
+        # uint32, pef at int64 prefix-sum headroom) just drops out, and
+        # only when every one refuses does the ceiling-free raw stream
+        # carry the values
+        best = None
+        for cand in _AUTO_CANDIDATES:
+            try:
+                enc = _enc_stream(arr, cand)
+            except ValueError:
+                continue
+            if best is None or len(enc) < len(best):
+                best = enc
+        return best if best is not None else _enc_stream(arr, "raw")
     if codec == "raw":
         return (struct.pack("<BQ", _RAW, arr.size)
                 + arr.astype("<i8").tobytes())
@@ -355,6 +376,18 @@ def _dec_stream(buf: bytes, off: int) -> tuple[np.ndarray, int]:
         raise CorruptSegment(f"unknown stream codec id {codec_id}")
     except struct.error as e:
         raise CorruptSegment("stream header truncated") from e
+
+
+def stream_codec_name(buf: bytes, off: int = 0) -> str:
+    """Name of the codec that encoded the stream starting at ``off`` —
+    its leading id byte, which is also the per-stream record of what
+    ``codec="auto"`` chose at write time."""
+    if off >= len(buf):
+        raise CorruptSegment("stream offset past end of buffer")
+    cid = buf[off]
+    if cid >= len(CODECS):
+        raise CorruptSegment(f"unknown stream codec id {cid}")
+    return CODECS[cid]
 
 
 # ---------------------------------------------------------------------------

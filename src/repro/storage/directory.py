@@ -528,6 +528,162 @@ class ThrottledDirectory(Directory):
 
 
 # ---------------------------------------------------------------------------
+# hot-block caching
+# ---------------------------------------------------------------------------
+
+# segment files worth pinning: term dictionaries + postings streams. The
+# commit manifest / liveness / WAL change under their own names and are
+# deliberately NOT cached (their readers want the media truth).
+_CACHE_SUFFIXES = (".dict", ".pst", ".pos", ".doc")
+
+
+class CachingDirectory(Directory):
+    """A Directory that pins hot frame-checksummed blocks in RAM.
+
+    The read path re-pays media latency every time a segment file is
+    (re)opened — recovery, replica sync and self-heal, reader rebuilds
+    after cache eviction, degraded reopens — and on the nas/disk
+    profiles that latency dominates. This layer sits ABOVE the media
+    seam (wrap the throttled/fault-injected directory, not the raw
+    store) and serves repeat reads of postings-bearing files from
+    memory:
+
+      * only whole files with a postings suffix are cached, and only
+        after their frame passes crc validation at fill time — a block
+        that fails ``unframe`` is served through but never retained, so
+        the cache can't launder bit rot past the scrubber;
+      * eviction is frequency-first (LFU, ties broken oldest-access
+        first) under ``cap_bytes`` — head terms stay pinned while the
+        long tail cycles, which is the access pattern the paper's
+        serving-side memory-hierarchy argument assumes;
+      * mutation of a cached name through THIS directory (write /
+        delete / rename) drops the entry, and ``invalidate_base``
+        drops every block of one segment family — the indexer calls it
+        when a delete generation rewrites a segment's liveness or a
+        merge retires its files.
+
+    Hits/misses/evictions and resident bytes feed ``envelope_report``.
+    """
+
+    def __init__(self, inner: Directory, cap_bytes: int = 8 << 20,
+                 suffixes=_CACHE_SUFFIXES):
+        super().__init__()
+        self.inner = inner
+        self.cap_bytes = int(cap_bytes)
+        self.suffixes = tuple(suffixes)
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
+        self.cache_rejected = 0   # blocks that failed crc at fill time
+        self._cache: dict[str, bytes] = {}
+        self._freq: dict[str, int] = {}
+        self._last: dict[str, int] = {}
+        self._tick = 0
+        self._resident = 0
+        self._cache_lock = threading.Lock()
+
+    @property
+    def cache_bytes(self) -> int:
+        return self._resident
+
+    def _cacheable(self, name: str) -> bool:
+        return name.endswith(self.suffixes)
+
+    def _verify(self, name: str, data: bytes) -> bool:
+        # lazy import: scrub/codec sit above this base module
+        from repro.storage.codec import CorruptSegment, unframe
+        from repro.storage.scrub import expected_kind
+        try:
+            unframe(data, expected_kind(name))
+        except (CorruptSegment, ValueError):
+            return False
+        return True
+
+    def _evict_to_cap(self) -> None:
+        # caller holds _cache_lock
+        while self._resident > self.cap_bytes and self._cache:
+            victim = min(self._cache,
+                         key=lambda n: (self._freq[n], self._last[n]))
+            self._resident -= len(self._cache.pop(victim))
+            self._freq.pop(victim, None)
+            self._last.pop(victim, None)
+            self.cache_evictions += 1
+
+    def _drop(self, name: str) -> None:
+        with self._cache_lock:
+            data = self._cache.pop(name, None)
+            if data is not None:
+                self._resident -= len(data)
+            self._freq.pop(name, None)
+            self._last.pop(name, None)
+
+    def invalidate_base(self, base: str) -> int:
+        """Drop every cached block of segment family ``base`` (matches
+        ``base.*`` and delete-generation descendants ``base_dN.*``);
+        returns how many blocks were dropped."""
+        n = 0
+        with self._cache_lock:
+            for name in list(self._cache):
+                stem = name.rsplit(".", 1)[0]
+                if stem == base or stem.startswith(base + "_"):
+                    self._resident -= len(self._cache.pop(name))
+                    self._freq.pop(name, None)
+                    self._last.pop(name, None)
+                    n += 1
+        return n
+
+    # -- Directory ops ------------------------------------------------------
+    def _read(self, name):
+        if not self._cacheable(name):
+            return self.inner.read_file(name)
+        with self._cache_lock:
+            self._tick += 1
+            tick = self._tick
+            data = self._cache.get(name)
+            if data is not None:
+                self.cache_hits += 1
+                self._freq[name] = self._freq.get(name, 0) + 1
+                self._last[name] = tick
+                return data
+            self.cache_misses += 1
+        data = self.inner.read_file(name)
+        if len(data) <= self.cap_bytes and self._verify(name, data):
+            with self._cache_lock:
+                if name not in self._cache:
+                    self._cache[name] = data
+                    self._resident += len(data)
+                self._freq[name] = self._freq.get(name, 0) + 1
+                self._last[name] = tick
+                self._evict_to_cap()
+        else:
+            with self._cache_lock:
+                self.cache_rejected += 1
+        return data
+
+    def _write(self, name, data):
+        self._drop(name)
+        self.inner.write_file(name, data)
+
+    def _list(self):
+        return self.inner._list()
+
+    def _delete(self, name):
+        self._drop(name)
+        self.inner.delete_file(name)
+
+    def _rename(self, src, dst):
+        self._drop(src)
+        self._drop(dst)
+        self.inner.rename(src, dst)
+
+    def _sync(self, names):
+        self.inner.sync(names)
+
+    def _size(self, name):
+        return self.inner.file_size(name)
+
+
+# ---------------------------------------------------------------------------
 # fault injection
 # ---------------------------------------------------------------------------
 

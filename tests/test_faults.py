@@ -416,6 +416,125 @@ def test_wal_replay_is_idempotent_across_recoveries():
 
 
 # ---------------------------------------------------------------------------
+# WAL rotation + recycling (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_wal_rotation_splits_oversized_adds_and_reassembles():
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram, rotate_bytes=400)
+    rng = np.random.default_rng(9)
+    toks = _tokens(rng, 6)                      # 6 x 64 x i32: must split
+    last = w.append(encode_wal_add(toks))
+    names = [n for n in ram.list_files() if n.startswith("wal_")]
+    assert len(names) == 6 and last == 5        # one 256B row per file
+    assert w.rotations == 5 and w.appended == 6
+    assert all(ram.file_size(n) <= 400 for n in names)
+    assert ram.syncs == 6                       # every part durable pre-ack
+    w.append(encode_wal_delete([3]))            # deletes never split
+    w.append(encode_wal_add(toks[:1]))          # single row fits whole
+    assert w.next_seq == 8
+    w2 = WriteAheadLog(ram, rotate_bytes=400)
+    got = list(w2.replay())
+    assert [(s, op) for s, op, _ in got] \
+        == [(5, "add"), (6, "delete"), (7, "add")]
+    assert (got[0][2] == toks).all()            # the group reassembled
+    assert (got[2][2] == toks[:1]).all()
+    assert w2.replayed == 3 and w2.skipped == 0
+
+
+@pytest.mark.parametrize("lost", ["head", "middle", "tail"])
+def test_wal_rotation_incomplete_group_dropped_whole(lost):
+    """A rotated group missing ANY part (the kill landed before the
+    group's batched sync, so the batch was never acked) is dropped
+    whole — a surviving tail run must never replay as a truncated
+    batch. Records outside the group still replay."""
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram, rotate_bytes=400)
+    rng = np.random.default_rng(10)
+    w.append(encode_wal_delete([1]))            # seq 0: intact neighbour
+    w.append(encode_wal_add(_tokens(rng, 6)))   # seqs 1..6: the group
+    w.append(encode_wal_delete([2]))            # seq 7: intact neighbour
+    victim = {"head": 1, "middle": 3, "tail": 6}[lost]
+    ram.delete_file(wal_name(victim))
+    w2 = WriteAheadLog(ram)
+    got = list(w2.replay())
+    assert [(s, op) for s, op, _ in got] == [(0, "delete"), (7, "delete")]
+    assert w2.skipped == 5                      # every surviving part
+    assert w2.next_seq == 8
+
+
+def test_wal_orphan_group_head_never_absorbs_next_group():
+    """A group head whose continuation was lost pre-sync must not
+    swallow the head of the NEXT (fully acked) group during replay."""
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram, rotate_bytes=400)
+    rng = np.random.default_rng(11)
+    w.append(encode_wal_add(_tokens(rng, 2)))   # seqs 0..1
+    torn = ram.read_file(wal_name(1))
+    ram.write_file(wal_name(1), torn[:len(torn) - 9])   # crash mid-part 1
+    w2 = WriteAheadLog(ram, rotate_bytes=400)   # recovery: next_seq = 2
+    assert w2.next_seq == 2
+    acked = _tokens(rng, 3)
+    w2.append(encode_wal_add(acked))            # seqs 2..4, fully synced
+    w3 = WriteAheadLog(ram)
+    got = list(w3.replay())
+    assert [(s, op) for s, op, _ in got] == [(4, "add")]
+    assert (got[0][2] == acked).all()           # exact, not merged with seq 0
+    assert w3.skipped == 2                      # the torn part + its head
+
+
+def test_wal_recycling_parks_reuses_and_reclaims():
+    ram = RAMDirectory()
+    w = WriteAheadLog(ram, recycle_keep=2)
+    for i in range(3):
+        w.append(encode_wal_delete([i]))
+    assert w.truncate_upto(2) == 3
+    assert w.recycled == 2                      # 2 parked ahead, 1 deleted
+    parked = sorted(n for n in ram.list_files() if n.startswith("wal_"))
+    assert parked == [wal_name(3), wal_name(4)]
+    assert w.append(encode_wal_delete([7])) == 3    # overwrites a park
+    assert w.recycle_reused == 1
+    # recovery: the live record replays; the still-stale park (its
+    # embedded seq disagrees with its name) is reclaimed, never replayed
+    w2 = WriteAheadLog(ram)
+    got = list(w2.replay())
+    assert [(s, op, int(b[0])) for s, op, b in got] == [(3, "delete", 7)]
+    assert w2.recycle_reclaimed == 1 and w2.skipped == 0
+    assert not ram.file_exists(wal_name(4))
+
+
+def test_wal_kill9_across_rotation_loses_nothing():
+    """The satellite's end-to-end claim: acked-but-unflushed ingest that
+    rotated across capped record files (some overwriting recycled parks)
+    survives a kill -9 exactly — same doc set, same ids."""
+    cfg = dataclasses.replace(SMOKE_CFG, flush_budget_mb=64,  # no autoflush
+                              wal_rotate_mb=0.001, wal_recycle=2)
+    rng = np.random.default_rng(12)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=cfg, target_dir=ram, wal=True)
+    ix.index_batch(_tokens(rng, 16))
+    ix.commit()                                 # truncate parks 2 files
+    assert ix._wal.recycled == 2
+    acked = _tokens(rng, 8)
+    ix.index_batch(acked)                       # rotates, reuses the parks
+    ix.delete([2, 17])
+    assert ix._wal.rotations >= 2 and ix._wal.recycle_reused == 2
+    rep = ix.envelope_report()
+    assert rep["wal_rotations"] == ix._wal.rotations
+    assert rep["wal_recycled"] == 2 and rep["wal_recycle_reused"] == 2
+    snapshot = dict(ram._files)                 # kill -9
+    ram2 = RAMDirectory()
+    ram2._files = snapshot
+    ix2 = DistributedIndexer(cfg=cfg, target_dir=ram2, wal=True)
+    s = ix2.refresh()
+    assert s.n_docs == 24 - 2                   # nothing acked was lost
+    final = ix2.finalize()
+    assert (final.doc_ids == np.setdiff1d(np.arange(24), [2, 17])).all()
+    ix2.close()
+    ix.close()
+
+
+# ---------------------------------------------------------------------------
 # quarantine + degraded serving
 # ---------------------------------------------------------------------------
 

@@ -325,6 +325,66 @@ def test_anti_entropy_detects_and_heals_bit_rot():
 
 
 # ---------------------------------------------------------------------------
+# latency-aware replica routing (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+class _SlowReplica:
+    """Duck-typed replica wrapper: same snapshot, slower serves."""
+
+    def __init__(self, inner, delay_s):
+        self._inner = inner
+        self._delay_s = delay_s
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def search_batched(self, q, k, theta0=None):
+        time.sleep(self._delay_s)
+        return self._inner.search_batched(q, k, theta0=theta0)
+
+
+def test_slow_replica_sheds_traffic_with_zero_failed_queries():
+    """EWMA routing: a replica that is merely SLOW (healthy, identical
+    content) sheds most traffic to its faster peer after the round-robin
+    warmup, while every answer stays bit-identical to the union oracle —
+    and periodic probe picks keep refreshing its latency estimate."""
+    ix, pub = _build_shard(0)
+    g = _replicas(ix, pub, n=2)
+    slow = _SlowReplica(g[0], 0.02)
+    fleet = FleetSearcher([[slow, g[1]]], probe_every=8)
+    oracle = _union_oracle([ix.target_dir])
+    q = _queries([0, 1], B=2, seed=3)
+    trials = 24
+    for _ in range(trials):
+        fv, _ = fleet.search_batched(q, 10)
+        ov, _ = oracle.search_batched(q, 10)
+        np.testing.assert_array_equal(np.asarray(fv), np.asarray(ov))
+    rep = fleet.report()
+    assert rep["lat_routed"] > 0
+    served = rep["served"]
+    assert served["s0r0"] + served["s0r1"] == trials
+    assert served["s0r0"] <= 4          # rr warmup + probes only
+    assert served["s0r1"] >= trials - 4
+    # the EWMA table ranks the replicas honestly
+    assert rep["latency_ms"]["s0r0"] > rep["latency_ms"]["s0r1"]
+    # slowness is not unhealth: no failover, no degraded serving
+    assert rep["failovers"] == 0 and rep["degraded_served"] == 0
+
+
+def test_latency_aware_off_restores_round_robin():
+    ix, pub = _build_shard(0)
+    g = _replicas(ix, pub, n=2)
+    slow = _SlowReplica(g[0], 0.005)
+    fleet = FleetSearcher([[slow, g[1]]], latency_aware=False)
+    q = _queries([0, 1], B=2, seed=4)
+    for _ in range(8):
+        fleet.search_batched(q, 10)
+    rep = fleet.report()
+    assert rep["lat_routed"] == 0
+    assert rep["served"]["s0r0"] == rep["served"]["s0r1"] == 4
+
+
+# ---------------------------------------------------------------------------
 # WAL group commit (satellite)
 # ---------------------------------------------------------------------------
 

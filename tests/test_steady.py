@@ -1,0 +1,341 @@
+"""Steady-state serving engine (ISSUE 9): continuous batching, the
+generation-keyed result cache, admission control, and the open-loop
+driver.
+
+The acceptance invariants:
+  * continuous batching (partial pow2-bucketed batches) returns results
+    BIT-identical to the wait-for-full parity oracle AND to the direct
+    searcher — occupancy never changes what a request gets back;
+  * a result-cache hit replays a result computed on an identical
+    snapshot: bit-identical to the uncached oracle at every generation
+    (hypothesis interleaving over index/delete/refresh/query), and no
+    stale hit survives a refresh swap;
+  * generations bump exactly when served content changes (never on a
+    no-op refresh; always on an add or delete generation);
+  * admission control sheds with the typed ``Overloaded`` — admitted
+    queries still get exact answers, rejected ones get a rejection,
+    never a wrong or partial result;
+  * the open-loop driver sustains its offered arrival process under
+    concurrent churn and reports honest percentiles.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_arch
+from repro.core.indexer import DistributedIndexer
+from repro.serving.query_scheduler import (Overloaded, QueryRequest,
+                                           QueryScheduler, _bucket)
+from repro.serving.steady import (LoadReport, ResultCache, make_churn,
+                                  run_open_loop)
+
+SMOKE_CFG = get_arch("lucene-envelope").smoke
+
+
+def _toks(rng, n=16):
+    return rng.integers(1, 4096, (n, 64)).astype(np.int32)
+
+
+def _queries(rng, n, q=3):
+    return [rng.choice(np.arange(1, 4096), q,
+                       replace=False).astype(np.int32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: pow2 buckets, parity with wait-for-full
+# ---------------------------------------------------------------------------
+
+def test_bucket_is_pow2_and_capped():
+    assert [_bucket(n, 8) for n in (1, 2, 3, 4, 5, 7, 8, 9)] \
+        == [1, 2, 4, 4, 8, 8, 8, 8]
+
+
+def test_continuous_batching_bit_identical_to_full_batch():
+    """The tentpole parity oracle: every request gets the same bits back
+    whether it was served alone in a 1-wide partial batch or packed into
+    a full one — and both equal the direct searcher."""
+    rng = np.random.default_rng(0)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 24))
+    s = ix.refresh()
+    queries = _queries(rng, 7)
+    full = QueryScheduler(searcher=s, slots=4, max_terms=3, k=5,
+                          full_batch=True)
+    cont = QueryScheduler(searcher=s, slots=4, max_terms=3, k=5,
+                          max_wait_ms=0.0)
+    fr = [full.submit(QueryRequest(rid=i, terms=q, k=5))
+          for i, q in enumerate(queries)]
+    cr = []
+    for i, q in enumerate(queries):
+        cr.append(cont.submit(QueryRequest(rid=i, terms=q, k=5)))
+        cont.maybe_step()            # max_wait 0: launches immediately
+    full.run_to_completion()
+    cont.run_to_completion()
+    assert cont.steps == 7 and cont.partial_steps == 7   # 1-wide buckets
+    assert full.steps == 2                               # 4 + 3
+    for a, b in zip(fr, cr):
+        assert a.done and b.done
+        np.testing.assert_array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores))
+        np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                      np.asarray(b.doc_ids))
+        v, i = s.search(a.terms, 5)
+        np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(i))
+    ix.close()
+
+
+def test_partial_launch_waits_for_max_wait_ms():
+    """The launch rule: a partial batch fires only once the oldest
+    waiter has aged past ``max_wait_ms``; ``full_batch`` never fires
+    partial (run_to_completion drains regardless)."""
+    rng = np.random.default_rng(1)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 8))
+    s = ix.refresh()
+    sched = QueryScheduler(searcher=s, slots=4, max_terms=3, k=5,
+                           max_wait_ms=50.0)
+    sched.submit(QueryRequest(rid=0, terms=_queries(rng, 1)[0], k=5),
+                 now=100.0)
+    assert not sched.ready(now=100.0 + 0.049)   # younger than max_wait
+    assert sched.ready(now=100.0 + 0.051)       # aged past it: launch
+    for i in range(1, 4):                        # fill to slots
+        sched.submit(QueryRequest(rid=i, terms=_queries(rng, 1)[0], k=5),
+                     now=100.0)
+    assert sched.ready(now=100.0)                # full batch: always
+    oracle = QueryScheduler(searcher=s, slots=4, max_terms=3, k=5,
+                            full_batch=True)
+    oracle.submit(QueryRequest(rid=9, terms=_queries(rng, 1)[0], k=5),
+                  now=100.0)
+    assert not oracle.ready(now=100.0 + 10.0)    # wait-for-full never fires
+    assert sched.maybe_step(now=100.0) and sched.partial_steps == 0
+    ix.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_control_sheds_typed_overloaded():
+    rng = np.random.default_rng(2)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 16))
+    s = ix.refresh()
+    sched = QueryScheduler(searcher=s, slots=4, max_terms=3, k=5,
+                           full_batch=True, admit_cap=2)
+    qs = _queries(rng, 4)
+    admitted = [sched.submit(QueryRequest(rid=i, terms=q, k=5))
+                for i, q in enumerate(qs[:2])]
+    for i, q in enumerate(qs[2:], start=2):
+        with pytest.raises(Overloaded):
+            sched.submit(QueryRequest(rid=i, terms=q, k=5))
+    assert sched.rejected == 2 and sched.queue_depth == 2
+    sched.run_to_completion()
+    for r in admitted:                # admitted answers stay exact
+        assert r.done
+        v, i = s.search(r.terms, 5)
+        np.testing.assert_array_equal(np.asarray(r.scores), np.asarray(v))
+    assert sched.served == 2          # shed requests were never served
+    ix.close()
+
+
+# ---------------------------------------------------------------------------
+# ResultCache: LRU-by-bytes mechanics
+# ---------------------------------------------------------------------------
+
+def _entry(tag, gen=1, k=5):
+    key = ((tag.encode() * 3, k), gen)
+    return key, (np.full(k, 1.5, np.float32), np.arange(k, dtype=np.int32))
+
+
+def test_result_cache_lru_bytes_and_counters():
+    # one entry: 20B scores + 20B ids + 3B key + 64B overhead = 107
+    cap = 3 * 107
+    c = ResultCache(cap_bytes=cap)
+    k1, v1 = _entry("a")
+    assert c.get(k1) is None and c.misses == 1
+    for tag in ("a", "b", "c"):
+        c.put(*_entry(tag))
+    assert len(c) == 3 and c.bytes == cap
+    got = c.get(k1)                   # refresh k1's recency
+    assert c.hits == 1
+    np.testing.assert_array_equal(got[0], v1[0])
+    c.put(*_entry("d"))               # over cap: evicts LRU ("b")
+    assert c.evictions == 1 and len(c) == 3 and c.bytes <= cap
+    assert c.get(_entry("b")[0]) is None
+    assert c.get(k1) is not None and c.get(_entry("d")[0]) is not None
+    c.put(k1, v1)                     # replace: no byte double-count
+    assert c.bytes == cap and len(c) == 3
+    # an entry larger than the whole cap is skipped, not stored
+    c.put(_entry("z")[0], (np.zeros(4096, np.float32),
+                           np.zeros(4096, np.int32)))
+    assert len(c) == 3
+    rep = c.report()
+    assert rep["entries"] == 3 and rep["bytes"] == cap
+    assert rep["hits"] == c.hits and rep["evictions"] == 1
+    c.clear()
+    assert len(c) == 0 and c.bytes == 0
+
+
+def test_result_cache_generations_are_distinct_keys():
+    c = ResultCache()
+    key_g1, val = _entry("q", gen=1)
+    key_g2, _ = _entry("q", gen=2)
+    c.put(key_g1, val)
+    assert c.get(key_g2) is None      # a swap strands old keys
+    assert c.get(key_g1) is not None
+
+
+# ---------------------------------------------------------------------------
+# generations: bump exactly on content change
+# ---------------------------------------------------------------------------
+
+def test_generation_bumps_exactly_on_content_change():
+    rng = np.random.default_rng(3)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 8))
+    g1 = ix.refresh().generation
+    assert g1 > 0
+    assert ix.refresh().generation == g1       # no-op refresh: same key
+    ix.index_batch(_toks(rng, 8))
+    g2 = ix.refresh().generation
+    assert g2 != g1                            # add: new segment set
+    ix.delete([0])
+    g3 = ix.refresh().generation
+    assert g3 not in (g1, g2)                  # delete generation bumps
+    # an imposed-stats wrap changes scores: it must be uncacheable
+    s = ix.refresh()
+    from repro.replication.fleet import CollectionStats
+    assert s.with_stats(
+        CollectionStats.from_searcher(s)).generation == 0
+    ix.close()
+
+
+def test_no_stale_hit_survives_a_swap():
+    rng = np.random.default_rng(4)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    toks = _toks(rng, 16)
+    ix.index_batch(toks)
+    cache = ResultCache()
+    sched = QueryScheduler(searcher=ix.refresh(), slots=4, max_terms=3,
+                           k=5, cache=cache)
+    q = toks[0, :3].astype(np.int32)  # doc 0's own terms: a hit exists
+    r1 = sched.submit(QueryRequest(rid=0, terms=q, k=5))
+    sched.run_to_completion()
+    r2 = sched.submit(QueryRequest(rid=1, terms=q, k=5))
+    assert r2.cached and r2.done and sched.served_cached == 1
+    np.testing.assert_array_equal(np.asarray(r1.scores),
+                                  np.asarray(r2.scores))
+    top = int(np.asarray(r1.doc_ids)[0])
+    assert float(np.asarray(r1.scores)[0]) > 0
+    ix.delete([top])                  # kill the top hit
+    sched.swap_searcher(ix.refresh())
+    r3 = sched.submit(QueryRequest(rid=2, terms=q, k=5))
+    assert not r3.cached              # new generation: the old key is dead
+    sched.run_to_completion()
+    hits = np.asarray(r3.doc_ids)[np.asarray(r3.scores) > 0]
+    assert top not in set(hits.tolist())
+    v, i = sched.searcher.search(q, 5)
+    np.testing.assert_array_equal(np.asarray(r3.scores), np.asarray(v))
+    ix.close()
+
+
+# ---------------------------------------------------------------------------
+# the interleaving oracle (satellite d)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6),
+       st.lists(st.sampled_from(["index", "delete", "refresh", "query"]),
+                min_size=6, max_size=12))
+def test_cached_results_bit_identical_under_interleaving(seed, ops):
+    """Any interleaving of index/delete/refresh/query: every served
+    result — cached or computed — is bit-identical to the uncached
+    searcher over the snapshot being served, at every generation."""
+    rng = np.random.default_rng(seed)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 8))
+    cache = ResultCache()
+    sched = QueryScheduler(searcher=ix.refresh(), slots=4, max_terms=3,
+                           k=5, cache=cache)
+    rid = 0
+    try:
+        for op in ops + ["query"]:
+            if op == "index":
+                ix.index_batch(_toks(rng, 4))
+            elif op == "delete":
+                if ix._next_doc:
+                    ix.delete([int(rng.integers(0, ix._next_doc))])
+            elif op == "refresh":
+                sched.swap_searcher(ix.refresh())
+            else:
+                q = _queries(rng, 1)[0]
+                pair = []
+                for _ in range(2):    # the second submit must hit
+                    r = QueryRequest(rid=rid, terms=q, k=5)
+                    rid += 1
+                    sched.submit(r)
+                    sched.run_to_completion()
+                    assert r.done
+                    pair.append(r)
+                assert pair[1].cached
+                v, i = sched.searcher.search(q, 5)
+                for r in pair:        # cached == computed == oracle
+                    np.testing.assert_array_equal(np.asarray(r.scores),
+                                                  np.asarray(v))
+                    np.testing.assert_array_equal(np.asarray(r.doc_ids),
+                                                  np.asarray(i))
+    finally:
+        ix.close()
+    assert cache.hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# open-loop driver
+# ---------------------------------------------------------------------------
+
+def test_open_loop_driver_sustains_load_under_churn():
+    rng = np.random.default_rng(5)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 16))
+    cache = ResultCache()
+    sched = QueryScheduler(searcher=ix.refresh(), slots=4, max_terms=3,
+                           k=5, cache=cache, max_wait_ms=1.0)
+    pool = _queries(rng, 6)
+    for b in (1, 2, 4):               # warm the compiled bucket shapes
+        sched.searcher.search_batched(np.full((b, 3), -1, np.int32), 5)
+    rep = run_open_loop(sched, pool, qps=120, duration_s=0.4, seed=7,
+                        churn=make_churn(ix, sched, rng))
+    assert isinstance(rep, LoadReport)
+    assert rep.offered == 48          # round(qps * duration), seeded
+    assert rep.completed == rep.offered and rep.rejected == 0
+    assert all(r.done for r in rep.requests)
+    assert 0 <= rep.p50_ms <= rep.p99_ms <= rep.p999_ms
+    assert rep.qps_achieved > 0 and rep.wall_s > 0
+    assert rep.cached == sched.served_cached
+    assert rep.max_queue_depth >= 0 and rep.mean_queue_depth >= 0
+    row = rep.row()
+    assert row["offered"] == 48 and "requests" not in row
+    ix.close()
+
+
+def test_open_loop_counts_shed_arrivals_without_measuring_them():
+    """Past saturation with a tiny admission cap the driver finishes,
+    every arrival is either completed or typed-rejected, and admitted
+    answers stay exact."""
+    rng = np.random.default_rng(6)
+    ix = DistributedIndexer(cfg=SMOKE_CFG)
+    ix.index_batch(_toks(rng, 16))
+    sched = QueryScheduler(searcher=ix.refresh(), slots=2, max_terms=3,
+                           k=5, max_wait_ms=0.5, admit_cap=2)
+    pool = _queries(rng, 4)
+    for b in (1, 2):
+        sched.searcher.search_batched(np.full((b, 3), -1, np.int32), 5)
+    rep = run_open_loop(sched, pool, qps=400, duration_s=0.15, seed=9)
+    assert rep.completed + rep.rejected == rep.offered
+    assert rep.rejected == sched.rejected
+    s = sched.searcher
+    for r in rep.requests[:5]:
+        v, _ = s.search(r.terms, 5)
+        np.testing.assert_array_equal(np.asarray(r.scores), np.asarray(v))
+    ix.close()

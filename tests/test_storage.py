@@ -12,6 +12,8 @@ The acceptance invariants from the storage subsystem's contract:
   * isolated source/target media beat the shared-media pair in the
     *measured* envelope (the paper's headline result, in silico).
 """
+import dataclasses
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -21,10 +23,10 @@ from repro.core.indexer import DistributedIndexer
 from repro.core.searcher import ReaderCache
 from repro.data.corpus import (TINY, SyntheticCorpus, iter_spooled,
                                spool_corpus)
-from repro.storage import (MEDIA_PROFILES, CorruptSegment, DeviceThrottle,
-                           FSDirectory, MediaProfile, RAMDirectory,
-                           SegmentStore, ThrottledDirectory, open_latest,
-                           open_searcher)
+from repro.storage import (MEDIA_PROFILES, CachingDirectory, CorruptSegment,
+                           DeviceThrottle, FSDirectory, MediaProfile,
+                           RAMDirectory, SegmentStore, ThrottledDirectory,
+                           open_latest, open_searcher)
 from repro.storage import codec as codec_mod
 from repro.storage.codec import SEGMENT_SUFFIXES
 from repro.storage.commit import (list_commits, manifest_name, read_commit,
@@ -171,7 +173,7 @@ def _roundtrip(seg, codec):
 
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 100000), st.integers(0, 4),
-       st.sampled_from(codec_mod.CODECS))
+       st.sampled_from(codec_mod.CODECS + (codec_mod.AUTO,)))
 def test_codec_roundtrip_bit_identical(seed, kind, codec):
     """Randomized segments (empty, zero-postings, one-term,
     single-posting-term, generic) encode -> decode bit-identically."""
@@ -184,7 +186,7 @@ def test_codec_roundtrip_bit_identical(seed, kind, codec):
     assert_bit_identical(seg, _roundtrip(seg, codec))
 
 
-@pytest.mark.parametrize("codec", codec_mod.CODECS)
+@pytest.mark.parametrize("codec", codec_mod.CODECS + (codec_mod.AUTO,))
 def test_codec_roundtrip_max_doc_id(codec):
     """Doc ids at the top of the uint32 range survive exactly (the first
     posting of a term is stored absolute, so it is the largest value any
@@ -202,9 +204,12 @@ def test_codec_rejects_doc_ids_beyond_uint32():
         codec_mod.encode_segment(seg, "pfor")
     # the raw codec stores int64 and has no such ceiling
     assert_bit_identical(seg, _roundtrip(seg, "raw"))
+    # auto degrades stream-by-stream: when every compressed candidate
+    # refuses a stream's value domain it falls back to raw, losslessly
+    assert_bit_identical(seg, _roundtrip(seg, codec_mod.AUTO))
 
 
-@pytest.mark.parametrize("codec", ["pfor", "adaptive", "pef"])
+@pytest.mark.parametrize("codec", ["pfor", "adaptive", "pef", "auto"])
 @pytest.mark.parametrize("suffix", SEGMENT_SUFFIXES)
 @pytest.mark.parametrize("damage", ["flip", "truncate", "missing"])
 def test_corrupt_segment_files_fail_cleanly(directory, codec, suffix,
@@ -261,7 +266,8 @@ def _pattern_stream(rng, pattern):
 
 
 @settings(max_examples=50, deadline=None)
-@given(st.integers(0, 10 ** 6), st.sampled_from(codec_mod.CODECS),
+@given(st.integers(0, 10 ** 6),
+       st.sampled_from(codec_mod.CODECS + (codec_mod.AUTO,)),
        st.sampled_from(["empty", "single", "dense", "sparse", "max"]))
 def test_stream_codecs_roundtrip_and_match_naive_oracle(seed, codec,
                                                         pattern):
@@ -281,7 +287,49 @@ def test_stream_codecs_roundtrip_and_match_naive_oracle(seed, codec,
     assert np.array_equal(naive, arr)
 
 
-@pytest.mark.parametrize("codec", codec_mod.CODECS)
+def test_codec_auto_picks_smallest_codec_per_stream():
+    """codec="auto": every stream carries whichever compressed codec
+    came out smallest FOR ITS VALUES, recorded in the stream's leading
+    id byte (``stream_codec_name``), and decodes bit-identically."""
+    rng = np.random.default_rng(7)
+    for pattern in ("empty", "single", "dense", "sparse", "max"):
+        arr = _pattern_stream(rng, pattern)
+        buf = codec_mod._enc_stream(arr, codec_mod.AUTO)
+        sizes = {}
+        for c in codec_mod._AUTO_CANDIDATES:
+            try:
+                sizes[c] = len(codec_mod._enc_stream(arr, c))
+            except ValueError:
+                pass
+        assert sizes and len(buf) == min(sizes.values()), pattern
+        chosen = codec_mod.stream_codec_name(buf)
+        assert sizes[chosen] == len(buf)
+        got, off = codec_mod._dec_stream(buf, 0)
+        assert off == len(buf) and np.array_equal(got, arr)
+    # a stream no compressed candidate can hold falls back to raw
+    # (values past uint32 refuse pfor/adaptive; prefix sums past the
+    # int64 headroom refuse pef)
+    big = np.array([1 << 61, 1 << 61], np.int64)
+    buf = codec_mod._enc_stream(big, codec_mod.AUTO)
+    assert codec_mod.stream_codec_name(buf) == "raw"
+    assert np.array_equal(codec_mod._dec_stream(buf, 0)[0], big)
+
+
+def test_codec_auto_never_larger_than_any_single_codec():
+    """The whole-segment consequence of per-stream argmin: an auto
+    segment is at most as large as the best single compressed codec."""
+    rng = np.random.default_rng(8)
+    seg = make_segment(rng, 0, n_docs=64, vocab=400, max_terms=200,
+                       max_tf=4)
+    sizes = {c: sum(len(b) for b in
+                    codec_mod.encode_segment(seg, c).values())
+             for c in ("pfor", "adaptive", "pef", codec_mod.AUTO)}
+    assert sizes[codec_mod.AUTO] <= min(
+        sizes[c] for c in ("pfor", "adaptive", "pef")), sizes
+    assert_bit_identical(seg, _roundtrip(seg, codec_mod.AUTO))
+
+
+@pytest.mark.parametrize("codec", codec_mod.CODECS + (codec_mod.AUTO,))
 def test_reorder_permutation_roundtrips_and_validates(codec):
     """The BP doc-id permutation rides the ``.doc`` file: it must survive
     encode -> decode bit-identically under every codec, absent stays
@@ -813,3 +861,108 @@ def test_calibrate_accepts_measured_runs():
     assert 1.5 <= p.alpha <= 4.0   # but stayed inside physical bounds
     errs = [abs(v["err"]) for v in table.values()]
     assert float(np.mean(errs)) < 0.2  # Table 1 still well fit
+
+
+# ---------------------------------------------------------------------------
+# CachingDirectory: the hot-term postings cache (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _framed(name, payload):
+    from repro.storage.scrub import expected_kind
+    return codec_mod.frame(expected_kind(name), payload)
+
+
+def test_caching_directory_hits_misses_and_invalidation():
+    ram = RAMDirectory()
+    for name in ("s0.pst", "s0.dict", "s0_d1.doc", "s01.pst"):
+        ram.write_file(name, _framed(name, b"x" * 100))
+    cd = CachingDirectory(ram, cap_bytes=1 << 20)
+    a = cd.read_file("s0.pst")
+    assert cd.cache_misses == 1 and cd.cache_hits == 0
+    before = ram.bytes_read
+    assert cd.read_file("s0.pst") == a        # hit: inner never touched
+    assert cd.cache_hits == 1 and ram.bytes_read == before
+    assert cd.cache_bytes > 0
+    # non-postings names pass through uncached
+    ram.write_file("segments_1", b"manifest")
+    cd.read_file("segments_1")
+    cd.read_file("segments_1")
+    assert cd.cache_misses == 1               # unchanged
+    # mutation through the cache drops the entry
+    cd.read_file("s0.dict")
+    cd.write_file("s0.dict", _framed("s0.dict", b"y" * 50))
+    assert cd.read_file("s0.dict") == _framed("s0.dict", b"y" * 50)
+    assert cd.cache_misses == 3               # re-read after the write
+    # invalidate_base drops the family (base.* and base_dN.*) only
+    cd.read_file("s0_d1.doc")
+    cd.read_file("s01.pst")
+    assert cd.invalidate_base("s0") == 3      # s0.pst s0.dict s0_d1.doc
+    h = cd.cache_hits
+    cd.read_file("s01.pst")                   # the neighbour survived
+    assert cd.cache_hits == h + 1
+    cd.read_file("s0.pst")                    # the family did not
+    assert cd.cache_misses == 6
+    # rename and delete invalidate too
+    cd.rename("s01.pst", "s02.pst")
+    cd.read_file("s02.pst")
+    assert cd.cache_misses == 7
+    cd.delete_file("s02.pst")
+    assert not cd.file_exists("s02.pst")
+
+
+def test_caching_directory_lfu_eviction_and_crc_gate():
+    ram = RAMDirectory()
+    for n in ("a.pst", "b.pst", "c.pst"):
+        ram.write_file(n, _framed(n, b"x" * 100))
+    size = ram.file_size("a.pst")
+    cd = CachingDirectory(ram, cap_bytes=2 * size)
+    cd.read_file("a.pst")
+    cd.read_file("a.pst")                     # freq 2: pinned
+    cd.read_file("b.pst")                     # freq 1
+    cd.read_file("c.pst")                     # over cap: evicts b (LFU)
+    assert cd.cache_evictions == 1 and cd.cache_bytes == 2 * size
+    h, m = cd.cache_hits, cd.cache_misses
+    cd.read_file("a.pst")
+    assert cd.cache_hits == h + 1             # the hot block stayed
+    cd.read_file("b.pst")
+    assert cd.cache_misses == m + 1           # the evicted one re-reads
+    # a block that fails its frame crc is served through, never retained
+    rot = bytearray(_framed("rot.doc", b"z" * 40))
+    rot[-1] ^= 0x01
+    ram.write_file("rot.doc", bytes(rot))
+    assert cd.read_file("rot.doc") == bytes(rot)
+    assert cd.read_file("rot.doc") == bytes(rot)
+    assert cd.cache_rejected == 2             # both reads refused to fill
+    # blocks larger than the whole cap are never cached either
+    ram.write_file("big.pst", _framed("big.pst", b"y" * (4 * size)))
+    cd.read_file("big.pst")
+    assert cd.cache_rejected == 3
+
+
+def test_indexer_postings_cache_wraps_target_and_reports():
+    """cfg.postings_cache_mb > 0 wraps the indexer's target directory:
+    segment-(re)open traffic hits the cache instead of media, counters
+    surface in envelope_report, and the scrubber still reads BELOW the
+    cache so cached blocks cannot mask on-media rot."""
+    cfg = dataclasses.replace(SMOKE_CFG, postings_cache_mb=4.0)
+    ram = RAMDirectory()
+    ix = DistributedIndexer(cfg=cfg, target_dir=ram)
+    assert isinstance(ix.target_dir, CachingDirectory)
+    assert ix.target_dir.inner is ram
+    rng = np.random.default_rng(9)
+    ix.index_batch(rng.integers(1, 4096, (16, 64)).astype(np.int32))
+    ix.commit()
+    open_latest(ix.target_dir)                # cold reopen: fills
+    assert ix.target_dir.cache_misses > 0
+    cold = ram.bytes_read
+    h0 = ix.target_dir.cache_hits
+    gen, segs = open_latest(ix.target_dir)    # warm reopen: served from RAM
+    assert gen == 1 and len(segs) == 1
+    assert ix.target_dir.cache_hits > h0
+    assert ram.bytes_read - cold < cold       # only uncached names re-read
+    rep = ix.envelope_report()
+    for key in ("postings_cache_hits", "postings_cache_misses",
+                "postings_cache_evictions", "postings_cache_bytes"):
+        assert key in rep
+    assert rep["postings_cache_hits"] == ix.target_dir.cache_hits
+    ix.close()
