@@ -591,6 +591,72 @@ def search_pruned(smoke=False):
     # same serving path, one more lever: BP doc-id reassignment at merge
     # time cuts blocks_scored at equal k and bit-identical scores
     _bp_reorder_contrast("search_pruned", smoke)
+    # and the tentpole A/B: BMW doc-range-overlap bounds vs term-level
+    # MaxScore on a balanced-disjunction workload
+    _bmw_contrast(smoke)
+
+
+def _bmw_contrast(smoke=False):
+    """True block-max WAND vs term-level MaxScore, A/B on the SAME
+    balanced-disjunction workload over a segment whose terms live in
+    (mostly) private doc ranges — the clustered regime a BP-reordered
+    crawl converges to. Balanced multi-term disjunctions of comparable
+    weight are exactly where the term-level "others" sum cannot
+    eliminate anything (every term's best block is assumed to help
+    everywhere) while the doc-range-overlap bound drops cross-term help
+    between blocks whose doc extents never meet. Gates: top-k
+    bit-identical (values AND ids), blocks_scored strictly lower under
+    BMW. Emits the ``search_pruned.bmw.*`` A/B rows."""
+    from repro.core.searcher import ReaderCache
+    from repro.core.segments import Segment
+
+    rng = np.random.default_rng(11)
+    n_big, n_small, span = 16, 8, (2000 if smoke else 4000)
+    n_terms = n_big + n_small
+    N = n_terms * span
+    doc_len = rng.integers(5, 30, N).astype(np.int64)
+    docs, tf, term_start = [], [], [0]
+    for t in range(n_terms):
+        m = int(rng.integers(20, 100)) if t >= n_big else span // 2
+        ds = t * span + np.sort(rng.choice(span, size=m, replace=False))
+        docs.extend(ds.tolist())
+        tf.extend(rng.integers(1, 8, m).tolist())
+        term_start.append(len(docs))
+    tf = np.asarray(tf, np.int64)
+    pos_start = np.concatenate([[0], np.cumsum(tf)])
+    seg = Segment(terms=np.arange(n_terms, dtype=np.int64),
+                  term_start=np.asarray(term_start, np.int64),
+                  docs=np.asarray(docs, np.int64), tf=tf,
+                  positions=np.concatenate([np.arange(c) for c in tf]),
+                  pos_start=pos_start,
+                  doc_ids=np.arange(N, dtype=np.int64), doc_len=doc_len)
+    # balanced disjunctions: 3 heavy terms + 1 single-block term each
+    B = 8
+    q = np.stack([np.concatenate([rng.choice(n_big, 3, replace=False),
+                                  [n_big + rng.integers(0, n_small)]])
+                  for _ in range(B)]).astype(np.int32)
+
+    def serve(bmw, midgrid):
+        s = ReaderCache(bmw=bmw, midgrid=midgrid).refresh([seg])
+        v, i = s.search_batched(q, 10)
+        return np.asarray(v), np.asarray(i), s.prune_stats
+
+    v_b, i_b, st_b = serve(True, True)
+    v_m, i_m, st_m = serve(False, False)
+    assert np.array_equal(v_b, v_m) and np.array_equal(i_b, i_m), \
+        "BMW top-k diverged from the MaxScore baseline"
+    assert st_b.blocks_scored < st_m.blocks_scored, \
+        (f"BMW must score strictly fewer blocks than MaxScore "
+         f"({st_b.blocks_scored} >= {st_m.blocks_scored})")
+    cut = 1.0 - st_b.blocks_scored / st_m.blocks_scored
+    assert cut >= 0.30, \
+        f"BMW block cut fell below the 30% envelope target ({cut:.2f})"
+    emit("search_pruned.bmw.blocks_scored", st_b.blocks_scored,
+         f"maxscore={st_m.blocks_scored} cut={cut:.2f} "
+         f"survived={st_b.blocks_survived}/{st_m.blocks_survived} "
+         f"terms_eliminated={st_b.terms_eliminated} "
+         f"midgrid_skipped={st_b.blocks_skipped_midgrid} "
+         f"bit_identical=True")
 
 
 def _bp_reorder_contrast(prefix, smoke=False):
@@ -702,6 +768,28 @@ def compression(smoke=False):
          doc_bytes["pef"] / doc_bytes["raw"],
          f"pfor={doc_bytes['pfor']/doc_bytes['raw']:.3f} "
          f"adaptive={doc_bytes['adaptive']/doc_bytes['raw']:.3f}", ".3f")
+
+    # --- PEF stream throughput (the vectorized chunk decode) ---------
+    # isolated on the doc-id-gap stream so codec dispatch / segment
+    # framing don't dilute the number; best-of-3 wall clocks
+    enc_pef = sc._enc_stream(doc_delta, "pef")
+    mb = doc_delta.size * 8 / 1e6
+
+    def _clock(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    t_enc = min(_clock(lambda: sc._enc_stream(doc_delta, "pef"))
+                for _ in range(3))
+    t_dec = min(_clock(lambda: sc._dec_stream(enc_pef, 0))
+                for _ in range(3))
+    out, _ = sc._dec_stream(enc_pef, 0)
+    assert np.array_equal(out, doc_delta), \
+        "pef stream decode diverged from its input"
+    emit("compression.pef.stream_dec_mb_s", mb / t_dec,
+         f"enc={mb/t_enc:.0f}MB/s n={doc_delta.size} "
+         f"bytes={len(enc_pef)}", ".0f")
 
     # --- BP doc-id reassignment on a clustered corpus ----------------
     _bp_reorder_contrast("compression", smoke)
@@ -1137,6 +1225,33 @@ def serve_steady(smoke=False):
     emit("serve_steady.admission.shed_rate",
          shed.rejected / shed.offered,
          f"offered_qps={storm_qps} completed={shed.completed}", ".3f")
+
+    # --- open-loop ramp: locate the saturation knee -------------------
+    # same pinned-service-time searcher (4 slots x 4 ms/batch plus the
+    # real search -> a hard throughput ceiling), offered rate doubling
+    # each step. Below the knee, achieved throughput scales with offered
+    # load and p99 is set by service time; past it the open-loop queue
+    # integrates, throughput plateaus, and p99 is set by the window
+    # length instead. The knee is the step where achieved QPS peaks.
+    ramp_steps = (150, 300, 600, 1200, 2400)
+    ramp_s = 0.12 if smoke else 0.25
+    sweep = []
+    for target in ramp_steps:
+        sched = QueryScheduler(searcher=slow, slots=4,
+                               max_terms=max_terms, k=k, max_wait_ms=2.0)
+        rep = run_open_loop(sched, pool, qps=target, duration_s=ramp_s,
+                            seed=53)
+        sweep.append((target, rep.qps_achieved, rep.p99_ms))
+    ach = np.array([a for _, a, _ in sweep])
+    best = int(ach.argmax())
+    assert best > 0 and ach[best] > 1.5 * ach[0], \
+        f"throughput never scaled with offered load: {sweep}"
+    assert best < len(ramp_steps) - 1, \
+        f"ramp never crossed the saturation knee: {sweep}"
+    emit("serve_steady.ramp.saturation_qps", ach[best],
+         f"knee_offered={ramp_steps[best]} sweep="
+         + " ".join(f"{t}:{a:.0f}qps/{p:.1f}ms" for t, a, p in sweep),
+         ".0f")
     ix.close()
 
 

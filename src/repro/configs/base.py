@@ -241,6 +241,10 @@ class EnvelopeConfig:
     # layout: scores and results are bit-identical, but blocks become
     # impact-homogeneous so block-max pruning skips more of them
     reorder_on_merge: bool = False
+    # the same BP reassignment over each fresh FLUSH segment: NRT-visible
+    # segments get impact-homogeneous blocks before any merge touches
+    # them, at flush-latency cost (the bisection runs inline in _flush)
+    reorder_on_flush: bool = False
     # "raw": 3x int32 per entry over the wire; "packed2": (local_doc|pos,
     # term) = 2 words, doc rebased from the source-device row after the
     # all_to_all (EXPERIMENTS.md §Perf — the paper's compression insight

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,8 @@ from repro.distributed.compat import shard_map
 
 from repro.core import envelope as env
 from repro.core.invert import invert_shard
-from repro.core.merge import ConcurrentMergeScheduler, MergeDriver
+from repro.core.merge import (ConcurrentMergeScheduler, MergeDriver,
+                              reassign_doc_ids)
 from repro.core.searcher import IndexSearcher, ReaderCache
 from repro.core.segments import Segment, segment_from_run
 from repro.core.shuffle import invert_and_shuffle
@@ -489,6 +490,14 @@ class DistributedIndexer:
         run_np = {k: np.asarray(getattr(run, k)) for k in run._fields}
         seg = segment_from_run(run_np, np.arange(base, base + D),
                                run_np["doc_len"])
+        if getattr(self.cfg, "reorder_on_flush", False):
+            # BP doc-id reassignment at flush time: the freshest (and most
+            # queried, under NRT churn) segments get impact-homogeneous
+            # blocks too, not just merge outputs. Scores stay bit-identical
+            # (the permutation only relabels local slots).
+            perm = reassign_doc_ids(seg)
+            if perm is not None:
+                seg = replace(seg, reorder=perm)
         self.merger.add_flush(seg)
         # Lucene's BufferedUpdates contract: deletes land WITH the flush
         # (after it, so deletes targeting docs in this very buffer hit
@@ -694,12 +703,16 @@ class DistributedIndexer:
         if ps is None:
             from repro.core.query import PruneStats
             ps = PruneStats()
+        from repro.core.searcher import evaluator_cache_hits
         report.update({
             "blocks_candidate": ps.blocks_candidate,
             "blocks_survived": ps.blocks_survived,
             "blocks_scored": ps.blocks_scored,
             "segments_skipped": ps.segments_skipped,
             "prune_skip_rate": ps.skip_rate,
+            "terms_eliminated": ps.terms_eliminated,
+            "blocks_skipped_midgrid": ps.blocks_skipped_midgrid,
+            "evaluator_cache_hits": evaluator_cache_hits(),
         })
         # fault-tolerance surface: is this index serving with holes, and
         # what has the hardened IO path absorbed so far

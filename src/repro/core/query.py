@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bm25_blockmax.ops import bm25_blocks, bm25_blocks_compact
+from repro.kernels.bm25_blockmax.ops import (bm25_blocks, bm25_blocks_compact,
+                                             bm25_blocks_midgrid)
 from repro.kernels.postings_pack import ops as pack_ops
 
 BLOCK = 128
@@ -64,6 +65,14 @@ PHASE1_BLOCKS = 8
 # never below this floor, so each (k, bucket) pair compiles at most once
 # and the number of distinct buckets is log2-bounded.
 MIN_BUCKET = 8
+# midgrid theta tightening runs the skip kernel with a SHORT grid step so
+# the running k-th-best carry gets a chance to bite within one survivor
+# bucket (with the serving default of 128 rows/step most buckets are a
+# single step and the carry never feeds back).
+MIDGRID_BLOCK_ROWS = 8
+# the in-kernel k-th-best fold unrolls k-1 max/mask rounds per step;
+# beyond this k the unroll cost outweighs the skipped blocks.
+MIDGRID_MAX_K = 32
 
 
 @dataclass
@@ -92,6 +101,14 @@ class BlockMaxIndex:
     # indexes built before this field existed (bounds fall back to dl=0).
     min_dl: jnp.ndarray = None    # (NB,)
     avgdl: float = 1.0            # segment-local mean live doc length
+    # per-block doc-id EXTENT: the last (largest) local doc id the block
+    # holds. Together with ``first_doc`` it gives each block's doc-id
+    # range [first, last] — within a term, blocks are doc-sorted with
+    # disjoint ranges, which is what lets the BMW overlap bound replace
+    # the global per-term "others" sum with the sum over blocks whose
+    # ranges actually intersect (see ``pruned_eval``). None on indexes
+    # built before this field existed (bounds fall back to term-level).
+    last_doc: jnp.ndarray = None  # (NB,)
     # COMPACT storage layout (fused decompress-and-score): instead of the
     # fixed-stride (NB, 32, 4) buffers above, keep only the live bit-plane
     # rows — the exact bytes the storage codec writes — plus per-block row
@@ -125,6 +142,14 @@ class PruneStats:
     ``segments_skipped``  segments eliminated wholesale because their
                           best possible score could not beat the shared
                           theta (cross-segment threshold sharing).
+    ``terms_eliminated``  per-(query, segment) non-essential terms whose
+                          cumulative best contribution could not reach
+                          theta — dropped from candidate generation, only
+                          probed for overlap bounds (BMW).
+    ``blocks_skipped_midgrid``  compacted survivor blocks zeroed by the
+                          kernel's in-grid theta tightening: their stored
+                          full-score UB fell below the running k-th-best
+                          lower bound folded from earlier grid steps.
     """
 
     queries: int = 0
@@ -134,11 +159,14 @@ class PruneStats:
     blocks_candidate: int = 0
     blocks_survived: int = 0
     blocks_scored: int = 0
+    terms_eliminated: int = 0
+    blocks_skipped_midgrid: int = 0
 
     def add(self, other: "PruneStats") -> None:
         for f in ("queries", "batches", "segments_visited",
                   "segments_skipped", "blocks_candidate", "blocks_survived",
-                  "blocks_scored"):
+                  "blocks_scored", "terms_eliminated",
+                  "blocks_skipped_midgrid"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
 
     def snapshot(self) -> "PruneStats":
@@ -355,8 +383,13 @@ def prune_candidates(index: BlockMaxIndex, q_terms, idf_q=None,
     scalar) supplies the mean doc length matching the evaluation's
     doc_norm — required for the tight impact bounds; None falls back to
     the safe dl=0 floor (see ``block_upper_bounds``). Returns
-    ``(ub, in_term, bidx, idf_pb)``, each shaped (Q, MB) — the inputs of
-    the host-side MaxScore test and survivor compaction."""
+    ``(ub, in_term, bidx, idf_pb, bfirst, blast)``, each shaped (Q, MB) —
+    the inputs of the host-side BMW overlap-bound test and survivor
+    compaction. ``bfirst``/``blast`` are the candidate blocks' doc-id
+    extents (garbage on pad entries — the host masks by ``in_term``); an
+    index without ``last_doc`` reports the safe full-range extent
+    [first, n_docs-1] instead, degrading the overlap bound toward the
+    term-level one without ever under-bounding."""
     q_terms = q_terms.astype(jnp.int32)
     rows, found, bidx, in_term = _gather_term_blocks(index, q_terms,
                                                      max_blocks)
@@ -365,7 +398,11 @@ def prune_candidates(index: BlockMaxIndex, q_terms, idf_q=None,
     idf_q = jnp.where(found, idf_q, 0.0)
     ub = block_upper_bounds(index, bidx, in_term, idf_q, avgdl)
     idf_pb = jnp.broadcast_to(idf_q[:, None], bidx.shape)
-    return ub, in_term, bidx, idf_pb
+    bfirst = index.first_doc[bidx].astype(jnp.int32)
+    blast = (jnp.full(bidx.shape, index.n_docs - 1, jnp.int32)
+             if index.last_doc is None
+             else index.last_doc[bidx].astype(jnp.int32))
+    return ub, in_term, bidx, idf_pb, bfirst, blast
 
 
 def score_survivors(index: BlockMaxIndex, cb_ids, cb_idf, cb_act, cb_row,
@@ -399,6 +436,49 @@ def score_survivors(index: BlockMaxIndex, cb_ids, cb_idf, cb_act, cb_row,
     return jax.lax.top_k(scores, k)
 
 
+def score_survivors_midgrid(index: BlockMaxIndex, cb_ids, cb_idf, cb_act,
+                            cb_row, cb_ubf, theta_rows, n_rows: int, k: int,
+                            doc_norm=None):
+    """``score_survivors`` with in-grid theta tightening (the midgrid
+    variant of the Pallas skip kernel): after each sequential grid step
+    the kernel folds the step's per-lane pessimistic partials
+    ``num / (tf + max(doc_norm))`` into a per-row running k-th-best lower
+    bound (seeded from ``theta_rows``), and later steps ZERO any block
+    whose stored full-score UB ``cb_ubf`` falls strictly below it.
+
+    Soundness: each lane of a block is a distinct doc whose true score is
+    at least its pessimistic partial, so a block's k-th largest lane
+    partial is witnessed by k distinct docs — a valid lower bound on the
+    row's final k-th score, as is ``theta_rows`` (the caller's securing
+    contract). A zeroed block therefore only held docs that can neither
+    make the top-k nor tie it (strict <), and zeroing adds +0.0 into
+    non-negative partial sums, so surfaced top-k values stay bit-
+    identical. VALID ONLY with no tombstones (a deleted doc is not a
+    legitimate witness) — the caller gates on ``live is None`` — and for
+    the fixed-stride (non-compact) layout.
+
+    Returns ``(vals, ids, n_skipped)``."""
+    if doc_norm is None:
+        doc_norm = index.doc_norm
+    theta_l = jnp.zeros((1, BLOCK), jnp.float32).at[0, :n_rows].set(
+        jnp.asarray(theta_rows, jnp.float32))
+    docids, tf, num, skip = bm25_blocks_midgrid(
+        index.packed_docs[cb_ids], index.bw_docs[cb_ids],
+        index.first_doc[cb_ids], index.packed_tf[cb_ids],
+        index.bw_tf[cb_ids], cb_idf, cb_act.astype(jnp.int32),
+        cb_row.astype(jnp.int32), jnp.asarray(cb_ubf, jnp.float32),
+        theta_l, jnp.max(doc_norm), k=k, k1=index.k1,
+        block_rows=MIDGRID_BLOCK_ROWS)
+    denom = tf + doc_norm[docids]
+    s = jnp.where(tf > 0, num / jnp.maximum(denom, 1e-9), 0.0)
+    fidx = cb_row.astype(jnp.int32)[:, None] * index.n_docs + docids
+    scores = jnp.zeros((n_rows * index.n_docs,), jnp.float32
+                       ).at[fidx.reshape(-1)].add(s.reshape(-1),
+                                                  mode="promise_in_bounds")
+    return (*jax.lax.top_k(scores.reshape(n_rows, index.n_docs), k),
+            skip.sum())
+
+
 def _pow2ceil(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
@@ -411,7 +491,7 @@ def survivor_bucket(n_surv: int) -> int:
 
 
 def compact_survivors(surv: np.ndarray, bidx: np.ndarray, idf_pb: np.ndarray,
-                      bucket: int = None):
+                      bucket: int = None, ubf: np.ndarray = None):
     """Host-side survivor compaction: gather the flattened positions of
     surviving candidate blocks — across the WHOLE batch — into one dense,
     bucket-padded flat array with per-entry query-row attribution.
@@ -421,7 +501,11 @@ def compact_survivors(surv: np.ndarray, bidx: np.ndarray, idf_pb: np.ndarray,
     entries sorted by (row, grid position), which keeps each row's
     compacted scatter contributions in the dense path's order (bit-
     identity), and sizes the bucket by the batch's total survivor count.
-    Returns ``(cb_ids, cb_idf, cb_act, cb_row)``, each shaped (bucket,)."""
+    ``ubf`` (B, N), optional, is each block's full-score upper bound (the
+    BMW bound the survival test used) — the midgrid kernel compares it
+    against its running k-th-best carry; None stores +inf (never
+    midgrid-skipped). Returns ``(cb_ids, cb_idf, cb_act, cb_row,
+    cb_ubf)``, each shaped (bucket,)."""
     B, N = surv.shape
     pos = np.flatnonzero(surv)
     if bucket is None:
@@ -431,41 +515,153 @@ def compact_survivors(surv: np.ndarray, bidx: np.ndarray, idf_pb: np.ndarray,
     cb_idf = np.zeros(bucket, np.float32)
     cb_act = np.zeros(bucket, bool)
     cb_row = np.zeros(bucket, np.int32)
+    cb_ubf = np.full(bucket, np.inf, np.float32)
     cb_ids[:pos.size] = bidx.reshape(-1)[pos]
     cb_idf[:pos.size] = idf_pb.reshape(-1)[pos]
     cb_act[:pos.size] = True
     cb_row[:pos.size] = pos // N
-    return cb_ids, cb_idf, cb_act, cb_row
+    if ubf is not None:
+        cb_ubf[:pos.size] = ubf.reshape(-1)[pos]
+    return cb_ids, cb_idf, cb_act, cb_row, cb_ubf
+
+
+def _row_searchsorted(keys: np.ndarray, queries: np.ndarray,
+                      side: str, stride: int) -> np.ndarray:
+    """Row-wise ``searchsorted``: for each row r, positions of
+    ``queries[r]`` within the sorted ``keys[r]``. One flat searchsorted
+    over row-offset values (every entry lives in [0, stride)), instead of
+    a Python loop over rows."""
+    R, MB = keys.shape
+    off = np.arange(R, dtype=np.int64) * stride
+    flat = np.searchsorted((keys + off[:, None]).reshape(-1),
+                           (queries + off[:, None]).reshape(-1), side)
+    return flat.reshape(R, -1) - np.arange(R)[:, None] * MB
+
+
+def _range_max(rows: np.ndarray, lo: np.ndarray, hi: np.ndarray
+               ) -> np.ndarray:
+    """Per-row range max: ``max(rows[r, lo[r,j]:hi[r,j]])`` (0.0 for an
+    empty range), vectorized with a sparse table — O(R*MB*log MB) build,
+    O(1) per query. The overlap-bound test runs one of these per ordered
+    term pair, so the whole BMW pass stays O(B*Q^2*MB*log MB) host work
+    on metadata only."""
+    R, MB = rows.shape
+    length = hi - lo
+    res = np.zeros(lo.shape, rows.dtype)
+    if MB == 0:
+        return res
+    tables = [rows]
+    while (1 << len(tables)) <= MB:
+        w = 1 << (len(tables) - 1)
+        prev = tables[-1]
+        tables.append(np.maximum(prev[:, :MB - 2 * w + 1],
+                                 prev[:, w:MB - w + 1]))
+    # floor(log2(length)) per query, exact for the int sizes here
+    lvl = np.frexp(np.maximum(length, 1))[1] - 1
+    for lv in range(len(tables)):
+        sel = (lvl == lv) & (length > 0)
+        if not sel.any():
+            continue
+        ri, qi = np.nonzero(sel)
+        w = 1 << lv
+        res[sel] = np.maximum(tables[lv][ri, lo[ri, qi]],
+                              tables[lv][ri, hi[ri, qi] - w])
+    return res
+
+
+def _bmw_overlap_others(ub3, f3, l3, sentinel: int):
+    """Doc-range-overlap "others" bound (true block-max WAND): for every
+    candidate block j of term t, the sum over OTHER query terms t' of the
+    max upper bound among t''s blocks whose doc-id range [first, last]
+    intersects block j's. Exact majorization: a doc d in block j that
+    also carries term t' sits in exactly one of t''s blocks, and that
+    block shares d with j — so its range overlaps j's and its UB enters
+    the sum. Strictly tighter than the term-level ``sum - term_best``
+    bound whenever any other term's best block lies outside j's range
+    (balanced disjunctions on iid corpora — the workload term-level
+    MaxScore cannot prune).
+
+    ``ub3``/``f3``/``l3`` are (B, Q, MB) host arrays; pad entries must
+    already hold ``sentinel`` in f3/l3 (sorted-row invariant; sentinel
+    ranges only ever "overlap" other sentinel ranges, whose UB is 0).
+    Returns (B, Q, MB) overlap-others, garbage on pad entries."""
+    B, Q, MB = ub3.shape
+    stride = sentinel + 2
+    overlap = np.zeros((B, Q, MB))
+    for to in range(Q):
+        # one sparse table + two flat searchsorteds per "other" term,
+        # shared across every t != to
+        keys_l = l3[:, to, :]
+        keys_f = f3[:, to, :]
+        for t in range(Q):
+            if t == to:
+                continue
+            # blocks of `to` overlapping [f, l]: first with last >= f
+            # through last with first <= l
+            lo = _row_searchsorted(keys_l, f3[:, t, :], "left", stride)
+            hi = _row_searchsorted(keys_f, l3[:, t, :], "right", stride)
+            overlap[:, t, :] += _range_max(ub3[:, to, :], lo, hi)
+    return overlap
 
 
 def pruned_eval(meta, scorer_for, q2d, idf2d, k: int, theta0=None,
-                n_phase1: int = PHASE1_BLOCKS):
+                n_phase1: int = PHASE1_BLOCKS, bmw: bool = True,
+                scorer_mid_for=None):
     """Host-orchestrated pruned evaluation over a (B, Q) query batch.
 
-    ``meta(q2d, idf2d)``       -> (ub, in_term, bidx, idf_pb), (B, Q, MB)
-                                  device arrays (``prune_candidates``,
-                                  possibly jitted/vmapped by the caller).
+    ``meta(q2d, idf2d)``       -> (ub, in_term, bidx, idf_pb, bfirst,
+                                  blast), (B, Q, MB) device arrays
+                                  (``prune_candidates``, possibly
+                                  jitted/vmapped by the caller).
     ``scorer_for(n_blocks)``   -> fn(cb_ids, cb_idf, cb_act, cb_row)
                                   evaluating a flat (n_blocks,) compacted
                                   survivor list (``score_survivors``) to
                                   (vals (B, k), ids (B, k)). The caller
                                   owns jit caching per bucket shape.
+    ``scorer_mid_for``         optional midgrid variant for the SURVIVOR
+                                  stage: fn(cb_ids, cb_idf, cb_act,
+                                  cb_row, cb_ubf, theta_rows) -> (vals,
+                                  ids, n_skipped) — the kernel folds a
+                                  running k-th-best lower bound across
+                                  grid steps and zeroes later blocks
+                                  whose stored full-score UB ``cb_ubf``
+                                  falls below it (see
+                                  ``score_survivors_midgrid``). The
+                                  phase-1 probe always uses the plain
+                                  scorer (theta is not known yet).
     ``theta0``                 (B,) or scalar: an externally-known lower
                                   bound on each query's final k-th score
                                   (the searcher passes the running global
                                   bound — cross-segment theta sharing).
+    ``bmw``                    True (default) runs the doc-range-overlap
+                                  bound + non-essential list elimination;
+                                  False keeps the term-level MaxScore
+                                  test (the bench A/B baseline).
 
     Protocol: metadata pass -> host-compact the ``n_phase1`` highest-UB
     blocks per query and score them for theta (skipped entirely when
-    every query already holds a positive external bound) -> host MaxScore
-    test at max(theta_phase1, theta0) -> host-compact the survivors
-    (power-of-two bucket over the batch TOTAL) -> compacted exact
-    scoring. Exactness: every block holding a doc whose true score beats
-    theta survives the test (the UB majorizes every doc in the block), so
-    the top-k equals dense/exhaustive evaluation.
+    every query already holds a positive external bound) -> host
+    block-max WAND test at max(theta_phase1, theta0) -> host-compact the
+    survivors (power-of-two bucket over the batch TOTAL) -> compacted
+    exact scoring.
+
+    Exactness under BMW: for a doc d with true score > theta, every block
+    of d survives — the block's own UB majorizes d's contribution from
+    that term, and for every OTHER query term d carries, d's block there
+    shares d and therefore range-overlaps, so its UB enters the overlap
+    sum: bound >= true(d) > theta. Non-essential elimination preserves
+    this: a doc scoring above theta must have at least one essential term
+    (the non-essential prefix's term-best sum is <= theta by
+    construction), its essential blocks survive the bound test, and its
+    non-essential blocks range-overlap one of them — the condition under
+    which non-essential blocks are kept. Docs at or below theta may end
+    up partially scored, but their computed score never exceeds their
+    true score, so any value the final top-k surfaces is exact (ties at
+    theta are covered by the unconditionally-kept phase-1 probes / the
+    ``theta0`` securing contract).
     Returns ``(vals, ids, PruneStats)``.
     """
-    ub_d, in_term_d, bidx_d, idf_pb_d = meta(q2d, idf2d)
+    ub_d, in_term_d, bidx_d, idf_pb_d, bf_d, bl_d = meta(q2d, idf2d)
     B = q2d.shape[0]
     ub = np.asarray(ub_d, np.float64).reshape(B, -1)
     in_term = np.asarray(in_term_d).reshape(B, -1)
@@ -503,34 +699,93 @@ def pruned_eval(meta, scorer_for, q2d, idf2d, k: int, theta0=None,
     else:
         theta = t0
 
-    # phase 2 (MaxScore test, on host metadata): a block survives iff its
-    # UB plus every other term's best-block UB can still beat theta. The
-    # phase-1 probe blocks are kept unconditionally: the impact bound can
-    # be exactly achieved (the block's best doc IS its (max_tf, min_dl)
-    # pair), so a probed doc at exactly theta must stay scored.
-    ub3 = ub.reshape(B, q2d.shape[1], -1)
+    # phase 2, on host metadata. The phase-1 probe blocks are kept
+    # unconditionally either way: the impact bound can be exactly
+    # achieved (the block's best doc IS its (max_tf, min_dl) pair), so a
+    # probed doc at exactly theta must stay scored.
+    Q = q2d.shape[1]
+    ub3 = ub.reshape(B, Q, -1)
+    MB = ub3.shape[2]
     term_best = ub3.max(axis=2)                            # (B, Q)
-    others = term_best.sum(axis=1, keepdims=True) - term_best
-    surv = in_term & ((ub3 + others[:, :, None]).reshape(B, -1)
-                      > theta[:, None])
+    n_elim = 0
+    if bmw:
+        # doc-range-overlap "others" bound. Pad entries get a sentinel
+        # extent past every real doc id: rows stay sorted (in_term is a
+        # prefix mask, pads trail) and sentinel ranges only overlap other
+        # sentinel ranges, whose UB is 0.
+        in3 = in_term.reshape(B, Q, MB)
+        sentinel = int(max(np.asarray(bl_d).max(initial=0),
+                           np.asarray(bf_d).max(initial=0)) + 1)
+        f3 = np.where(in3, np.asarray(bf_d, np.int64).reshape(B, Q, MB),
+                      sentinel)
+        l3 = np.where(in3, np.asarray(bl_d, np.int64).reshape(B, Q, MB),
+                      sentinel)
+        bound3 = ub3 + _bmw_overlap_others(ub3, f3, l3, sentinel)
+        base = in3 & (bound3 > theta[:, None, None])
+        # non-essential list elimination: sort terms by ascending best
+        # contribution; the maximal prefix whose cumulative sum cannot
+        # beat theta is non-essential. A winner (true score > theta) must
+        # carry >= 1 essential term, so non-essential terms generate no
+        # candidates of their own — their blocks are kept only when they
+        # range-overlap a SURVIVING essential block (those are the only
+        # places a winner's remaining contributions can live).
+        order = np.argsort(term_best, axis=1, kind="stable")
+        csum = np.cumsum(np.take_along_axis(term_best, order, 1), axis=1)
+        ness = np.zeros((B, Q), bool)
+        np.put_along_axis(ness, order, csum <= theta[:, None], 1)
+        has_blocks = in3.any(axis=2)
+        n_elim = int((ness & has_blocks).sum())
+        if ness.any():
+            ess_surv = (base & ~ness[:, :, None]).astype(np.float64)
+            touches = _bmw_overlap_others(ess_surv, f3, l3, sentinel) > 0
+            base = np.where(ness[:, :, None], base & touches, base)
+        surv = base.reshape(B, -1)
+        bound = bound3.reshape(B, -1)
+    else:
+        # term-level MaxScore baseline: every other term helps with its
+        # global best block, wherever that block lives in doc space
+        others = term_best.sum(axis=1, keepdims=True) - term_best
+        bound = (ub3 + others[:, :, None]).reshape(B, -1)
+        surv = in_term & (bound > theta[:, None])
     if top is not None:
         surv[np.arange(B)[:, None], top] |= p1_act
+        # probe blocks carry the unconditional-keep contract into the
+        # midgrid kernel too: their stored UB becomes +inf so the in-grid
+        # skip test can never drop them. (Their host bound can sit an ulp
+        # BELOW theta — f64 bound vs f32 scoring — which is exactly the
+        # tie case the unconditional keep exists to cover.)
+        rows_b = np.repeat(np.arange(B), top.shape[1])
+        cols_b = top.reshape(-1)
+        keepmask = p1_act.reshape(-1)
+        bound[rows_b[keepmask], cols_b[keepmask]] = np.inf
     n_surv = int(surv.sum())
-    cb_ids, cb_idf, cb_act, cb_row = compact_survivors(surv, bidx, idf_pb)
-    vals, ids = scorer_for(cb_ids.shape[0])(cb_ids, cb_idf, cb_act, cb_row)
+    cb_ids, cb_idf, cb_act, cb_row, cb_ubf = compact_survivors(
+        surv, bidx, idf_pb, ubf=bound)
+    n_skipped = 0
+    if scorer_mid_for is not None:
+        vals, ids, n_skip = scorer_mid_for(cb_ids.shape[0])(
+            cb_ids, cb_idf, cb_act, cb_row, cb_ubf,
+            theta.astype(np.float32))
+        n_skipped = int(n_skip)
+    else:
+        vals, ids = scorer_for(cb_ids.shape[0])(cb_ids, cb_idf, cb_act,
+                                                cb_row)
     # queries/batches stay zero here: this evaluates ONE segment of a
     # batch; the caller (searcher / bm25_topk) counts the batch once.
     stats = PruneStats(
         segments_visited=1,
         blocks_candidate=int(in_term.sum()),
         blocks_survived=n_surv,
-        blocks_scored=probed + cb_ids.shape[0])
+        blocks_scored=probed + cb_ids.shape[0],
+        terms_eliminated=n_elim,
+        blocks_skipped_midgrid=n_skipped)
     return vals, ids, stats
 
 
 def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
               prune: bool = True, idf_q=None, doc_norm=None,
-              max_blocks=None, live=None, theta0=None, avgdl=None):
+              max_blocks=None, live=None, theta0=None, avgdl=None,
+              bmw: bool = True, midgrid: bool = True):
     """Top-k BM25: ``(scores (k,), doc_ids (k,), stats dict)``.
 
     ``prune=True`` runs the compacted pruned path (host-orchestrated, so
@@ -546,6 +801,12 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
     exact; docs tied at exactly theta0 may be dropped — their slots are
     covered by the securing results, so a merge over segments is still
     value-exact vs the force-merged index.
+
+    ``bmw`` selects the doc-range-overlap bound + non-essential list
+    elimination (default) vs the term-level MaxScore baseline;
+    ``midgrid`` additionally runs the survivor scorer through the
+    in-grid theta-tightening kernel when its gates hold (no tombstones,
+    fixed-stride layout, k small enough for the in-kernel fold).
     """
     if not prune:
         return bm25_topk_dense(index, q_terms, k, prune=False, idf_q=idf_q,
@@ -565,8 +826,16 @@ def bm25_topk(index: BlockMaxIndex, q_terms: jnp.ndarray, k: int = 10,
         return lambda ci, cf, ca, cr: score_survivors(
             index, ci, cf, ca, cr, 1, k, doc_norm, live)
 
+    scorer_mid_for = None
+    if midgrid and live is None and not index.compact \
+            and k <= MIDGRID_MAX_K:
+        def scorer_mid_for(_n):
+            return lambda ci, cf, ca, cr, cu, th: score_survivors_midgrid(
+                index, ci, cf, ca, cr, cu, th, 1, k, doc_norm)
+
     vals, ids, stats = pruned_eval(meta, scorer_for, q_terms[None],
-                                   idf1[None], k, theta0=theta0)
+                                   idf1[None], k, theta0=theta0, bmw=bmw,
+                                   scorer_mid_for=scorer_mid_for)
     stats.queries, stats.batches = 1, 1
     return vals[0], ids[0], {
         "blocks_scored": stats.blocks_scored,

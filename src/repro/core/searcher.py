@@ -51,6 +51,7 @@ old searcher while indexing proceeds, and swap in a fresh one per refresh.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 from dataclasses import dataclass, field
@@ -59,12 +60,112 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import (BLOCK, BlockMaxIndex, PruneStats,
-                              bm25_topk_dense, prune_candidates, pruned_eval,
-                              score_survivors)
+from repro.core.query import (BLOCK, MIDGRID_MAX_K, BlockMaxIndex,
+                              PruneStats, bm25_topk_dense, prune_candidates,
+                              pruned_eval, score_survivors,
+                              score_survivors_midgrid)
 from repro.core.segments import Segment, live_posting_stats
 from repro.kernels.postings_pack import ops as pack_ops
 from repro.kernels.postings_pack import ref as pack_ref
+
+
+# --------------------------------------------------------------------------
+# shape-keyed compiled-evaluator sharing
+# --------------------------------------------------------------------------
+# jit closures used to bake each reader's index arrays into their traces,
+# so every NRT flush compiled fresh evaluators for its new segment even
+# when the shapes matched a segment already open. The process-global cache
+# below keys compiled fns on (evaluator kind + static config + array
+# shape/dtype signature) and passes the index arrays AS ARGUMENTS:
+# same-shaped SegmentReaders share one compiled evaluator, steady-state
+# churn is near-compile-free, and ``warm_searcher`` collapses to cache
+# probes. ``evaluator_cache_hits`` counts reader-level lookups that found
+# their evaluator precompiled (surfaced via ``envelope_report``).
+
+_IDX_FIELDS_DENSE = ("terms", "term_block_start", "idf", "packed_docs",
+                     "bw_docs", "packed_tf", "bw_tf", "first_doc", "max_tf",
+                     "doc_norm", "min_dl", "last_doc")
+_IDX_FIELDS_COMPACT = ("terms", "term_block_start", "idf", "bw_docs",
+                       "bw_tf", "first_doc", "max_tf", "doc_norm", "min_dl",
+                       "last_doc", "cplanes_docs", "coff_docs",
+                       "cplanes_tf", "coff_tf")
+
+# LRU-bounded: a steady-state serving fleet cycles through a handful of
+# shapes, but a long-lived process that churns through MANY distinct
+# segment shapes (the test suite, a backfill) would otherwise pin every
+# compiled executable it ever built — XLA:CPU's JIT degrades (and can
+# crash) when thousands of executables stay live, so evict cold shapes
+# and let their device code be reclaimed.
+_EVAL_CACHE_CAP = 128
+_EVAL_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_EVAL_HITS = [0]
+_EVAL_LOCK = threading.Lock()
+
+
+def _index_arrays(index: BlockMaxIndex) -> tuple:
+    """The index's device arrays in canonical argument order (layout-
+    dependent: the compact layout ships plane rows instead of the
+    fixed-stride packed buffers)."""
+    names = _IDX_FIELDS_COMPACT if index.compact else _IDX_FIELDS_DENSE
+    return tuple(getattr(index, n) for n in names)
+
+
+def _index_statics(index: BlockMaxIndex) -> tuple:
+    return (index.compact, index.n_docs, index.max_blocks_per_term,
+            index.k1, index.b)
+
+
+def _rebuild_index(arrs: tuple, compact: bool, n_docs: int, mbpt: int,
+                   k1: float, b: float) -> BlockMaxIndex:
+    """Reassemble a ``BlockMaxIndex`` view over traced array arguments
+    inside a shared evaluator's trace. ``avgdl`` stays at its dummy
+    default on purpose: every searcher-path caller passes explicit
+    collection stats (doc_norm/avgdl arguments), so the baked value is
+    never read."""
+    names = _IDX_FIELDS_COMPACT if compact else _IDX_FIELDS_DENSE
+    kw = dict(zip(names, arrs))
+    if compact:
+        kw.setdefault("packed_docs", None)
+        kw.setdefault("packed_tf", None)
+    return BlockMaxIndex(n_docs=n_docs, max_blocks_per_term=mbpt,
+                         k1=k1, b=b, **kw)
+
+
+def _shared_evaluator(kind_key: tuple, index: BlockMaxIndex, build):
+    """Fetch or compile the shared evaluator for this kind + the index's
+    shape signature. ``build(statics)`` must return a jitted fn whose
+    leading argument is the ``_index_arrays`` tuple. Returns
+    ``(fn, was_cached)``; duplicate concurrent builds are benign (one
+    copy wins the insert)."""
+    statics = _index_statics(index)
+    shapes = tuple((tuple(a.shape), str(a.dtype))
+                   for a in _index_arrays(index))
+    key = (kind_key, statics, shapes)
+    with _EVAL_LOCK:
+        fn = _EVAL_CACHE.get(key)
+        if fn is not None:
+            _EVAL_CACHE.move_to_end(key)
+            return fn, True
+    fn = build(statics)
+    with _EVAL_LOCK:
+        fn = _EVAL_CACHE.setdefault(key, fn)
+        _EVAL_CACHE.move_to_end(key)
+        while len(_EVAL_CACHE) > _EVAL_CACHE_CAP:
+            _EVAL_CACHE.popitem(last=False)
+    return fn, False
+
+
+def evaluator_cache_hits() -> int:
+    """Reader-level evaluator lookups served by the shared cache (how
+    often NRT churn avoided a compile)."""
+    with _EVAL_LOCK:
+        return _EVAL_HITS[0]
+
+
+def _count_eval_hit(cached: bool) -> None:
+    if cached:
+        with _EVAL_LOCK:
+            _EVAL_HITS[0] += 1
 
 
 # --------------------------------------------------------------------------
@@ -76,7 +177,8 @@ def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
                   term_nb: np.ndarray, df: np.ndarray,
                   k1: float, b: float, min_dl: np.ndarray,
                   dl: np.ndarray = None,
-                  compact: bool = False) -> BlockMaxIndex:
+                  compact: bool = False,
+                  last_doc: np.ndarray = None) -> BlockMaxIndex:
     """Shared tail of both builders: pack blocks + assemble the index.
 
     ``dl`` is the LOCAL-SLOT-ordered doc-length vector (defaults to the
@@ -126,6 +228,8 @@ def _finish_index(seg: Segment, deltas: np.ndarray, tfs: np.ndarray,
         max_blocks_per_term=int(np.max(term_nb)) if len(term_nb) else 1,
         k1=k1, b=b,
         min_dl=jnp.asarray(np.asarray(min_dl, np.float32)), avgdl=avgdl,
+        last_doc=jnp.asarray(np.asarray(
+            first_doc if last_doc is None else last_doc, np.int32)),
         **extra)
 
 
@@ -199,7 +303,8 @@ def build_block_index(seg: Segment, k1: float = 0.9, b: float = 0.4,
                          np.maximum.reduceat(tf_stream, blk_s), term_nb,
                          df, k1, b,
                          np.minimum.reduceat(dl_local[local_docs], blk_s),
-                         dl=dl_local, compact=compact)
+                         dl=dl_local, compact=compact,
+                         last_doc=local_docs[blk_s + sizes - 1])
 
 
 def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
@@ -210,8 +315,8 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
     same ``_local_layout`` resolution the vectorized builder uses."""
     local_docs, tf_stream, dl_local = _local_layout(seg)
     df = np.diff(seg.term_start).astype(np.int64)
-    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb, min_dl = \
-        [], [], [], [], [], []
+    blocks_deltas, blocks_tf, first_doc, max_tf, term_nb, min_dl, \
+        last_doc = [], [], [], [], [], [], []
     for ti in range(seg.n_terms):
         s, e = int(seg.term_start[ti]), int(seg.term_start[ti + 1])
         docs = local_docs[s:e]
@@ -222,6 +327,7 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
             chunk = docs[bi * BLOCK:(bi + 1) * BLOCK]
             tchunk = tfs[bi * BLOCK:(bi + 1) * BLOCK]
             min_dl.append(dl_local[chunk].min())
+            last_doc.append(chunk[-1])
             pad = BLOCK - len(chunk)
             if pad:
                 chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
@@ -233,11 +339,13 @@ def build_block_index_loop(seg: Segment, k1: float = 0.9, b: float = 0.4
     if not blocks_deltas:
         blocks_deltas = [np.zeros(BLOCK, np.int64)]
         blocks_tf = [np.zeros(BLOCK, np.int64)]
-        first_doc, max_tf, term_nb, min_dl = [0], [0], [0], [0]
+        first_doc, max_tf, term_nb, min_dl, last_doc = \
+            [0], [0], [0], [0], [0]
     return _finish_index(seg, np.stack(blocks_deltas), np.stack(blocks_tf),
                          np.asarray(first_doc), np.asarray(max_tf),
                          np.asarray(term_nb, np.int64), df, k1, b,
-                         np.asarray(min_dl), dl=dl_local)
+                         np.asarray(min_dl), dl=dl_local,
+                         last_doc=np.asarray(last_doc))
 
 
 # --------------------------------------------------------------------------
@@ -392,39 +500,43 @@ class SegmentReader:
         (scores, abs doc ids)`` — the baseline every pruned result is
         asserted against, and the serving path when ``prune=False``.
 
-        idf/doc_norm arrive as arguments (not baked into the trace) so a
-        refresh that only changes global stats reuses the compiled fn; the
-        masked variant additionally takes the (D,) live mask as an
-        argument, so successive delete generations of the same core reuse
-        one compiled evaluator (see ``reopen``). The dense path computes
-        every candidate lane, so the single exhaustive pass is strictly
-        cheaper than the masked two-phase one (identical results); actual
-        block skipping lives in the compacted pruned path
-        (``topk_pruned``)."""
+        EVERYTHING arrives as arguments (not baked into the trace): the
+        index arrays, the doc map, idf/doc_norm, and (masked variant) the
+        (D,) live mask — so a refresh that only changes stats or bitmaps
+        reuses the compiled fn, and readers over same-SHAPED segments
+        share one compiled evaluator through the process-global cache
+        (see ``_shared_evaluator``). The dense path computes every
+        candidate lane; actual block skipping lives in the compacted
+        pruned path (``topk_pruned``)."""
         masked = self.live is not None
         key = (k, max_blocks, batched, masked)
         if key not in self._fns:
-            index, doc_map = self.index, self.doc_map
-
-            if masked:
-                def single(q, idf_q, doc_norm, live):
+            def build(statics):
+                def single(arrs, doc_map, q, idf_q, doc_norm, live):
+                    index = _rebuild_index(arrs, *statics)
                     vals, ids, _ = bm25_topk_dense(
                         index, q, k, prune=False, idf_q=idf_q,
                         doc_norm=doc_norm, max_blocks=max_blocks, live=live)
                     return vals, doc_map[ids]
 
-                fn = jax.vmap(single, in_axes=(0, 0, None, None)) \
-                    if batched else single
-            else:
-                def single(q, idf_q, doc_norm):
-                    vals, ids, _ = bm25_topk_dense(
-                        index, q, k, prune=False, idf_q=idf_q,
-                        doc_norm=doc_norm, max_blocks=max_blocks)
-                    return vals, doc_map[ids]
+                if masked:
+                    fn = jax.vmap(single,
+                                  in_axes=(None, None, 0, 0, None, None)) \
+                        if batched else single
+                else:
+                    def nolive(arrs, doc_map, q, idf_q, doc_norm):
+                        return single(arrs, doc_map, q, idf_q, doc_norm,
+                                      None)
+                    fn = jax.vmap(nolive,
+                                  in_axes=(None, None, 0, 0, None)) \
+                        if batched else nolive
+                return jax.jit(fn)
 
-                fn = jax.vmap(single, in_axes=(0, 0, None)) \
-                    if batched else single
-            self._fns[key] = jax.jit(fn)
+            fn, cached = _shared_evaluator(
+                ("dense", k, max_blocks, batched, masked), self.index,
+                build)
+            _count_eval_hit(cached)
+            self._fns[key] = fn
         return self._fns[key]
 
     def topk(self, q, idf_q, doc_norm, k: int, max_blocks: int,
@@ -432,65 +544,117 @@ class SegmentReader:
         """Dense-exhaustive top-k on this segment, masking tombstones when
         the segment has any (the searcher's ``prune=False`` entry point)."""
         fn = self.topk_fn(k, max_blocks, batched)
+        arrs = _index_arrays(self.index)
         if self.live is not None:
-            return fn(q, idf_q, doc_norm, self.live)
-        return fn(q, idf_q, doc_norm)
+            return fn(arrs, self.doc_map, q, idf_q, doc_norm, self.live)
+        return fn(arrs, self.doc_map, q, idf_q, doc_norm)
 
-    def _pruned_fns(self, k: int, max_blocks: int, n_rows: int):
+    def _pruned_fns(self, k: int, max_blocks: int, n_rows: int,
+                    midgrid: bool = False):
         """Cached jitted device stages of the compacted pruned path: the
-        vmapped metadata pass and the batch-flat compacted scorer. The
-        scorer is one compiled function per (k, batch rows, masked) —
-        jax's shape cache handles the (log2-bounded, bucket-padded)
-        survivor shapes."""
+        vmapped metadata pass, the batch-flat compacted scorer, and (when
+        ``midgrid``) the theta-tightening scorer variant. Each is one
+        compiled function per (kind, statics, shape signature) in the
+        process-global cache — jax's shape cache handles the
+        (log2-bounded, bucket-padded) survivor shapes."""
         mkey = ("meta", max_blocks)
         if mkey not in self._fns:
-            index = self.index
-            self._fns[mkey] = jax.jit(jax.vmap(
-                lambda q, f, a: prune_candidates(index, q, f, max_blocks, a),
-                in_axes=(0, 0, None)))
+            def build(statics):
+                def meta(arrs, q2d, idf2d, avgdl):
+                    index = _rebuild_index(arrs, *statics)
+                    return jax.vmap(
+                        lambda q, f: prune_candidates(index, q, f,
+                                                      max_blocks, avgdl)
+                    )(q2d, idf2d)
+                return jax.jit(meta)
+
+            fn, cached = _shared_evaluator(mkey, self.index, build)
+            _count_eval_hit(cached)
+            self._fns[mkey] = fn
         masked = self.live is not None
         skey = ("scorer", k, n_rows, masked)
         if skey not in self._fns:
-            index, doc_map = self.index, self.doc_map
-
-            if masked:
-                def score(ci, cf, ca, cr, doc_norm, live):
+            def build(statics):
+                def score(arrs, doc_map, ci, cf, ca, cr, doc_norm, live):
+                    index = _rebuild_index(arrs, *statics)
                     vals, ids = score_survivors(index, ci, cf, ca, cr,
                                                 n_rows, k, doc_norm, live)
                     return vals, doc_map[ids]
-            else:
-                def score(ci, cf, ca, cr, doc_norm):
-                    vals, ids = score_survivors(index, ci, cf, ca, cr,
-                                                n_rows, k, doc_norm)
-                    return vals, doc_map[ids]
-            self._fns[skey] = jax.jit(score)
-        return self._fns[mkey], self._fns[skey]
+
+                if masked:
+                    return jax.jit(score)
+
+                def nolive(arrs, doc_map, ci, cf, ca, cr, doc_norm):
+                    return score(arrs, doc_map, ci, cf, ca, cr, doc_norm,
+                                 None)
+                return jax.jit(nolive)
+
+            fn, cached = _shared_evaluator(("scorer", k, n_rows, masked),
+                                           self.index, build)
+            _count_eval_hit(cached)
+            self._fns[skey] = fn
+        mid = None
+        if midgrid:
+            dkey = ("midscorer", k, n_rows)
+            if dkey not in self._fns:
+                def build(statics):
+                    def score(arrs, doc_map, ci, cf, ca, cr, cu, th,
+                              doc_norm):
+                        index = _rebuild_index(arrs, *statics)
+                        vals, ids, nskip = score_survivors_midgrid(
+                            index, ci, cf, ca, cr, cu, th, n_rows, k,
+                            doc_norm)
+                        return vals, doc_map[ids], nskip
+                    return jax.jit(score)
+
+                fn, cached = _shared_evaluator(dkey, self.index, build)
+                _count_eval_hit(cached)
+                self._fns[dkey] = fn
+            mid = self._fns[dkey]
+        return self._fns[mkey], self._fns[skey], mid
 
     def topk_pruned(self, q2d, idf2d, doc_norm, k: int, max_blocks: int,
-                    theta0=None, avgdl=None):
+                    theta0=None, avgdl=None, bmw: bool = True,
+                    midgrid: bool = True):
         """Compacted pruned top-k over a (B, Q) batch: metadata pass ->
-        host MaxScore test at max(phase-1 theta, ``theta0``) -> compacted
-        survivor scoring. ``avgdl`` must be the mean doc length the
+        host BMW overlap-bound test (``bmw=False``: term-level MaxScore)
+        at max(phase-1 theta, ``theta0``) -> compacted survivor scoring,
+        through the midgrid theta-tightening kernel when its gates hold
+        (``midgrid`` requested, no tombstones, fixed-stride layout, k
+        within the in-kernel fold's budget, batch rows within the
+        carry's 128 lanes). ``avgdl`` must be the mean doc length the
         passed ``doc_norm`` was built from (the searcher passes its
         collection-global snapshot value) — it tightens the impact
         bounds; None keeps the stats-independent safe floor. Returns
         ``(vals (B, k), abs doc ids (B, k), PruneStats)`` — exactly the
         dense path's results, at survivor-proportional cost."""
-        meta_j, scorer = self._pruned_fns(k, max_blocks, int(q2d.shape[0]))
+        n_rows = int(q2d.shape[0])
+        use_mid = (midgrid and self.live is None and not self.index.compact
+                   and k <= MIDGRID_MAX_K and n_rows <= BLOCK)
+        meta_j, scorer, mid = self._pruned_fns(k, max_blocks, n_rows,
+                                               use_mid)
+        arrs = _index_arrays(self.index)
+        doc_map = self.doc_map
         a = None if avgdl is None else jnp.float32(avgdl)
-        meta = lambda q2, f2: meta_j(q2, f2, a)
+        meta = lambda q2, f2: meta_j(arrs, q2, f2, a)
         live = self.live
         if live is not None:
             def scorer_for(_n):
-                return lambda ci, cf, ca, cr: scorer(ci, cf, ca, cr,
-                                                     doc_norm, live)
+                return lambda ci, cf, ca, cr: scorer(
+                    arrs, doc_map, ci, cf, ca, cr, doc_norm, live)
         else:
             def scorer_for(_n):
-                return lambda ci, cf, ca, cr: scorer(ci, cf, ca, cr,
-                                                     doc_norm)
+                return lambda ci, cf, ca, cr: scorer(
+                    arrs, doc_map, ci, cf, ca, cr, doc_norm)
+        scorer_mid_for = None
+        if use_mid:
+            def scorer_mid_for(_n):
+                return lambda ci, cf, ca, cr, cu, th: mid(
+                    arrs, doc_map, ci, cf, ca, cr, cu, th, doc_norm)
         return pruned_eval(meta, scorer_for,
                            jnp.asarray(q2d, jnp.int32), jnp.asarray(idf2d),
-                           k, theta0=theta0)
+                           k, theta0=theta0, bmw=bmw,
+                           scorer_mid_for=scorer_mid_for)
 
 
 @dataclass
@@ -519,6 +683,8 @@ class IndexSearcher:
     k1: float = 0.9
     b: float = 0.4
     prune: bool = True
+    bmw: bool = True       # doc-range-overlap (BMW) bound; False: MaxScore
+    midgrid: bool = True   # in-grid theta tightening where its gates hold
     n_docs: int = 0                # LIVE docs in the snapshot
     avgdl: float = 1.0
     # degraded serving (fault-tolerance layer): True when the snapshot
@@ -597,7 +763,8 @@ class IndexSearcher:
         wraps each shard's searcher with the union stats so per-shard
         evaluation matches the union-index oracle score-for-score."""
         return IndexSearcher(readers=self.readers, k1=self.k1, b=self.b,
-                             prune=self.prune, degraded=self.degraded,
+                             prune=self.prune, bmw=self.bmw,
+                             midgrid=self.midgrid, degraded=self.degraded,
                              missing_docs=self.missing_docs,
                              quarantined=self.quarantined,
                              collection_stats=stats)
@@ -678,7 +845,8 @@ class IndexSearcher:
                 continue  # nothing inside can beat the running top-k
             mb = r.query_max_blocks(q2d)
             v, i, st = r.topk_pruned(q2d, idf, dn, k_eff, mb, theta0=theta0,
-                                     avgdl=self.avgdl)
+                                     avgdl=self.avgdl, bmw=self.bmw,
+                                     midgrid=self.midgrid)
             stats.add(st)
             v_np = np.asarray(v)
             parts_v.append(v_np)
@@ -802,6 +970,8 @@ class ReaderCache:
     k1: float = 0.9
     b: float = 0.4
     prune: bool = True   # searchers serve the compacted pruned path
+    bmw: bool = True     # BMW doc-range-overlap bounds (False: MaxScore)
+    midgrid: bool = True  # in-grid theta tightening where gates hold
     compact: bool = False  # fused decompress-and-score index layout
     builds: int = 0
     hits: int = 0
@@ -877,7 +1047,8 @@ class ReaderCache:
                 self._generation = next(_GENERATIONS)
             generation = self._generation
         return IndexSearcher(readers=readers, k1=self.k1, b=self.b,
-                             prune=self.prune,
+                             prune=self.prune, bmw=self.bmw,
+                             midgrid=self.midgrid,
                              degraded=bool(quarantined),
                              missing_docs=missing,
                              quarantined=quarantined,

@@ -112,6 +112,61 @@ def _bm25_kernel_partials(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref,
                                 part.max(axis=0, keepdims=True))
 
 
+def _bm25_kernel_midgrid(pd_ref, bwd_ref, first_ref, pt_ref, bwt_ref,
+                         idf_ref, act_ref, row_ref, ubf_ref, theta_ref,
+                         nmax_ref, doc_ref, tf_ref, num_ref, skip_ref,
+                         el_ref, *, k1, k):
+    """Midgrid theta tightening: the running carry is no longer a
+    diagnostic — it GATES work. ``el_ref`` (1, 128) holds a per-ROW
+    running lower bound on the row's final k-th score (lane j = row j,
+    seeded from the caller's theta); at each sequential grid step an
+    active block whose stored full-score UB falls strictly below its
+    row's bound is skipped (outputs zeroed, flag raised), then the KEPT
+    blocks' k-th largest pessimistic lane partial num / (tf + norm_max)
+    is folded back into the carry by row. Within one step, decisions see
+    only earlier steps' updates. ``ref.py::bm25_blocks_midgrid_ref`` is
+    the bit-exact oracle."""
+    R = pd_ref.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        el_ref[...] = theta_ref[...]
+
+    rows = row_ref[...]
+    eq = rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (R, BLOCK), 1)
+    el = el_ref[...]                                       # (1, 128)
+    l_row = jnp.sum(jnp.where(eq, el, 0.0), axis=1)        # (R,)
+    act = act_ref[...] > 0
+    skip = act & (ubf_ref[...] < l_row)
+    keep = act & ~skip
+    deltas = _unpack_bits(pd_ref[...], bwd_ref[...], R).astype(jnp.int32)
+    acc = deltas
+    shift = 1
+    while shift < BLOCK:
+        shifted = jnp.pad(acc, ((0, 0), (shift, 0)))[:, :BLOCK]
+        acc = acc + shifted
+        shift *= 2
+    docids = first_ref[...][:, None] + acc
+    tf = _unpack_bits(pt_ref[...], bwt_ref[...], R).astype(jnp.float32)
+    num = idf_ref[...][:, None] * (k1 + 1.0) * tf
+    keep2 = keep[:, None]
+    doc_ref[...] = jnp.where(keep2, docids, 0)
+    tf_ref[...] = jnp.where(keep2, tf, 0.0)
+    num_ref[...] = jnp.where(keep2, num, 0.0)
+    skip_ref[...] = skip.astype(jnp.int32)
+    # fold the kept blocks' k-th-best witnesses into the carry: per block
+    # k-1 rounds of (max, retire ties), floored at 0 — every positive
+    # lane is a distinct doc, so the result is witnessed by k docs
+    part = jnp.where(keep2 & (tf > 0), num / (tf + nmax_ref[0, 0]), 0.0)
+    cur = part
+    for _ in range(max(k - 1, 0)):
+        m = cur.max(axis=1, keepdims=True)
+        cur = jnp.where(cur == m, -1.0, cur)
+    kth = jnp.maximum(cur.max(axis=1), 0.0)
+    el_ref[...] = jnp.maximum(el, jnp.where(eq, kth[:, None], 0.0
+                                            ).max(axis=0, keepdims=True))
+
+
 def _expand_rows(cpl_ref, off, R):
     """In-kernel expansion of compacted bit-plane rows: R dynamic
     (32, 4)-row window loads from the resident rows array. Garbage
@@ -232,3 +287,50 @@ def bm25_blocks_pallas(packed_docs, bw_docs, first_doc, packed_tf, bw_tf,
       first_doc.astype(jnp.int32), packed_tf.astype(jnp.uint32),
       bw_tf.astype(jnp.int32), idf.astype(jnp.float32),
       active.astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k1", "k", "block_rows", "interpret"))
+def bm25_blocks_midgrid_pallas(packed_docs, bw_docs, first_doc, packed_tf,
+                               bw_tf, idf, active, rows, ubf, theta_lanes,
+                               norm_max, *, k1: float = 0.9, k: int = 10,
+                               block_rows: int = 8,
+                               interpret: bool = True):
+    """-> (docids, tf, num, skip): the plain kernel's outputs with
+    midgrid-skipped blocks zeroed, plus the per-block (S,) skip flags.
+    ``rows`` attributes each compacted block to its query row, ``ubf``
+    is the block's stored full-score upper bound, ``theta_lanes``
+    (1, 128) seeds the per-row carry (lane j = row j), ``norm_max`` is a
+    scalar — the max doc norm, making num / (tf + norm_max) a pessimistic
+    realized partial for every lane. Defaults to a SHORT grid step so the
+    carry feeds back within typical survivor buckets."""
+    nb = packed_docs.shape[0]
+    block_rows = min(block_rows, nb)
+    assert nb % block_rows == 0, (nb, block_rows)
+    grid = (nb // block_rows,)
+    vec = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
+    packed = lambda: pl.BlockSpec((block_rows, 32, 4), lambda i: (i, 0, 0))
+    lanes = lambda: pl.BlockSpec((block_rows, BLOCK), lambda i: (i, 0))
+    carry = lambda: pl.BlockSpec((1, BLOCK), lambda i: (0, 0))
+    scalar = lambda: pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_bm25_kernel_midgrid, k1=k1, k=k),
+        grid=grid,
+        in_specs=[packed(), vec(), vec(), packed(), vec(), vec(), vec(),
+                  vec(), vec(), carry(), scalar()],
+        out_specs=[lanes(), lanes(), lanes(), vec(), carry()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+            jax.ShapeDtypeStruct((1, BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(packed_docs.astype(jnp.uint32), bw_docs.astype(jnp.int32),
+      first_doc.astype(jnp.int32), packed_tf.astype(jnp.uint32),
+      bw_tf.astype(jnp.int32), idf.astype(jnp.float32),
+      active.astype(jnp.int32), rows.astype(jnp.int32),
+      ubf.astype(jnp.float32), theta_lanes.astype(jnp.float32),
+      jnp.asarray(norm_max, jnp.float32).reshape(1, 1))
+    return out[:4]

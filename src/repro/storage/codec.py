@@ -315,6 +315,12 @@ def _dec_adaptive(buf: bytes, off: int) -> tuple[np.ndarray, int]:
 
 
 def _dec_pef(buf: bytes, off: int) -> tuple[np.ndarray, int]:
+    """Vectorized across chunks: every chunk's bit length is determined by
+    (m, universe), so one unpackbits covers the whole stream and the unary
+    high parts of ALL chunks decode through a single ragged gather +
+    flatnonzero (the repeat/arange CSR trick). Low parts batch by distinct
+    bit width (typically one or two widths per stream). Bit-identical to
+    the per-chunk decode it replaced and to ``decode_stream_naive``."""
     (n,) = struct.unpack_from("<Q", buf, off + 1)
     off += 9
     if not n:
@@ -327,33 +333,61 @@ def _dec_pef(buf: bytes, off: int) -> tuple[np.ndarray, int]:
     if (universes < 0).any():
         raise CorruptSegment("pef universe overflows int64")
     off = end
-    cum = np.zeros(n, np.int64)
-    base = 0
-    for c in range(nc):
-        m = min(n, (c + 1) * _PEF_CHUNK) - c * _PEF_CHUNK
-        u = int(universes[c])
-        l, high_len = _ef_params(m, u)
-        nbits = m * l + high_len
-        end = off + -(-nbits // 8)
-        if end > len(buf):
-            raise CorruptSegment("pef stream truncated")
-        bits = np.unpackbits(np.frombuffer(buf[off:end], np.uint8),
-                             bitorder="little")[:nbits]
-        pos = np.flatnonzero(bits[m * l:])
-        if pos.size != m:
-            raise CorruptSegment("pef high bits hold a wrong value count")
-        h = (pos - np.arange(m)).astype(np.int64)
-        if l:
-            low = bits[:m * l].reshape(m, l).astype(np.int64)
-            rel = (h << l) | (low << np.arange(l)).sum(axis=1)
-        else:
-            rel = h
-        if (np.diff(rel) < 0).any() or int(rel[-1]) != u:
-            raise CorruptSegment("pef chunk is not monotone to its universe")
-        cum[c * _PEF_CHUNK:c * _PEF_CHUNK + m] = base + rel
-        base += u
-        off = end
-    return np.diff(cum, prepend=np.int64(0)), off
+    m = np.full(nc, _PEF_CHUNK, np.int64)
+    m[-1] = n - (nc - 1) * _PEF_CHUNK
+    # vectorized _ef_params: l = max(0, floor_log2(u // m)). frexp's
+    # exponent is exact floor_log2 below 2^52; larger quotients (universe
+    # near the int64 headroom) take the scalar exact path.
+    q = universes // m
+    l = np.zeros(nc, np.int64)
+    small = (q > 0) & (q < (1 << 52))
+    l[small] = np.frexp(q[small].astype(np.float64))[1] - 1
+    big = q >= (1 << 52)
+    if big.any():
+        l[big] = [int(v).bit_length() - 1 for v in q[big]]
+    high_len = m + (universes >> l)
+    nbits = m * l + high_len
+    nbytes = -(-nbits // 8)
+    byte0 = off + np.concatenate([[0], np.cumsum(nbytes)[:-1]])
+    end = int(byte0[-1] + nbytes[-1])
+    if end > len(buf):
+        raise CorruptSegment("pef stream truncated")
+    allbits = np.unpackbits(np.frombuffer(buf[off:end], np.uint8),
+                            bitorder="little")
+    bit0 = (byte0 - off) * 8              # chunk start bit in allbits
+    # unary high parts, all chunks at once: gather the concatenated high
+    # regions, flatnonzero, then count per chunk via the region boundaries
+    h_off = np.concatenate([[0], np.cumsum(high_len)[:-1]])
+    idx_h = (np.repeat(bit0 + m * l - h_off, high_len)
+             + np.arange(int(high_len.sum())))
+    ones = np.flatnonzero(allbits[idx_h])
+    cnt = np.diff(np.searchsorted(ones, np.cumsum(high_len)), prepend=0)
+    if (cnt != m).any():
+        raise CorruptSegment("pef high bits hold a wrong value count")
+    mcum = np.concatenate([[0], np.cumsum(m)[:-1]])
+    i_local = np.arange(n) - np.repeat(mcum, m)      # rank within chunk
+    h = (ones - np.repeat(h_off, m)) - i_local       # unary-decoded highs
+    rel = h << np.repeat(l, m)
+    # low parts, batched by distinct bit width: chunks sharing l decode as
+    # one (values, l) bit matrix dotted with the LSB-first weight vector
+    for lv in np.unique(l[l > 0]):
+        sel = np.flatnonzero(l == lv)
+        vsel = (np.repeat(mcum[sel] - np.concatenate(
+            [[0], np.cumsum(m[sel])[:-1]]), m[sel])
+            + np.arange(int(m[sel].sum())))          # global value ids
+        base_bits = np.repeat(bit0[sel], m[sel]) \
+            + i_local[vsel] * lv                     # each value's bit 0
+        mat = allbits[base_bits[:, None]
+                      + np.arange(lv)[None, :]].astype(np.int64)
+        rel[vsel] |= mat @ (np.int64(1) << np.arange(lv))
+    # per-chunk monotone-to-universe validation (chunk-crossing diffs are
+    # exempt: each chunk rebases to its own universe)
+    d = np.diff(rel)
+    d[mcum[1:] - 1] = 0
+    if (d < 0).any() or (rel[mcum + m - 1] != universes).any():
+        raise CorruptSegment("pef chunk is not monotone to its universe")
+    base = np.repeat(np.concatenate([[0], np.cumsum(universes)[:-1]]), m)
+    return np.diff(base + rel, prepend=np.int64(0)), end
 
 
 def _dec_stream(buf: bytes, off: int) -> tuple[np.ndarray, int]:

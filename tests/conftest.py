@@ -24,6 +24,21 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_xla_jit_state():
+    """Drop compiled-function caches after each test module.
+
+    XLA:CPU keeps every compiled executable's JIT code live for the
+    process lifetime; across the full suite (hundreds of tests, each
+    compiling fresh shapes) that state grows until a later compile
+    segfaults inside LLVM. Per-module clearing keeps the live set
+    bounded at what one module needs — recompiles across module
+    boundaries are the (measured, small) price."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
 def _install_hypothesis_stub():
     class _Strategy:
         def __init__(self, draw):

@@ -147,6 +147,51 @@ def test_bm25_compact_matches_plain_ref(nb):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize("nb", [8, 16, 32, 64, 128, 256])
+def test_bm25_midgrid_kernel_matches_ref_every_bucket(nb):
+    """Mid-grid theta tightening, Pallas (interpret) vs the fori_loop
+    oracle at every pow2 survivor bucket the compacted path emits:
+    (docids, tf, num, skip) must agree bit for bit, skipped blocks must
+    be zeroed in all three outputs, and blocks at/above the carry are
+    untouched relative to the plain kernel."""
+    from repro.kernels.bm25_blockmax.kernel import bm25_blocks_midgrid_pallas
+    from repro.kernels.bm25_blockmax.ref import bm25_blocks_midgrid_ref
+    rng = np.random.default_rng(nb + 9)
+    deltas = rng.integers(0, 50, (nb, 128)).astype(np.uint32)
+    deltas[:, 0] = 0
+    tf = rng.integers(0, 30, (nb, 128)).astype(np.uint32)
+    pd, bwd = pref.pack_ref(jnp.asarray(deltas))
+    pt, bwt = pref.pack_ref(jnp.asarray(tf))
+    first = jnp.asarray(rng.integers(0, 5000, nb).astype(np.int32))
+    idf = jnp.asarray((rng.random(nb) * 4).astype(np.float32))
+    act = jnp.asarray((rng.random(nb) < 0.85).astype(np.int32))
+    # a 4-query batch sharing the row space; stored UBs span the range the
+    # running carry reaches, so real skips occur mid-grid
+    rows = jnp.asarray(rng.integers(0, 4, nb).astype(np.int32))
+    ubf = jnp.asarray((rng.random(nb) * 8).astype(np.float32))
+    theta = jnp.zeros((1, 128), jnp.float32).at[0, :4].set(
+        jnp.asarray(rng.random(4).astype(np.float32)))
+    nmax = jnp.float32(0.9 * (1.0 - 0.4 + 0.4 * 2.0))
+    args = (pd, bwd, first, pt, bwt, idf, act, rows, ubf, theta, nmax)
+    skipped_any = False
+    for br, k in ((4, 3), (8, 10)):
+        want = bm25_blocks_midgrid_ref(*args, k=k, block_rows=br)
+        got = bm25_blocks_midgrid_pallas(*args, k=k, block_rows=br,
+                                         interpret=True)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        skip = np.asarray(want[3]) > 0
+        skipped_any |= bool(skip.any())
+        for out in want[:3]:
+            assert (np.asarray(out)[skip] == 0).all()
+        keep = (np.asarray(act) > 0) & ~skip
+        plain = bm25_blocks_ref(pd, bwd, first, pt, bwt, idf, act)
+        for w, p in zip(want[:3], plain):
+            np.testing.assert_array_equal(np.asarray(w)[keep],
+                                          np.asarray(p)[keep])
+    assert nb < 32 or skipped_any, "carry never engaged on a large bucket"
+
+
 @pytest.mark.parametrize("nb", [4, 32])
 def test_bm25_kernel_matches_ref(nb):
     rng = np.random.default_rng(nb)

@@ -14,8 +14,10 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.registry import get_arch
 from repro.core.indexer import DistributedIndexer
 from repro.core.merge import merge_segments
-from repro.core.query import PruneStats, bm25_exhaustive
-from repro.core.searcher import IndexSearcher, ReaderCache, build_block_index
+from repro.core.query import PruneStats, bm25_exhaustive, bm25_topk
+from repro.core.searcher import (IndexSearcher, ReaderCache,
+                                 build_block_index, evaluator_cache_hits)
+from repro.core.segments import Segment
 from repro.data.corpus import TINY, SyntheticCorpus
 from test_merge import make_segment, tombstoned_seg_set
 
@@ -139,6 +141,114 @@ def test_reordered_and_compact_serving_bit_identical(seed):
             == sorted(zip(vx.tolist(), ix.tolist()))
 
 
+def _disjoint_range_segment(seed, n_big=4, n_small=2, span=2000):
+    """Synthetic segment where each term's postings cover a PRIVATE doc
+    range (term t lives in [t*span, (t+1)*span)): the BMW range-overlap
+    bound sees zero cross-term help while term-level MaxScore must assume
+    full help everywhere. The last ``n_small`` terms get < 128 postings
+    (single-block terms)."""
+    rng = np.random.default_rng(seed)
+    n_terms = n_big + n_small
+    N = n_terms * span
+    doc_len = rng.integers(5, 30, N).astype(np.int64)
+    docs, tf, term_start = [], [], [0]
+    for t in range(n_terms):
+        m = int(rng.integers(20, 100)) if t >= n_big else span // 2
+        ds = t * span + np.sort(rng.choice(span, size=m, replace=False))
+        docs.extend(ds.tolist())
+        tf.extend(rng.integers(1, 8, m).tolist())
+        term_start.append(len(docs))
+    tf = np.asarray(tf, np.int64)
+    pos_start = np.concatenate([[0], np.cumsum(tf)])
+    positions = np.concatenate([np.arange(c) for c in tf])
+    return Segment(terms=np.arange(n_terms, dtype=np.int64),
+                   term_start=np.asarray(term_start, np.int64),
+                   docs=np.asarray(docs, np.int64), tf=tf,
+                   positions=positions, pos_start=pos_start,
+                   doc_ids=np.arange(N, dtype=np.int64), doc_len=doc_len)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bmw_balanced_disjunction_exact_and_strictly_cheaper(seed):
+    """Balanced disjunctions over disjoint per-term doc ranges: BMW must
+    stay bit-identical to exhaustive (values AND ids) while scoring
+    strictly fewer blocks than term-level MaxScore — the tentpole's
+    measurable claim. Single-block terms ride along in every query."""
+    seg = _disjoint_range_segment(seed)
+    bmw_s = ReaderCache().refresh([seg])
+    ms_s = ReaderCache(bmw=False, midgrid=False).refresh([seg])
+    midx = build_block_index(merge_segments([seg]))
+    rng = np.random.default_rng(seed + 7)
+    big = rng.choice(4, size=3, replace=False)
+    q = np.concatenate([big, [4 + rng.integers(0, 2)]]).astype(np.int32)
+    k = 10
+    v_e, i_e = bm25_exhaustive(midx, jnp.asarray(q), k)[:2]
+    v_b, i_b = bmw_s.search(q, k)
+    v_m, i_m = ms_s.search(q, k)
+    assert np.array_equal(np.asarray(v_b), np.asarray(v_e))
+    assert np.array_equal(np.asarray(i_b), np.asarray(i_e))
+    assert np.array_equal(np.asarray(v_m), np.asarray(v_e))
+    assert np.array_equal(np.asarray(i_m), np.asarray(i_e))
+    assert bmw_s.prune_stats.blocks_scored \
+        < ms_s.prune_stats.blocks_scored, \
+        (bmw_s.prune_stats, ms_s.prune_stats)
+    assert bmw_s.prune_stats.terms_eliminated > 0
+    assert ms_s.prune_stats.terms_eliminated == 0
+
+
+def test_bmw_all_nonessential_query_returns_nothing_safely():
+    """An external ``theta0`` no term combination can reach makes EVERY
+    term non-essential: candidate generation collapses, nothing is
+    scored above theta0, and the securing contract means returning no
+    positive scores is exact."""
+    seg = _disjoint_range_segment(3)
+    midx = build_block_index(merge_segments([seg]))
+    q = jnp.asarray(np.array([0, 1, 2, 3], np.int32))
+    v, i, stt = bm25_topk(midx, q, 10, theta0=1e9)
+    assert (np.asarray(v) == 0).all()
+    ps = stt["prune_stats"]
+    assert ps.terms_eliminated == 4
+    assert stt["blocks_survived"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bmw_theta0_with_tombstones_keeps_strictly_above(seed):
+    """Cross-shard securing contract under BMW + tombstones: with an
+    externally-seeded theta0, every result STRICTLY above it must match
+    the exact ranking over the same snapshot, bit for bit."""
+    segs = tombstoned_seg_set(seed, 3)
+    if sum(s.live_doc_count for s in segs) == 0:
+        return
+    pruned, dense, midx = _searchers(segs)
+    if int(midx.terms.shape[0]) == 0:
+        return
+    rng = np.random.default_rng(seed + 5)
+    q = _query_vocab(segs, rng)
+    k = int(min(6, sum(s.live_doc_count for s in segs)))
+    v_e, i_e = dense.search(q, k)
+    v_e, i_e = np.asarray(v_e), np.asarray(i_e)
+    theta0 = float(v_e[k // 2])
+    v_t, i_t = pruned.search_batched(np.asarray(q)[None], k, theta0=theta0)
+    above = v_e > theta0
+    assert np.array_equal(np.asarray(v_t)[0][above], v_e[above])
+    assert np.array_equal(np.asarray(i_t)[0][above], i_e[above])
+
+
+def test_evaluator_cache_shared_across_same_shaped_readers():
+    """Satellite: compiled evaluators are keyed on shapes + statics, not
+    reader identity — a fresh reader over the same-shaped segment reuses
+    the already-compiled fns and the hit counter (surfaced through
+    ``envelope_report``) moves."""
+    seg = make_segment(np.random.default_rng(77), 0, n_docs=8)
+    q = _query_vocab([seg], np.random.default_rng(1))
+    ReaderCache().refresh([seg]).search(q, 5)
+    before = evaluator_cache_hits()
+    ReaderCache().refresh([seg]).search(q, 5)   # fresh readers, same shapes
+    assert evaluator_cache_hits() > before
+
+
 def test_cross_segment_skip_preserves_results():
     """A segment whose best possible score cannot beat the shared theta
     is skipped without being evaluated — and results stay exact. Build
@@ -196,7 +306,8 @@ def test_query_scheduler_prune_stats_survive_swap():
     # envelope_report surfaces the searcher-level counters
     rep = ix.envelope_report()
     for key in ("blocks_candidate", "blocks_survived", "blocks_scored",
-                "segments_skipped", "prune_skip_rate"):
+                "segments_skipped", "prune_skip_rate", "terms_eliminated",
+                "blocks_skipped_midgrid", "evaluator_cache_hits"):
         assert key in rep
     ix.close()
 
